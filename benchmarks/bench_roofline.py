@@ -1,0 +1,43 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads benchmarks/results/dryrun_*.json (produced by repro.launch.dryrun)
+and emits one CSV row per (mesh, arch, shape) cell with the three terms,
+the dominant bottleneck and the roofline fraction.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List
+
+from benchmarks.common import csv_row
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def run_all() -> List[str]:
+    rows = []
+    if not RESULTS.exists():
+        return [csv_row("roofline_missing", 0.0,
+                        "run repro.launch.dryrun first")]
+    for p in sorted(RESULTS.glob("dryrun_*.json")):
+        r = json.loads(p.read_text())
+        name = f"roofline_{r['mesh']}_{r['arch']}_{r['shape']}"
+        if r["status"] == "skipped":
+            rows.append(csv_row(name, 0.0, "skipped=" +
+                                r["reason"].replace(",", ";")))
+            continue
+        if r["status"] != "ok":
+            rows.append(csv_row(name, 0.0, "error"))
+            continue
+        rl = r["roofline"]
+        bound_us = max(rl["t_compute"], rl["t_memory"],
+                       rl["t_collective"]) * 1e6
+        rows.append(csv_row(
+            name, bound_us,
+            f"dominant={rl['dominant']};"
+            f"tc={rl['t_compute']:.4f};tm={rl['t_memory']:.4f};"
+            f"tl={rl['t_collective']:.4f};"
+            f"frac={rl['roofline_fraction']:.3f};"
+            f"fits={r['memory']['fits_hbm']}"))
+    return rows

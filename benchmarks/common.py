@@ -1,0 +1,51 @@
+"""Shared benchmark utilities: timing, scaled-down paper configs.
+
+The paper's DLRM configs hold 128 MB–3.2 GB of embeddings; this container is
+a 1-core CPU, so benches run *scaled* configs: rows_per_table is divided by
+SCALE (default 20) while tables/lookups/MLP stay exact — the paper's access
+*pattern* (gathers per table, bytes per gather, MLP flops) is preserved per
+inference, only the table height (which affects locality, not work) shrinks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.configs.dlrm import DLRM_CONFIGS
+
+SCALE = 20
+
+
+def scaled(cfg, scale: int = SCALE):
+    return dataclasses.replace(cfg,
+                               rows_per_table=cfg.rows_per_table // scale)
+
+
+def scaled_configs(scale: int = SCALE):
+    return {k: scaled(v, scale) for k, v in DLRM_CONFIGS.items()}
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-time (seconds) of fn(*args) with block_until_ready."""
+    import jax
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready() if hasattr(
+                x, "block_until_ready") else x, out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready() if hasattr(
+                x, "block_until_ready") else x, out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,97 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+JSONs.
+
+    PYTHONPATH=src python -m benchmarks.make_report [results_dir]
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ARCH_ORDER = ["h2o-danube-1.8b", "qwen1.5-4b", "minicpm3-4b", "smollm-360m",
+              "internvl2-2b", "recurrentgemma-9b", "kimi-k2-1t-a32b",
+              "arctic-480b", "seamless-m4t-large-v2", "rwkv6-7b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b / 1e12:.2f}T"
+    if b >= 1e9:
+        return f"{b / 1e9:.2f}G"
+    if b >= 1e6:
+        return f"{b / 1e6:.1f}M"
+    return f"{b / 1e3:.0f}K"
+
+
+def load(results: Path, mesh: str):
+    recs = {}
+    for p in results.glob(f"dryrun_{mesh}_*.json"):
+        r = json.loads(p.read_text())
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    out = ["| arch | shape | status | compile s | bytes/dev | flops/dev | "
+           "coll bytes/dev | fits 16G |",
+           "|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                out.append(f"| {a} | {s} | SKIP (full attn @524k) | — | — | "
+                           f"— | — | — |")
+                continue
+            if r["status"] != "ok":
+                out.append(f"| {a} | {s} | ERROR | — | — | — | — | — |")
+                continue
+            m = r["memory"]
+            out.append(
+                f"| {a} | {s} | ok | {r['compile_s']} | "
+                f"{_fmt_bytes(m['per_device_total'])} | "
+                f"{r['flops_per_dev']:.2e} | "
+                f"{_fmt_bytes(r['collective_bytes']['total'])} | "
+                f"{'yes' if m['fits_hbm'] else 'NO'} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs) -> str:
+    out = ["| arch | shape | t_compute s | t_memory s | t_coll s | dominant "
+           "| 6ND/HLO | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s))
+            if r is None or r["status"] != "ok":
+                continue
+            rl = r["roofline"]
+            out.append(
+                f"| {a} | {s} | {rl['t_compute']:.4f} | "
+                f"{rl['t_memory']:.4f} | {rl['t_collective']:.4f} | "
+                f"**{rl['dominant']}** | {rl['useful_ratio']:.2f} | "
+                f"{rl['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+def main():
+    results = Path(sys.argv[1]) if len(sys.argv) > 1 else \
+        Path(__file__).resolve().parent / "results"
+    for mesh in ("pod", "multipod"):
+        recs = load(results, mesh)
+        if not recs:
+            continue
+        n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
+        n_skip = sum(1 for r in recs.values() if r["status"] == "skipped")
+        print(f"\n## {mesh} mesh ({n_ok} ok, {n_skip} skipped)\n")
+        print("### Dry-run\n")
+        print(dryrun_table(recs))
+        print("\n### Roofline\n")
+        print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One function per paper table/figure (bench_paper) plus the roofline table
+(bench_roofline). Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import bench_paper, bench_roofline
+    print("name,us_per_call,derived")
+    for row in bench_paper.run_all():
+        print(row)
+        sys.stdout.flush()
+    for row in bench_roofline.run_all():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

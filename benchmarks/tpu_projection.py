@@ -1,0 +1,92 @@
+"""TPU-projected roofline for the three hillclimbed cells.
+
+Re-lowers each cell and projects the memory term onto the TPU target by
+removing two dry-run-backend artifacts that are measured, not guessed:
+
+  * attention score-block traffic (deleted by the flash Pallas kernel's
+    VMEM-resident online softmax) — `hlo_analysis.score_block_traffic`;
+  * bf16<->f32 conversion traffic (XLA-CPU has no bf16 FMA; the TPU MXU
+    consumes bf16 natively) — `hlo_analysis.convert_traffic`.
+
+    PYTHONPATH=src python -m benchmarks.tpu_projection
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import jax  # noqa: E402
+
+from repro.configs.registry import get_arch, get_shape  # noqa: E402
+from repro.launch import hlo_analysis, roofline  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import api  # noqa: E402
+
+CELLS = [("kimi-k2-1t-a32b", "train_4k", True),
+         ("qwen1.5-4b", "prefill_32k", False),
+         ("qwen1.5-4b", "decode_32k", False)]
+
+
+def project(arch_id: str, shape_name: str, multi_pod: bool):
+    cfg = get_arch(arch_id)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    sh = lambda t: jax.tree_util.tree_map(lambda s: s.sharding, t)  # noqa
+
+    if shape.kind == "train":
+        opt_name, opt, step = api.make_train_step(cfg, mesh=mesh)
+        p_sds, o_sds, _ = api.train_state_specs(cfg, opt_name, opt, mesh)
+        b_sds = api.input_specs(cfg, shape, mesh)
+        with mesh:
+            co = jax.jit(step, donate_argnums=(0, 1),
+                         out_shardings=(sh(p_sds), sh(o_sds), None)).lower(
+                p_sds, o_sds, b_sds).compile()
+        shapes_tree = p_sds
+    elif shape.kind == "prefill":
+        step = api.make_prefill_step(cfg, shape.seq_len, mesh=mesh)
+        opt_name, opt = api.default_optimizer(cfg)
+        p_sds, _, _ = api.train_state_specs(cfg, opt_name, opt, mesh)
+        b_sds = api.input_specs(cfg, shape, mesh)
+        with mesh:
+            co = jax.jit(step).lower(p_sds, b_sds).compile()
+        shapes_tree = p_sds
+    else:
+        step = api.make_decode_fn(cfg, mesh=mesh)
+        opt_name, opt = api.default_optimizer(cfg)
+        p_sds, _, _ = api.train_state_specs(cfg, opt_name, opt, mesh)
+        c_sds = api.cache_specs(cfg, shape.global_batch, shape.seq_len, mesh)
+        b_sds = api.input_specs(cfg, shape, mesh)
+        with mesh:
+            co = jax.jit(step, donate_argnums=(1,),
+                         out_shardings=(None, sh(c_sds))).lower(
+                p_sds, c_sds, b_sds).compile()
+        shapes_tree = p_sds
+
+    txt = co.as_text()
+    h = hlo_analysis.analyze(txt)
+    score = hlo_analysis.score_block_traffic(txt)
+    conv = hlo_analysis.convert_traffic(txt)
+    bytes_tpu = max(0.0, h["bytes"] - score - conv)
+    tc = h["flops"] / roofline.PEAK_FLOPS
+    tm = h["bytes"] / roofline.HBM_BW
+    tm_tpu = bytes_tpu / roofline.HBM_BW
+    tl = h["collectives"]["total"] / roofline.ICI_BW
+    mf = roofline.model_flops(cfg, shape, shapes_tree)
+    ideal = mf / (chips * roofline.PEAK_FLOPS)
+    frac = ideal / max(tc, tm, tl)
+    frac_tpu = ideal / max(tc, tm_tpu, tl)
+    mesh_name = "multipod" if multi_pod else "pod"
+    print(f"{arch_id} {shape_name} [{mesh_name}]: "
+          f"tc={tc:.2f}s tm={tm:.2f}s -> tm_tpu={tm_tpu:.2f}s "
+          f"(score={score / 1e12:.2f}T conv={conv / 1e12:.2f}T) tl={tl:.2f}s"
+          f" | frac {frac:.4f} -> TPU-projected {frac_tpu:.4f}")
+    return frac, frac_tpu
+
+
+def main():
+    for arch_id, shape_name, multi in CELLS:
+        project(arch_id, shape_name, multi)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Arch-zoo serving example: decode from any assigned architecture through
+the wave-batching engine (CPU-runnable with the reduced smoke configs).
+
+    PYTHONPATH=src python examples/lm_inference.py --arch rwkv6-7b
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, SMOKE_ARCHS
+from repro.models import api
+from repro.serving import Batcher, DecodeEngine, Request
+
+parser = argparse.ArgumentParser()
+parser.add_argument("--arch", default="smollm-360m", choices=ARCH_IDS)
+parser.add_argument("--requests", type=int, default=8)
+parser.add_argument("--new-tokens", type=int, default=12)
+args = parser.parse_args()
+
+cfg = SMOKE_ARCHS[args.arch]
+print(f"arch {args.arch} (smoke config: {cfg.n_layers}L d={cfg.d_model})")
+params, _ = api.init(jax.random.PRNGKey(0), cfg)
+
+engine = DecodeEngine(cfg, params, n_slots=4, max_len=64)
+batcher = Batcher(max_batch=4, max_wait_ms=0.0)
+rng = np.random.RandomState(0)
+for rid in range(args.requests):
+    batcher.submit(Request(
+        rid=rid,
+        prompt=rng.randint(0, cfg.vocab_size, size=(6,)).astype(np.int32),
+        max_new_tokens=args.new_tokens))
+
+steps = 0
+while len(engine.latencies) < args.requests and steps < 10_000:
+    if engine.idle():
+        wave = batcher.take()
+        if not wave:
+            break
+        engine.admit(wave)
+    engine.step()
+    steps += 1
+
+print(f"completed {len(engine.latencies)}/{args.requests} requests")
+print(f"latency stats: {engine.stats()}")

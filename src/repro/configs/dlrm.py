@@ -1,0 +1,43 @@
+"""DLRM configurations — paper Table I (the paper's own benchmark suite).
+
+| Model   | # Tables | Gathers/table | Table size | MLP size |
+|---------|----------|---------------|------------|----------|
+| DLRM(1) | 5        | 20            | 128 MB     | 57.4 KB  |
+| DLRM(2) | 50       | 20            | 1.28 GB    | 57.4 KB  |
+| DLRM(3) | 5        | 80            | 128 MB     | 57.4 KB  |
+| DLRM(4) | 50       | 80            | 1.28 GB    | 57.4 KB  |
+| DLRM(5) | 50       | 80            | 3.2 GB     | 57.4 KB  |
+| DLRM(6) | 5        | 2             | 128 MB     | 557 KB   |
+
+Table size = n_tables * rows * 32 dims * 4 B. 128 MB over 5 tables at 32-dim
+fp32 → 200k rows/table; DLRM(5)'s 3.2 GB over 50 tables → 500k rows/table.
+DLRM(6) has a deliberately heavyweight MLP (557 KB) and light embedding stage.
+"""
+from repro.configs.base import DLRMConfig
+
+DLRM_CONFIGS = {
+    "dlrm1": DLRMConfig(name="dlrm1", n_tables=5, rows_per_table=200_000,
+                        lookups_per_table=20,
+                        bottom_mlp=(512, 256, 32), top_mlp=(512, 256, 1)),
+    "dlrm2": DLRMConfig(name="dlrm2", n_tables=50, rows_per_table=200_000,
+                        lookups_per_table=20,
+                        bottom_mlp=(512, 256, 32), top_mlp=(512, 256, 1)),
+    "dlrm3": DLRMConfig(name="dlrm3", n_tables=5, rows_per_table=200_000,
+                        lookups_per_table=80,
+                        bottom_mlp=(512, 256, 32), top_mlp=(512, 256, 1)),
+    "dlrm4": DLRMConfig(name="dlrm4", n_tables=50, rows_per_table=200_000,
+                        lookups_per_table=80,
+                        bottom_mlp=(512, 256, 32), top_mlp=(512, 256, 1)),
+    "dlrm5": DLRMConfig(name="dlrm5", n_tables=50, rows_per_table=500_000,
+                        lookups_per_table=80,
+                        bottom_mlp=(512, 256, 32), top_mlp=(512, 256, 1)),
+    # heavyweight MLP: ~557 KB of fp32 weights, tiny embedding stage
+    "dlrm6": DLRMConfig(name="dlrm6", n_tables=5, rows_per_table=200_000,
+                        lookups_per_table=2,
+                        bottom_mlp=(1024, 512, 32), top_mlp=(1024, 512, 1)),
+}
+
+# Small variants usable on a laptop / in smoke tests.
+DLRM_SMOKE = DLRMConfig(name="dlrm_smoke", n_tables=3, rows_per_table=1000,
+                        lookups_per_table=4, emb_dim=16,
+                        bottom_mlp=(64, 16), top_mlp=(64, 1))

@@ -1,0 +1,59 @@
+"""Registry mapping ``--arch <id>`` to configs (full + smoke)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.configs.base import (LM_SHAPES, SHAPES_BY_NAME, ModelConfig,
+                                ShapeConfig, shape_applicable)
+from repro.configs import (arctic_480b, h2o_danube_1_8b, internvl2_2b,
+                           kimi_k2_1t_a32b, minicpm3_4b, qwen1_5_4b,
+                           recurrentgemma_9b, rwkv6_7b,
+                           seamless_m4t_large_v2, smollm_360m)
+from repro.configs.dlrm import DLRM_CONFIGS, DLRM_SMOKE
+
+_MODULES = {
+    "h2o-danube-1.8b": h2o_danube_1_8b,
+    "qwen1.5-4b": qwen1_5_4b,
+    "minicpm3-4b": minicpm3_4b,
+    "smollm-360m": smollm_360m,
+    "internvl2-2b": internvl2_2b,
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "kimi-k2-1t-a32b": kimi_k2_1t_a32b,
+    "arctic-480b": arctic_480b,
+    "seamless-m4t-large-v2": seamless_m4t_large_v2,
+    "rwkv6-7b": rwkv6_7b,
+}
+
+ARCHS: Dict[str, ModelConfig] = {k: m.CONFIG for k, m in _MODULES.items()}
+SMOKE_ARCHS: Dict[str, ModelConfig] = {k: m.SMOKE for k, m in _MODULES.items()}
+ARCH_IDS = tuple(ARCHS)
+
+
+def get_arch(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def get_smoke(arch_id: str) -> ModelConfig:
+    return SMOKE_ARCHS[arch_id]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES_BY_NAME[name]
+
+
+def iter_cells() -> Tuple[Tuple[str, str, bool, str], ...]:
+    """All 40 (arch, shape) cells with applicability + reason."""
+    out = []
+    for arch_id, cfg in ARCHS.items():
+        for shape in LM_SHAPES:
+            ok, reason = shape_applicable(cfg, shape)
+            out.append((arch_id, shape.name, ok, reason))
+    return tuple(out)
+
+
+def get_dlrm(name: str):
+    if name == "dlrm_smoke":
+        return DLRM_SMOKE
+    return DLRM_CONFIGS[name]

@@ -1,0 +1,4 @@
+# The paper's primary contribution: the hybrid sparse-dense engine.
+from repro.core import dense_engine, dlrm, hybrid, sparse_engine
+
+__all__ = ["dense_engine", "dlrm", "hybrid", "sparse_engine"]

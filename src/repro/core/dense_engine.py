@@ -1,0 +1,51 @@
+"""The Centaur dense engine: tiled GEMM executor for MLPs + interaction.
+
+Wraps the output-stationary Pallas GEMM (``repro.kernels.gemm``) into the two
+dense stages of the paper's pipeline (Fig. 11): the MLP unit (bottom/top
+MLPs) and the feature-interaction unit (batched X X^T + lower-tri concat).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def init_mlp(key: jax.Array, dims: Sequence[int], dtype=jnp.float32):
+    """dims = (in, h1, ..., out); returns list of (w, b)."""
+    params = []
+    for i in range(len(dims) - 1):
+        key, k = jax.random.split(key)
+        scale = (2.0 / dims[i]) ** 0.5
+        w = scale * jax.random.normal(k, (dims[i], dims[i + 1]), jnp.float32)
+        b = jnp.zeros((dims[i + 1],), jnp.float32)
+        params.append((w.astype(dtype), b.astype(dtype)))
+    return params
+
+
+def mlp_apply(params, x: jax.Array, act=jax.nn.relu,
+              final_act=None) -> jax.Array:
+    """Run the MLP unit: GEMM per layer on the dense engine."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = ops.gemm(h, w) + b
+        if i < len(params) - 1:
+            h = act(h)
+        elif final_act is not None:
+            h = final_act(h)
+    return h
+
+
+def feature_interaction(bottom_out: jax.Array,
+                        reduced_embs: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Paper Fig. 3: concat bottom-MLP vector with reduced embeddings, take
+    all pairwise dots (lower triangle), concat with bottom-MLP output.
+
+    bottom_out: (B, D); reduced_embs: (B, T, D) -> interaction input (B, F*D')
+    """
+    feats = jnp.concatenate([bottom_out[:, None, :], reduced_embs], axis=1)
+    pairs = ops.interaction_tril(feats)            # (B, F(F-1)/2)
+    return jnp.concatenate([bottom_out, pairs], axis=-1), feats

@@ -1,0 +1,96 @@
+"""DLRM — the paper's model (Fig. 1/3), built on the sparse + dense engines.
+
+Topology: dense features -> bottom MLP ─┐
+          sparse indices -> embedding    ├─> feature interaction -> top MLP
+          gather+reduce (sparse engine) ─┘         -> sigmoid -> CTR
+
+Training uses row-wise Adagrad on the embedding arena (sparse engine state)
+and AdamW on the MLPs, matching production DLRM practice.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DLRMConfig
+from repro.core import dense_engine as de
+from repro.core import sparse_engine as se
+from repro.optim import adamw, partitioned, rowwise_adagrad
+
+
+def arena_spec(cfg: DLRMConfig) -> se.ArenaSpec:
+    return se.ArenaSpec(cfg.n_tables, cfg.rows_per_table, cfg.emb_dim,
+                        cfg.dtype)
+
+
+def top_mlp_in_dim(cfg: DLRMConfig) -> int:
+    f = cfg.n_interact_features
+    return cfg.emb_dim + f * (f - 1) // 2
+
+
+def init(key: jax.Array, cfg: DLRMConfig, shards: int = 1) -> Dict:
+    k_arena, k_bot, k_top = jax.random.split(key, 3)
+    spec = arena_spec(cfg)
+    assert cfg.bottom_mlp[-1] == cfg.emb_dim, (
+        "bottom MLP must end at emb_dim so its output joins the interaction")
+    return {
+        "arena": se.init_arena(k_arena, spec, shards),
+        "bottom": de.init_mlp(k_bot, (cfg.dense_features,) + cfg.bottom_mlp),
+        "top": de.init_mlp(k_top, (top_mlp_in_dim(cfg),) + cfg.top_mlp),
+    }
+
+
+def forward(params: Dict, cfg: DLRMConfig, dense: jax.Array,
+            indices: jax.Array,
+            mesh: Optional[jax.sharding.Mesh] = None) -> jax.Array:
+    """dense: (B, dense_features); indices: (B, T, L) -> logits (B,).
+
+    The graph is deliberately structured so the sparse stage (gather+psum)
+    and the bottom-MLP GEMMs have no data dependence: on TPU the async
+    collective combine of embedding shards overlaps the dense compute —
+    the Centaur sparse/dense concurrency, expressed at the XLA level.
+    """
+    spec = arena_spec(cfg)
+    emb = se.lookup_auto(params["arena"], spec, indices, mesh)  # sparse stage
+    bot = de.mlp_apply(params["bottom"], dense)                 # dense stage
+    x, _ = de.feature_interaction(bot, emb)
+    logit = de.mlp_apply(params["top"], x)
+    return logit[:, 0]
+
+
+def loss_fn(params: Dict, cfg: DLRMConfig, dense: jax.Array,
+            indices: jax.Array, labels: jax.Array,
+            mesh: Optional[jax.sharding.Mesh] = None) -> jax.Array:
+    """Binary cross-entropy on click labels."""
+    logits = forward(params, cfg, dense, indices, mesh)
+    logp = jax.nn.log_sigmoid(logits)
+    lognp = jax.nn.log_sigmoid(-logits)
+    return -(labels * logp + (1 - labels) * lognp).mean()
+
+
+def make_optimizer(cfg: DLRMConfig, lr: float = 1e-3):
+    return partitioned({"arena": rowwise_adagrad(lr * 10)}, adamw(lr))
+
+
+def make_train_step(cfg: DLRMConfig, optimizer=None,
+                    mesh: Optional[jax.sharding.Mesh] = None):
+    opt = optimizer or make_optimizer(cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, cfg, batch["dense"], batch["indices"], batch["labels"],
+            mesh)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, loss
+
+    return opt, train_step
+
+
+def make_serve_step(cfg: DLRMConfig,
+                    mesh: Optional[jax.sharding.Mesh] = None):
+    def serve_step(params, batch):
+        return jax.nn.sigmoid(
+            forward(params, cfg, batch["dense"], batch["indices"], mesh))
+    return serve_step

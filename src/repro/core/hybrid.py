@@ -1,0 +1,96 @@
+"""HybridSparseDense — the Centaur orchestration layer.
+
+Three execution strategies over the same parameters:
+
+* ``baseline_forward`` — the paper's **CPU-only baseline**: naive
+  gather-materialize-reduce (``table[idx]`` then ``sum``) and plain jnp
+  matmuls. This is the reproduction floor every speedup is measured against.
+* ``forward`` (in ``dlrm.py``) — sparse engine + dense engine, concurrent by
+  graph structure (single batch).
+* ``pipelined_forward`` — microbatch software pipeline: while the dense
+  engine runs interaction+MLPs for microbatch *i*, the sparse engine streams
+  gathers for microbatch *i+1* (paper Section IV-D: "the entire dense GEMM
+  computation is orchestrated seamlessly with the sparse accelerator").
+  Expressed as a stage-skewed ``lax.scan``: the gather for the next
+  microbatch and the dense math for the current one live in the same scan
+  body with no data dependence, so the TPU scheduler overlaps DMA/collective
+  traffic with MXU work.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DLRMConfig
+from repro.core import dense_engine as de
+from repro.core import dlrm as dlrm_mod
+from repro.core import sparse_engine as se
+from repro.kernels import ref as kref
+
+
+# ---------------------------------------------------------------------------
+# CPU-only baseline (paper Section III)
+# ---------------------------------------------------------------------------
+
+def baseline_forward(params: Dict, cfg: DLRMConfig, dense: jax.Array,
+                     indices: jax.Array) -> jax.Array:
+    """Naive path: materialize gathered rows, reduce, jnp matmul MLPs."""
+    spec = dlrm_mod.arena_spec(cfg)
+    flat = se.flatten_indices(spec, indices)               # (B*T, L)
+    rows = params["arena"][flat]                           # materialized!
+    emb = rows.astype(jnp.float32).sum(axis=1)
+    emb = emb.reshape(indices.shape[0], spec.n_tables, spec.dim)
+    emb = emb.astype(params["arena"].dtype)
+
+    bot = kref.mlp(dense, [w for w, _ in params["bottom"]],
+                   [b for _, b in params["bottom"]])
+    feats = jnp.concatenate([bot[:, None, :], emb], axis=1)
+    pairs = kref.interaction_tril(feats)
+    x = jnp.concatenate([bot, pairs], axis=-1)
+    logit = kref.mlp(x, [w for w, _ in params["top"]],
+                     [b for _, b in params["top"]])
+    return logit[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Microbatch-pipelined hybrid execution
+# ---------------------------------------------------------------------------
+
+def pipelined_forward(params: Dict, cfg: DLRMConfig, dense: jax.Array,
+                      indices: jax.Array, n_micro: int = 4,
+                      mesh: Optional[jax.sharding.Mesh] = None) -> jax.Array:
+    """Stage-skewed pipeline over n_micro microbatches."""
+    spec = dlrm_mod.arena_spec(cfg)
+    b = dense.shape[0]
+    assert b % n_micro == 0, (b, n_micro)
+    mb = b // n_micro
+    dense_s = dense.reshape(n_micro, mb, -1)
+    idx_s = indices.reshape(n_micro, mb, spec.n_tables, -1)
+
+    # Prologue: gather microbatch 0's embeddings.
+    emb0 = se.lookup_auto(params["arena"], spec, idx_s[0], mesh)
+    # Next-microbatch index stream (last one wraps; its gather is discarded).
+    idx_next = jnp.concatenate([idx_s[1:], idx_s[:1]], axis=0)
+
+    def body(emb_i, xs):
+        dense_i, idx_n = xs
+        # dense stage for microbatch i ...
+        bot = de.mlp_apply(params["bottom"], dense_i)
+        x, _ = de.feature_interaction(bot, emb_i)
+        logit = de.mlp_apply(params["top"], x)[:, 0]
+        # ... overlapped with the sparse stage for microbatch i+1
+        emb_n = se.lookup_auto(params["arena"], spec, idx_n, mesh)
+        return emb_n, logit
+
+    _, logits = jax.lax.scan(body, emb0, (dense_s, idx_next))
+    return logits.reshape(b)
+
+
+def make_pipelined_serve_step(cfg: DLRMConfig, n_micro: int = 4,
+                              mesh: Optional[jax.sharding.Mesh] = None):
+    def serve_step(params, batch):
+        return jax.nn.sigmoid(pipelined_forward(
+            params, cfg, batch["dense"], batch["indices"], n_micro, mesh))
+    return serve_step

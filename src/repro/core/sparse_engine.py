@@ -1,0 +1,168 @@
+"""The Centaur sparse engine: multi-table embedding gather/reduce.
+
+The paper's EB-Streamer (Fig. 10) is reproduced structurally:
+
+* **BPregs** — every embedding table lives at a base offset inside one flat
+  row *arena* ``(total_rows + 1, D)``; the engine's address generator turns a
+  (table, row) pair into ``base[t] + row`` exactly like the paper's
+  base-pointer + offset logic. The final arena row is an always-zero row used
+  as the null target for masked / out-of-shard lookups, which keeps the
+  *fused on-the-fly reduction* kernel applicable even on the sharded path.
+* **SRAM_sparseID / EB-GU / EB-RU** — the Pallas kernel in
+  ``repro.kernels.embedding_gather`` (scalar-prefetched indices driving
+  streaming row DMAs with in-VMEM reduction).
+* **Shared-memory direct access** — on a pod, the "CPU DIMMs holding the
+  tables" become the pod-wide HBM pool: the arena is **row-sharded across the
+  'model' mesh axis**; each chip reduces the rows it owns and a single psum
+  combines partial bags. Only reduced D-vectors ever cross chips (the same
+  reason Centaur streams reductions instead of raw gathered rows).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+@dataclass(frozen=True)
+class ArenaSpec:
+    """Static description of the embedding arena (the BPregs contents)."""
+    n_tables: int
+    rows_per_table: int
+    dim: int
+    dtype: str = "float32"
+
+    @property
+    def total_rows(self) -> int:
+        # +1: trailing always-zero null row for masked lookups
+        return self.n_tables * self.rows_per_table + 1
+
+    @property
+    def null_row(self) -> int:
+        return self.n_tables * self.rows_per_table
+
+    def padded_rows(self, shards: int) -> int:
+        """Arena rows padded so the row dim divides the model axis."""
+        r = self.total_rows
+        return ((r + shards - 1) // shards) * shards
+
+
+def init_arena(key: jax.Array, spec: ArenaSpec, shards: int = 1,
+               scale: float = 0.01) -> jax.Array:
+    """Arena of all tables, null row zeroed, padded for `shards` row-shards."""
+    rows = spec.padded_rows(shards)
+    arena = scale * jax.random.normal(key, (rows, spec.dim), jnp.float32)
+    arena = arena.at[spec.null_row:].set(0.0)
+    return arena.astype(spec.dtype)
+
+
+def flatten_indices(spec: ArenaSpec, indices: jax.Array) -> jax.Array:
+    """(B, T, L) per-table row ids -> (B*T, L) arena row ids (base + offset)."""
+    b, t, l = indices.shape
+    base = (jnp.arange(t, dtype=indices.dtype) * spec.rows_per_table)
+    flat = indices + base[None, :, None]
+    return flat.reshape(b * t, l)
+
+
+def lookup(arena: jax.Array, spec: ArenaSpec, indices: jax.Array) -> jax.Array:
+    """Replicated-arena gather+reduce: (B, T, L) -> (B, T, D).
+
+    Single fused kernel call across *all* tables (one EB-Streamer pass).
+    """
+    b, t, l = indices.shape
+    flat = flatten_indices(spec, indices)
+    out = ops.embedding_bag(arena, flat)          # (B*T, D)
+    return out.reshape(b, t, spec.dim)
+
+
+def lookup_sharded(arena_shard: jax.Array, spec: ArenaSpec,
+                   indices: jax.Array, axis: str) -> jax.Array:
+    """Row-sharded gather+reduce for use inside shard_map.
+
+    arena_shard: (rows/n_shards, D) local rows (contiguous row-block shard);
+    indices: (B, T, L) replicated. Out-of-shard rows are routed to the null
+    row trick *relative to the shard*: rows this chip does not own are
+    redirected to a clipped in-range row and zero-masked via a weight of 0 in
+    the reduction — implemented by gathering and masking before the local
+    reduce, then psum over `axis` combines partial bags.
+    """
+    n_shards = jax.lax.axis_size(axis)
+    my = jax.lax.axis_index(axis)
+    vlocal = arena_shard.shape[0]
+    lo = my * vlocal
+
+    b, t, l = indices.shape
+    flat = flatten_indices(spec, indices)          # (B*T, L) global rows
+    rel = flat - lo
+    mine = (rel >= 0) & (rel < vlocal)
+    # Redirect foreign rows to local row 0 and mask their contribution.
+    safe = jnp.where(mine, rel, 0)
+    rows = jnp.take(arena_shard, safe, axis=0)     # (B*T, L, D)
+    rows = jnp.where(mine[..., None], rows, 0)
+    part = rows.astype(jnp.float32).sum(axis=1)    # local partial reduction
+    out = jax.lax.psum(part, axis)                 # combine partial bags
+    return out.reshape(b, t, spec.dim).astype(arena_shard.dtype)
+
+
+def lookup_auto(arena: jax.Array, spec: ArenaSpec, indices: jax.Array,
+                mesh: Optional[jax.sharding.Mesh] = None,
+                axis: str = "model") -> jax.Array:
+    """pjit-level entry: row-shard the arena over `axis` when a mesh is given.
+
+    The shard_map below is the production path: it guarantees that only
+    reduced (B,T,D) partials cross chips (one psum), never raw gathered rows.
+    """
+    if mesh is None or axis not in mesh.axis_names or mesh.shape[axis] == 1:
+        return lookup(arena, spec, indices)
+    from jax.sharding import PartitionSpec as P
+    other = tuple(a for a in mesh.axis_names if a != axis)
+    batch_spec = P(other if other else None)
+    fn = jax.shard_map(
+        lambda a, i: lookup_sharded(a, spec, i, axis),
+        mesh=mesh,
+        in_specs=(P(axis, None), batch_spec),
+        out_specs=batch_spec,
+        check_vma=False,
+    )
+    return fn(arena, indices)
+
+
+def quantize_arena(arena: jax.Array):
+    """Row-wise symmetric int8 quantization of the embedding arena.
+
+    The paper's core capacity constraint (tables of 100s of GB must live in
+    commodity memory) motivates this beyond-paper lever: int8 rows + one f32
+    scale per row = 3.9x capacity, dequantized on the fly inside the gather
+    (the EB-RU reduces dequantized rows; a zero scale keeps the null row
+    inert). Returns (q int8 (R, D), scales f32 (R, 1)).
+    """
+    a32 = arena.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(a32), axis=-1, keepdims=True)
+    scales = amax / 127.0
+    q = jnp.where(scales > 0,
+                  jnp.clip(jnp.round(a32 / jnp.maximum(scales, 1e-30)),
+                           -127, 127), 0).astype(jnp.int8)
+    return q, scales
+
+
+def lookup_quantized(q: jax.Array, scales: jax.Array, spec: ArenaSpec,
+                     indices: jax.Array) -> jax.Array:
+    """Gather+reduce over an int8 arena: dequantize-per-row then reduce."""
+    b, t, l = indices.shape
+    flat = flatten_indices(spec, indices)            # (B*T, L)
+    rows = jnp.take(q, flat, axis=0).astype(jnp.float32)
+    s = jnp.take(scales, flat, axis=0)               # (B*T, L, 1)
+    out = (rows * s).sum(axis=1)
+    return out.reshape(b, t, spec.dim)
+
+
+def make_zipf_indices(rng: np.random.RandomState, spec: ArenaSpec,
+                      batch: int, lookups: int, alpha: float = 1.05) -> np.ndarray:
+    """Zipfian sparse-index generator (production access skew), (B, T, L)."""
+    raw = rng.zipf(alpha, size=(batch, spec.n_tables, lookups))
+    return ((raw - 1) % spec.rows_per_table).astype(np.int32)

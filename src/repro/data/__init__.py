@@ -1,0 +1,4 @@
+from repro.data.pipeline import Prefetcher, make_placer
+from repro.data.synthetic import DLRMSynthetic, LMSynthetic
+
+__all__ = ["DLRMSynthetic", "LMSynthetic", "Prefetcher", "make_placer"]

@@ -1,0 +1,75 @@
+"""Host-side input pipeline: background prefetch + device placement.
+
+A small but real pipeline: a worker thread generates/loads batches ahead of
+the training step (the host analogue of the EB-Streamer's index prefetch),
+double-buffered through a bounded queue, with optional sharded device
+placement so each step consumes an already-resident global batch.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class Prefetcher:
+    """Wrap a host batch iterator with N-deep background prefetch."""
+
+    def __init__(self, it: Iterator[Dict[str, np.ndarray]], depth: int = 2,
+                 place: Optional[Callable] = None):
+        self._it = it
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._place = place or (lambda x: x)
+        self._stop = threading.Event()
+        self._exc: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        try:
+            for batch in self._it:
+                if self._stop.is_set():
+                    return
+                self._q.put(self._place(batch))
+            self._q.put(None)         # end-of-stream sentinel
+        except BaseException as e:   # surfaced on next __next__
+            self._exc = e
+            self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is None:
+            if self._exc is not None:
+                raise self._exc
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def make_placer(mesh: Optional[jax.sharding.Mesh], batch_specs: Dict):
+    """Returns fn placing a host batch onto the mesh with given specs."""
+    if mesh is None:
+        return lambda batch: {k: jax.numpy.asarray(v)
+                              for k, v in batch.items()}
+    from jax.sharding import NamedSharding
+
+    def place(batch):
+        out = {}
+        for k, v in batch.items():
+            sharding = NamedSharding(mesh, batch_specs[k])
+            out[k] = jax.device_put(v, sharding)
+        return out
+    return place

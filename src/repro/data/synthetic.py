@@ -1,0 +1,83 @@
+"""Synthetic data generators (deterministic, seeded).
+
+DLRM: zipfian sparse index streams (production embedding access skew),
+gaussian dense features, bernoulli click labels correlated with a hidden
+linear model so training has signal.
+
+LM: token streams with a power-law unigram distribution plus a repeated
+n-gram structure so cross-entropy actually falls during the example runs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import DLRMConfig, ModelConfig
+
+
+class DLRMSynthetic:
+    def __init__(self, cfg: DLRMConfig, seed: int = 0, alpha: float = 1.05):
+        self.cfg = cfg
+        self.alpha = alpha
+        self.rng = np.random.RandomState(seed)
+        # hidden ground-truth model for label signal
+        self._w = self.rng.randn(cfg.dense_features).astype(np.float32)
+
+    def batch(self, batch_size: int) -> Dict[str, np.ndarray]:
+        c = self.cfg
+        dense = self.rng.randn(batch_size, c.dense_features).astype(np.float32)
+        raw = self.rng.zipf(self.alpha,
+                            size=(batch_size, c.n_tables,
+                                  c.lookups_per_table))
+        indices = ((raw - 1) % c.rows_per_table).astype(np.int32)
+        logit = dense @ self._w * 0.5
+        labels = (self.rng.rand(batch_size)
+                  < 1.0 / (1.0 + np.exp(-logit))).astype(np.float32)
+        return {"dense": dense, "indices": indices, "labels": labels}
+
+    def stream(self, batch_size: int) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.batch(batch_size)
+
+
+class LMSynthetic:
+    def __init__(self, cfg: ModelConfig, seed: int = 0):
+        self.cfg = cfg
+        self.rng = np.random.RandomState(seed)
+        v = cfg.vocab_size
+        # power-law unigram distribution
+        p = 1.0 / np.arange(1, v + 1) ** 1.1
+        self._p = p / p.sum()
+        # a small bank of "phrases" injected for learnable structure
+        self._phrases = [
+            self.rng.choice(v, size=8, p=self._p) for _ in range(32)]
+
+    def tokens(self, batch: int, seq: int) -> np.ndarray:
+        out = self.rng.choice(self.cfg.vocab_size, size=(batch, seq),
+                              p=self._p)
+        # inject phrases at random offsets (~25% of tokens)
+        n_inject = max(1, seq // 32)
+        for b in range(batch):
+            for _ in range(n_inject):
+                ph = self._phrases[self.rng.randint(len(self._phrases))]
+                off = self.rng.randint(0, max(1, seq - len(ph)))
+                out[b, off:off + len(ph)] = ph
+        return out.astype(np.int32)
+
+    def batch(self, batch: int, seq: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return {
+                "frames": self.rng.randn(batch, cfg.enc_memory_len,
+                                         cfg.d_model).astype(np.float32),
+                "tokens": self.tokens(batch, seq),
+            }
+        if cfg.family == "vlm":
+            p = cfg.n_frontend_tokens
+            return {
+                "patches": self.rng.randn(batch, p, cfg.d_model)
+                .astype(np.float32),
+                "tokens": self.tokens(batch, max(2, seq - p)),
+            }
+        return {"tokens": self.tokens(batch, seq)}

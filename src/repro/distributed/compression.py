@@ -1,0 +1,69 @@
+"""Gradient compression for the data-parallel sync path.
+
+Two mechanisms, composable:
+
+* **bf16 wire sync** — gradients are cast to bf16 before the DP
+  all-reduce (2x ICI traffic cut). Under pjit the all-reduce is implicit, so
+  the cast is applied to the loss's gradient outputs inside the step; XLA
+  then reduces in bf16.
+* **int8 error-feedback quantization** — classic 1-bit-Adam-style residual
+  carry: q_t = Q(g_t + e_t), e_{t+1} = (g_t + e_t) - q_t. The quantized
+  tensor (int8 + per-row f32 scale) is what a custom int8 collective would
+  move (4x cut); we model the *numerics* end-to-end (the error-feedback
+  state is part of the training state) and document the wire saving in the
+  roofline's collective term.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Row-wise symmetric int8. Returns (q int8, scale f32)."""
+    x32 = x.astype(jnp.float32)
+    if x.ndim == 0:
+        scale = jnp.maximum(jnp.abs(x32), 1e-12) / 127.0
+        return jnp.round(x32 / scale).astype(jnp.int8), scale
+    amax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_error_feedback(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads, error_state):
+    """Returns (decompressed grads as seen post-wire, new error state)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), corrected - deq
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(error_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+def bf16_cast_grads(grads):
+    return jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def wire_bytes(params, scheme: str) -> int:
+    """Collective bytes per DP sync under each scheme (for the roofline)."""
+    import numpy as np
+    n = sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+    return {"f32": 4 * n, "bf16": 2 * n, "int8": n}[scheme]

@@ -1,0 +1,93 @@
+"""Logical-axis sharding: one vocabulary, every mesh.
+
+Models annotate activations/params with *logical* axes; this module maps them
+to mesh axes at trace time. The mapping:
+
+    'batch'  -> every mesh axis except 'model'  (DP: ('pod','data') or ('data',))
+    'model'  -> 'model'                          (TP/EP/vocab rows)
+    'fsdp'   -> 'data'                           (param sharding, ZeRO-3 style)
+    'expert' -> 'model'                          (MoE expert dim)
+    None     -> replicated
+
+Under no active mesh (smoke tests, laptop runs) every helper is an identity,
+so the same model code runs on one CPU device and on a 512-chip mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    """Activate a mesh for `constrain` calls during tracing."""
+    global _ACTIVE_MESH
+    prev = _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+    try:
+        yield mesh
+    finally:
+        _ACTIVE_MESH = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def resolve(mesh: Mesh, logical: Sequence[Optional[str]]) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec."""
+    out = []
+    for ax in logical:
+        if ax is None:
+            out.append(None)
+        elif ax == "batch":
+            ba = batch_axes(mesh)
+            out.append(ba if len(ba) > 1 else (ba[0] if ba else None))
+        elif ax in ("model", "expert", "vocab", "heads", "ff"):
+            out.append("model" if "model" in mesh.axis_names else None)
+        elif ax == "fsdp":
+            # ZeRO-3 shards over every DP axis (pod AND data on the
+            # multi-pod mesh), else params replicate across pods
+            ba = batch_axes(mesh)
+            out.append(ba if len(ba) > 1 else (ba[0] if ba else None))
+        else:
+            raise ValueError(f"unknown logical axis {ax!r}")
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint against the active mesh (identity if none)."""
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve(mesh, logical)))
+
+
+def sharding_for(mesh: Optional[Mesh],
+                 logical: Sequence[Optional[str]]):
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve(mesh, logical))
+
+
+def spec_tree_to_shardings(mesh: Optional[Mesh], spec_tree):
+    """Map a pytree of logical tuples to NamedShardings (or None mesh-less)."""
+    if mesh is None:
+        return jax.tree_util.tree_map(
+            lambda _: None, spec_tree,
+            is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree_util.tree_map(
+        lambda logical: NamedSharding(mesh, resolve(mesh, logical)),
+        spec_tree, is_leaf=lambda x: isinstance(x, tuple) and all(
+            v is None or isinstance(v, str) for v in x))

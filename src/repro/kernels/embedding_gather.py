@@ -1,0 +1,151 @@
+"""Fused embedding gather + on-the-fly reduce — the Centaur *sparse engine*.
+
+TPU adaptation of EB-Streamer (Fig. 10). The mapping is exact in spirit:
+
+  SRAM_sparseID  -> scalar-prefetch operand: the whole index array lands in
+                    SMEM *before* the grid starts, so the grid's BlockSpec
+                    index_map can address arbitrary table rows, driving the
+                    double-buffered HBM->VMEM row DMA pipeline (the hardware
+                    gather unit EB-GU becomes the Pallas pipeline engine);
+  EB-RU          -> rows are accumulated into a VMEM fp32 accumulator as
+                    they arrive (reduction happens on the fly; gathered rows
+                    are never materialized to HBM);
+  BPregs         -> the table Ref itself (base pointer + strides).
+
+Unlike the CPU baseline (jnp take -> materialize (B, L, D) -> sum), this
+kernel reads exactly L*D useful bytes per bag and writes D — the paper's
+"effective memory throughput" definition (Section III-C) counts exactly
+these bytes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(idx_ref, table_ref, o_ref, acc_ref, *, n_l: int):
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # One gathered row arrives per grid step (streamed HBM->VMEM by the
+    # pipeline using the prefetched index); reduce it immediately.
+    acc_ref[...] += table_ref[...].astype(jnp.float32)
+
+    @pl.when(l == n_l - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def embedding_bag(table: jax.Array, indices: jax.Array, *, bd: int = 2048,
+                  interpret: bool = False) -> jax.Array:
+    """Fixed-lookup SparseLengthsSum: out[b] = sum_l table[idx[b, l]].
+
+    table: (V, D), indices: (B, L) int32 -> (B, D).
+    Grid: (bags, d-blocks, lookups); lookups innermost so the fp32
+    accumulator tile is revisited on consecutive steps (output-stationary).
+    """
+    v, d = table.shape
+    b, l = indices.shape
+    bd = min(bd, d)
+    grid = (b, pl.cdiv(d, bd), l)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            # One table row block per step, row chosen by the prefetched
+            # sparse index — the EB-GU address generator.
+            pl.BlockSpec((1, bd), lambda bb, dd, ll, idx: (idx[bb, ll], dd)),
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda bb, dd, ll, idx: (bb, dd)),
+        scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_bag_kernel, n_l=l),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )
+    return fn(indices, table)
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def gather_rows(table: jax.Array, indices: jax.Array, *, bd: int = 2048,
+                interpret: bool = False) -> jax.Array:
+    """Plain row gather (L=1 bags): out[t] = table[indices[t]].
+
+    Used for LM vocab-embedding lookup (single-row 'bags'); same streaming
+    engine without the reduction stage.
+    """
+    return embedding_bag(table, indices[:, None], bd=bd, interpret=interpret)
+
+
+def _ragged_kernel(idx_ref, off_ref, table_ref, o_ref, acc_ref, *,
+                   max_l: int):
+    l = pl.program_id(2)
+    b = pl.program_id(0)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Ragged bags: lookup j of bag b is valid iff off[b]+j < off[b+1].
+    # Invalid steps were routed to row 0 by the index_map; mask them here
+    # (the EB-GU issuing a no-op gather — the pipeline still double-buffers).
+    valid = off_ref[b] + l < off_ref[b + 1]
+    row = table_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.where(valid, row, 0.0)
+
+    @pl.when(l == max_l - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("max_l", "interpret"))
+def sparse_lengths_sum(table: jax.Array, indices: jax.Array,
+                       offsets: jax.Array, *, max_l: int,
+                       interpret: bool = False) -> jax.Array:
+    """Ragged SparseLengthsSum — the paper's Fig. 2 API, in one kernel.
+
+    table (V, D); indices (L,) int32; offsets (B+1,) int32 (bag b reads
+    indices[offsets[b]:offsets[b+1]]); max_l = static max bag length.
+    Both scalar arrays are prefetched to SMEM (SRAM_sparseID + the offset
+    half of BPregs); the gather address is computed per grid step as
+    idx[off[b] + l] with out-of-bag steps masked in the reduction.
+    """
+    v, d = table.shape
+    b = offsets.shape[0] - 1
+    grid = (b, 1, max_l)
+
+    def table_map(bb, dd, ll, idx, off):
+        pos = off[bb] + ll
+        safe = jnp.minimum(pos, idx.shape[0] - 1)
+        return (jnp.where(pos < off[bb + 1], idx[safe], 0), dd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, d), table_map)],
+        out_specs=pl.BlockSpec((1, d),
+                               lambda bb, dd, ll, idx, off: (bb, dd)),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_ragged_kernel, max_l=max_l),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )
+    return fn(indices, offsets, table)

@@ -1,0 +1,113 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: on TPU the compiled Pallas kernels run; on CPU (this
+container) the mathematically identical XLA path from ``ref.py`` runs so the
+framework is usable end-to-end, and tests exercise the kernel bodies with
+``interpret=True``. The active implementation can be forced globally:
+
+    from repro.kernels import ops
+    ops.set_impl("interpret")   # 'auto' | 'xla' | 'pallas' | 'interpret'
+
+``embedding_bag`` carries a custom VJP: the backward of a gather-reduce is a
+scatter-add into the table — the sparse engine run in reverse — implemented
+with XLA scatter (segment-sum semantics), keeping training differentiable
+through the kernel path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import embedding_gather as _eg
+from repro.kernels import feature_interaction as _fi
+from repro.kernels import gemm as _gm
+from repro.kernels import ref as _ref
+
+_IMPL = "auto"
+_VALID = ("auto", "xla", "pallas", "interpret")
+
+
+def set_impl(impl: str) -> None:
+    global _IMPL
+    if impl not in _VALID:
+        raise ValueError(f"impl must be one of {_VALID}")
+    _IMPL = impl
+
+
+def get_impl() -> str:
+    if _IMPL != "auto":
+        return _IMPL
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+# ---------------------------------------------------------------------------
+# GEMM (dense engine)
+# ---------------------------------------------------------------------------
+
+def gemm(x: jax.Array, w: jax.Array) -> jax.Array:
+    impl = get_impl()
+    if impl == "xla":
+        return _ref.gemm(x, w)
+    return _gm.gemm(x, w, interpret=(impl == "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# Embedding bag (sparse engine) with custom VJP
+# ---------------------------------------------------------------------------
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _bag(table: jax.Array, indices: jax.Array, vocab: int,
+         dtype_name: str) -> jax.Array:
+    impl = get_impl()
+    if impl == "xla":
+        return _ref.embedding_bag(table, indices)
+    return _eg.embedding_bag(table, indices, interpret=(impl == "interpret"))
+
+
+def _bag_fwd(table, indices, vocab, dtype_name):
+    return _bag(table, indices, vocab, dtype_name), indices
+
+
+def _bag_bwd(vocab, dtype_name, indices, g):
+    b, l = indices.shape
+    d = g.shape[-1]
+    g32 = g.astype(jnp.float32)
+    g_rows = jnp.broadcast_to(g32[:, None, :], (b, l, d))
+    d_table = jnp.zeros((vocab, d), jnp.float32)
+    d_table = d_table.at[indices.reshape(-1)].add(g_rows.reshape(b * l, d))
+    return d_table.astype(dtype_name), None
+
+
+_bag.defvjp(_bag_fwd, _bag_bwd)
+
+
+def embedding_bag(table: jax.Array, indices: jax.Array) -> jax.Array:
+    """out[b] = sum_l table[indices[b, l]]; table (V,D), indices (B,L)."""
+    return _bag(table, indices, table.shape[0], str(table.dtype))
+
+
+def gather_rows(table: jax.Array, indices: jax.Array) -> jax.Array:
+    """out[t] = table[indices[t]]; single-row bags (LM token embedding)."""
+    return embedding_bag(table, indices[:, None])
+
+
+# ---------------------------------------------------------------------------
+# Feature interaction (dense engine, batched GEMM)
+# ---------------------------------------------------------------------------
+
+def interaction(x: jax.Array) -> jax.Array:
+    impl = get_impl()
+    if impl == "xla":
+        return _ref.interaction(x)
+    return _fi.interaction(x, interpret=(impl == "interpret"))
+
+
+def interaction_tril(x: jax.Array) -> jax.Array:
+    """DLRM interaction: lower-triangle (offset -1) of X X^T, flattened."""
+    z = interaction(x)
+    f = x.shape[1]
+    li, lj = jnp.tril_indices(f, k=-1)
+    return z[:, li, lj]

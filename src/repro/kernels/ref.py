@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x:(M,K) @ w:(K,N) with fp32 accumulation, result in x.dtype."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def embedding_bag(table: jax.Array, indices: jax.Array) -> jax.Array:
+    """Fixed-lookup SparseLengthsSum: out[b] = sum_l table[indices[b, l]].
+
+    table: (V, D); indices: (B, L) int32 -> (B, D), fp32 accumulation.
+    """
+    rows = table[indices]                       # (B, L, D)
+    return rows.astype(jnp.float32).sum(axis=1).astype(table.dtype)
+
+
+def sparse_lengths_sum(table: jax.Array, indices: jax.Array,
+                       offsets: jax.Array) -> jax.Array:
+    """Ragged SparseLengthsSum (paper Fig. 2): offsets (B+1,), indices (L,)."""
+    n_bags = offsets.shape[0] - 1
+    segment_ids = jnp.searchsorted(offsets[1:], jnp.arange(indices.shape[0]),
+                                   side="right")
+    rows = table[indices].astype(jnp.float32)
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+    return out.astype(table.dtype)
+
+
+def interaction(x: jax.Array) -> jax.Array:
+    """Pairwise dot products: x (B, F, D) -> (B, F, F) = X X^T per sample."""
+    out = jnp.einsum("bfd,bgd->bfg", x, x,
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def interaction_tril(x: jax.Array) -> jax.Array:
+    """DLRM feature interaction output: lower triangle (offset -1) flattened."""
+    z = interaction(x)
+    f = x.shape[1]
+    li, lj = jnp.tril_indices(f, k=-1)
+    return z[:, li, lj]
+
+
+def mlp(x: jax.Array, ws, bs, act=jax.nn.relu) -> jax.Array:
+    """Reference MLP: relu between layers, last layer linear."""
+    h = x
+    for i, (w, b) in enumerate(zip(ws, bs)):
+        h = gemm(h, w) + b
+        if i < len(ws) - 1:
+            h = act(h)
+    return h

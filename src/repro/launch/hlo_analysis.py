@@ -1,0 +1,400 @@
+"""Post-compile HLO analysis: trip-count-aware flops / bytes / collectives.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE — a 61-layer
+scanned transformer reports ~1/61 of its real flops (verified empirically).
+The roofline would be garbage. This module re-derives the three roofline
+inputs from ``compiled.as_text()`` with loop trip counts multiplied through:
+
+  * flops       — 2 * |result| * contraction_size for every ``dot`` op
+                  (CPU/TPU HLO keeps dots top-level; conv-free models here);
+  * bytes       — Σ (result + operand bytes) over memory-touching top-level
+                  ops (fusions, dots, copies, slices, collectives, ...);
+                  zero-copy ops (bitcast, get-tuple-element, parameter,
+                  tuple, while plumbing) excluded;
+  * collectives — result bytes of all-gather / all-reduce / reduce-scatter /
+                  all-to-all / collective-permute, by kind.
+
+Trip counts are read from each while condition's largest s32 constant.
+Nested loops (layer scan x kv-chunk scan) multiply recursively. Fusion /
+call / conditional edges are traversed with trip 1 (dots inside count;
+fusion-internal bytes do not — the fusion op itself accounts its traffic).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops that do not touch memory themselves
+_ZERO_COPY = {"parameter", "constant", "tuple", "get-tuple-element",
+              "bitcast", "while", "conditional", "call", "after-all",
+              "partition-id", "replica-id", "iota", "bitcast-convert"}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# result type is a tuple "(... /*index=3*/ ...)" (no nested parens) or a
+# plain "f32[16,24]{1,0}" token
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+                     r"(\([^)]*\)|[\w\[\]\{\},]+)\s*([\w\-]+)\(")
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_WHILE_RE = re.compile(
+    r"while\(.*?condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_OPERANDS_RE = re.compile(r"\(%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    elems = 0
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dtype]
+    return elems, total
+
+
+def _dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class _Comp:
+    __slots__ = ("flops", "bytes", "coll", "edges")
+
+    def __init__(self):
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.coll: Dict[str, float] = defaultdict(float)
+        self.edges: List[Tuple[str, str]] = []   # (kind, comp or cond name)
+
+
+def _parse(hlo_text: str):
+    comps: Dict[str, List[str]] = {}
+    order: List[str] = []
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = _COMP_HEADER_RE.match(ls)
+        if m and ls.endswith("{"):
+            cur = m.group(2)
+            comps[cur] = []
+            order.append(cur)
+            if m.group(1):
+                entry = cur
+        elif cur is not None and ls and ls != "}":
+            comps[cur].append(ls)
+    return comps, entry
+
+
+def analyze(hlo_text: str) -> Dict[str, object]:
+    comps_lines, entry = _parse(hlo_text)
+    comps: Dict[str, _Comp] = {}
+    trip_counts: Dict[str, int] = {}
+
+    for name, lines in comps_lines.items():
+        c = _Comp()
+        symbols: Dict[str, str] = {}
+        consts: List[int] = []
+        # first pass: symbol table (var -> result type)
+        for ls in lines:
+            dm = _DEF_RE.match(ls)
+            if dm:
+                symbols[dm.group(1)] = dm.group(2)
+        for ls in lines:
+            consts.extend(int(x) for x in _CONST_RE.findall(ls))
+            dm = _DEF_RE.match(ls)
+            if not dm:
+                continue
+            var, rtype, op = dm.group(1), dm.group(2), dm.group(3)
+            _, rbytes = _shape_elems_bytes(rtype)
+            relems, _ = _shape_elems_bytes(rtype)
+
+            # --- edges to other computations ---
+            wm = _WHILE_RE.search(ls)
+            if wm:
+                c.edges.append(("while", wm.group(2) + "|" + wm.group(1)))
+            else:
+                for cm in _CALLS_RE.findall(ls):
+                    c.edges.append(("call", cm))
+
+            # --- collectives ---
+            base_op = re.sub(r"-(start|done)$", "", op)
+            if base_op in COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                c.coll[base_op] += rbytes
+                c.bytes += rbytes * 2
+                continue
+
+            # --- flops: dot ops ---
+            if op == "dot":
+                contract = 1
+                lm = _LHS_CONTRACT_RE.search(ls)
+                om = _OPERANDS_RE.search(ls[ls.index("dot("):])
+                if lm and om:
+                    lhs_name = om.group(1).split(",")[0].strip().lstrip("%")
+                    lhs_type = symbols.get(lhs_name)
+                    ldims = _dims(lhs_type) if lhs_type else None
+                    if ldims:
+                        for i in lm.group(1).split(","):
+                            if i:
+                                idx = int(i)
+                                if idx < len(ldims):
+                                    contract *= ldims[idx]
+                c.flops += 2.0 * relems * contract
+                c.bytes += rbytes
+                om2 = _OPERANDS_RE.search(ls[ls.index("dot("):])
+                if om2:
+                    for nm in om2.group(1).split(","):
+                        t = symbols.get(nm.strip().lstrip("%"))
+                        if t:
+                            c.bytes += _shape_elems_bytes(t)[1]
+                continue
+
+            # --- bytes: memory-touching ops ---
+            if op in _ZERO_COPY:
+                continue
+
+            def _operand_bytes() -> List[int]:
+                paren = ls.find(op + "(")
+                if paren < 0:
+                    return []
+                om = _OPERANDS_RE.search(ls[paren:])
+                if not om:
+                    return []
+                out = []
+                for nm in om.group(1).split(","):
+                    t = symbols.get(nm.strip().lstrip("%"))
+                    out.append(_shape_elems_bytes(t)[1] if t else 0)
+                return out
+
+            if op in ("dynamic-slice", "slice", "gather"):
+                # reads only the sliced region (~= result), writes result
+                c.bytes += 2 * rbytes
+            elif op == "dynamic-update-slice":
+                # in-place: touches only the updated region (operand 1)
+                ob = _operand_bytes()
+                upd = ob[1] if len(ob) > 1 else rbytes
+                c.bytes += 2 * upd
+            elif op == "fusion" and ("dynamic-update-slice" in var
+                                     or "dynamic_update_slice" in var):
+                # in-place update fusion: full-buffer operand isn't traffic
+                ob = _operand_bytes()
+                big = max(ob) if ob else 0
+                c.bytes += 2 * sum(b for b in ob if b != big) or 2 * rbytes
+            elif op == "fusion" and ("dynamic-slice" in var
+                                     or "dynamic_slice" in var
+                                     or var.startswith("slice")):
+                # slice-reading fusion: reads ~result-sized region
+                c.bytes += 2 * rbytes
+            elif op == "scatter":
+                ob = _operand_bytes()
+                upd = ob[2] if len(ob) > 2 else rbytes
+                c.bytes += 2 * upd
+            else:
+                c.bytes += rbytes + sum(_operand_bytes())
+        if consts:
+            trip_counts[name] = max(consts)
+        comps[name] = c
+
+    memo: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
+
+    def totals(name: str, stack) -> Tuple[float, float, Dict[str, float]]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return 0.0, 0.0, {}
+        c = comps[name]
+        f, b = c.flops, c.bytes
+        coll = dict(c.coll)
+        for kind, ref in c.edges:
+            if kind == "while":
+                body, cond = ref.split("|")
+                trips = trip_counts.get(cond, 1)
+                sf, sb, sc = totals(body, stack | {name})
+                cf, cb, cc = totals(cond, stack | {name})
+                f += (sf + cf) * trips
+                b += (sb + cb) * trips
+                for k, v in sc.items():
+                    coll[k] = coll.get(k, 0.0) + v * trips
+            else:
+                sf, sb, sc = totals(ref, stack | {name})
+                f += sf
+                # fusion-internal bytes already accounted at the fusion op
+                for k, v in sc.items():
+                    coll[k] = coll.get(k, 0.0) + v
+        memo[name] = (f, b, coll)
+        return memo[name]
+
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collectives": {"total": 0.0}}
+    f, b, coll = totals(entry, frozenset())
+    out_coll = {k: float(v) for k, v in coll.items()}
+    out_coll["total"] = float(sum(coll.values()))
+    return {"flops": float(f), "bytes": float(b), "collectives": out_coll}
+
+
+def score_block_traffic(hlo_text: str,
+                        chunk_sizes=(256, 512, 800, 1024, 2048)) -> float:
+    """Per-device bytes attributable to materialized attention score blocks.
+
+    The XLA-fallback chunked attention writes/reads f32 (.., qc, kc) score
+    tensors through HBM; the flash Pallas kernel keeps them in VMEM. This
+    classifies score-block ops by shape (ndim>=4, both trailing dims chunk-
+    sized, f32) or chunk-square dots, trip-multiplied like `analyze` — the
+    measured quantity the kernel deletes (EXPERIMENTS §Perf)."""
+    comps_lines, entry = _parse(hlo_text)
+    trips: Dict[str, float] = defaultdict(float)
+
+    def walk(name, mult, stack):
+        if name in stack:
+            return
+        trips[name] += mult
+        for ls in comps_lines.get(name, []):
+            wm = _WHILE_RE.search(ls)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                consts = []
+                for l2 in comps_lines.get(cond, []):
+                    consts += [int(x) for x in _CONST_RE.findall(l2)]
+                t = max(consts) if consts else 1
+                walk(body, mult * t, stack | {name})
+
+    if entry is None:
+        return 0.0
+    walk(entry, 1.0, frozenset())
+
+    def _is_score(type_str: Optional[str], op: str = "fusion") -> bool:
+        if not type_str or not type_str.startswith(("f32", "bf16")):
+            return False
+        dims = _dims(type_str)
+        return bool(dims and len(dims) >= 2
+                    and dims[-1] in chunk_sizes and dims[-2] in chunk_sizes
+                    and (len(dims) >= 4 or op == "dot"))
+
+    total = 0.0
+    for name, lines in comps_lines.items():
+        t = trips.get(name, 0.0)
+        if not t:
+            continue
+        symbols: Dict[str, str] = {}
+        for ls in lines:
+            dm = _DEF_RE.match(ls)
+            if dm:
+                symbols[dm.group(1)] = dm.group(2)
+        for ls in lines:
+            dm = _DEF_RE.match(ls)
+            if not dm:
+                continue
+            _, rtype, op = dm.groups()
+            if op in _ZERO_COPY:
+                continue
+            # score-shaped results (writes)
+            if _is_score(rtype, op):
+                total += _shape_elems_bytes(rtype)[1] * t
+            # score-shaped operands (reads at the consumer)
+            paren = ls.find(op + "(")
+            if paren >= 0:
+                om = _OPERANDS_RE.search(ls[paren:])
+                if om:
+                    for nm in om.group(1).split(","):
+                        ot = symbols.get(nm.strip().lstrip("%"))
+                        if _is_score(ot, "operand"):
+                            total += _shape_elems_bytes(ot)[1] * t
+    return float(total)
+
+
+def convert_traffic(hlo_text: str) -> float:
+    """Per-device bytes spent on pure dtype-conversion ops (bf16<->f32).
+
+    XLA-CPU has no native bf16 FMA: every bf16 dot operand is converted to
+    f32 through memory (sometimes hoisted to whole-buffer copies). The TPU
+    MXU consumes bf16 directly, so this traffic exists only in the dry-run
+    backend. Classified as: standalone `convert` ops, or fusions named
+    wrapped_convert / convert_* whose result is f32/bf16; counted
+    (result + operands resolvable) x loop trips.
+    """
+    comps_lines, entry = _parse(hlo_text)
+    trips: Dict[str, float] = defaultdict(float)
+
+    def walk(name, mult, stack):
+        if name in stack:
+            return
+        trips[name] += mult
+        for ls in comps_lines.get(name, []):
+            wm = _WHILE_RE.search(ls)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                consts = []
+                for l2 in comps_lines.get(cond, []):
+                    consts += [int(x) for x in _CONST_RE.findall(l2)]
+                walk(body, mult * (max(consts) if consts else 1),
+                     stack | {name})
+
+    if entry is None:
+        return 0.0
+    walk(entry, 1.0, frozenset())
+    total = 0.0
+    for name, lines in comps_lines.items():
+        t = trips.get(name, 0.0)
+        if not t:
+            continue
+        symbols: Dict[str, str] = {}
+        for ls in lines:
+            dm = _DEF_RE.match(ls)
+            if dm:
+                symbols[dm.group(1)] = dm.group(2)
+        for ls in lines:
+            dm = _DEF_RE.match(ls)
+            if not dm:
+                continue
+            var, rtype, op = dm.groups()
+            is_conv = (op == "convert"
+                       or (op == "fusion"
+                           and ("wrapped_convert" in var
+                                or var.startswith("convert"))))
+            if not is_conv:
+                continue
+            _, rb = _shape_elems_bytes(rtype)
+            b = rb
+            paren = ls.find(op + "(")
+            if paren >= 0:
+                om = _OPERANDS_RE.search(ls[paren:])
+                if om:
+                    for nm in om.group(1).split(","):
+                        tpd = symbols.get(nm.strip().lstrip("%"))
+                        if tpd:
+                            b += _shape_elems_bytes(tpd)[1]
+            total += b * t
+    return float(total)
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, float]:
+    """Back-compat wrapper: collective bytes by kind (+ total)."""
+    return analyze(hlo_text)["collectives"]
+
+
+def parse_flops_bytes(cost_analysis: dict) -> Tuple[float, float]:
+    """Raw XLA numbers (while bodies counted once — kept for reference)."""
+    return (float(cost_analysis.get("flops", 0.0)),
+            float(cost_analysis.get("bytes accessed", 0.0)))

@@ -1,0 +1,119 @@
+"""Roofline model for TPU v5e (the TARGET hardware; container is CPU-only).
+
+Terms are *per-device seconds* derived from the compiled dry-run artifact
+(cost_analysis / memory_analysis / HLO collective parse — all per-device):
+
+    t_compute    = HLO_flops / PEAK_FLOPS
+    t_memory     = HLO_bytes_accessed / HBM_BW
+    t_collective = collective_bytes / ICI_BW
+
+MODEL_FLOPS uses the 6·N·D convention (2·N·D for inference), with N the
+matmul-visible parameter count: embedding-table lookups are excluded, the
+LM head is included (even when tied).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+# TPU v5e per-chip constants (assignment-specified)
+PEAK_FLOPS = 197e12       # bf16 FLOP/s
+HBM_BW = 819e9            # B/s
+ICI_BW = 50e9             # B/s per link
+
+HBM_BYTES = 16 * 1024**3  # v5e HBM capacity
+
+
+@dataclass
+class RooflineReport:
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float        # MODEL_FLOPS / (HLO_flops * chips)
+    roofline_fraction: float   # t_dominant==compute ? t_c/sum : t_c/max
+
+    def as_dict(self) -> Dict:
+        return self.__dict__.copy()
+
+
+def terms(flops_per_dev: float, bytes_per_dev: float,
+          coll_bytes_per_dev: float) -> Tuple[float, float, float]:
+    return (flops_per_dev / PEAK_FLOPS,
+            bytes_per_dev / HBM_BW,
+            coll_bytes_per_dev / ICI_BW)
+
+
+def analyze(flops_per_dev: float, bytes_per_dev: float,
+            coll_bytes_per_dev: float, model_flops: float,
+            chips: int) -> RooflineReport:
+    tc, tm, tl = terms(flops_per_dev, bytes_per_dev, coll_bytes_per_dev)
+    pairs = {"compute": tc, "memory": tm, "collective": tl}
+    dominant = max(pairs, key=pairs.get)
+    hlo_total = flops_per_dev * chips
+    useful = model_flops / hlo_total if hlo_total else 0.0
+    # fraction of the dominant-term bound actually spent on useful math:
+    # ideal time = model_flops/(chips*peak); achievable time >= max(term)
+    ideal = model_flops / (chips * PEAK_FLOPS)
+    bound = max(tc, tm, tl)
+    frac = ideal / bound if bound > 0 else 0.0
+    return RooflineReport(tc, tm, tl, dominant, model_flops,
+                          flops_per_dev, useful, frac)
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (6·N·D convention)
+# ---------------------------------------------------------------------------
+
+def _walk(tree, path=()):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _walk(v, path + (k,))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _walk(v, path + (str(i),))
+    else:
+        yield path, tree
+
+
+def count_params(shapes_tree, cfg) -> Tuple[float, float]:
+    """(N_total_matmul, N_active_matmul) from a ShapeDtypeStruct tree.
+
+    Excludes the embedding gather table; for MoE archs expert weights count
+    at top_k/n_experts utilization in N_active.
+    """
+    import numpy as np
+    total = 0.0
+    active = 0.0
+    for path, leaf in _walk(shapes_tree):
+        n = float(np.prod(leaf.shape)) if leaf.shape else 1.0
+        joined = "/".join(path)
+        if "embed" in joined:
+            continue                      # lookup, not matmul
+        total += n
+        if "moe" in joined and path[-1] in ("wg", "wu", "wd"):
+            active += n * cfg.moe.top_k / cfg.moe.n_experts
+        else:
+            active += n
+    # tied LM head: add D*V once (matmul exists even though param is shared)
+    if getattr(cfg, "tie_embeddings", False):
+        from repro.models.embedding import padded_vocab
+        head = cfg.d_model * padded_vocab(cfg.vocab_size)
+        total += head
+        active += head
+    return total, active
+
+
+def model_flops(cfg, shape, shapes_tree) -> float:
+    """6·N·D for training, 2·N·D for inference steps."""
+    _, n_active = count_params(shapes_tree, cfg)
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * d
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,95 @@
+"""Serving launcher: batched DLRM inference (the paper's deployment) or LM
+decode via the continuous-batching engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch dlrm1 --requests 64
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.dlrm import DLRM_CONFIGS, DLRM_SMOKE
+from repro.configs.registry import ARCHS, SMOKE_ARCHS
+from repro.core import dlrm as dlrm_mod
+from repro.core.hybrid import make_pipelined_serve_step
+from repro.data import DLRMSynthetic
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.serving import Batcher, DecodeEngine, Request
+
+
+def serve_dlrm(args) -> None:
+    cfg = DLRM_SMOKE if args.smoke else DLRM_CONFIGS[args.arch]
+    mesh = None if args.mesh == "none" else make_production_mesh(
+        multi_pod=(args.mesh == "multipod"))
+    params = dlrm_mod.init(jax.random.PRNGKey(0), cfg,
+                           mesh.shape["model"] if mesh else 1)
+    serve = jax.jit(make_pipelined_serve_step(cfg, args.microbatches, mesh)
+                    if args.pipelined else dlrm_mod.make_serve_step(cfg, mesh))
+    data = DLRMSynthetic(cfg, seed=1)
+    lat = []
+    for _ in range(args.requests // args.batch_size):
+        b = data.batch(args.batch_size)
+        batch = {"dense": jnp.asarray(b["dense"]),
+                 "indices": jnp.asarray(b["indices"])}
+        t0 = time.time()
+        probs = serve(params, batch)
+        probs.block_until_ready()
+        lat.append(time.time() - t0)
+    arr = np.array(lat[1:] or lat)   # drop compile step
+    print(f"dlrm serve: {args.requests} reqs, batch {args.batch_size}, "
+          f"p50 {np.percentile(arr, 50)*1e3:.2f} ms "
+          f"p99 {np.percentile(arr, 99)*1e3:.2f} ms")
+
+
+def serve_lm(args) -> None:
+    cfg = (SMOKE_ARCHS if args.smoke else ARCHS)[args.arch]
+    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    engine = DecodeEngine(cfg, params, n_slots=args.batch_size,
+                          max_len=args.max_len)
+    batcher = Batcher(max_batch=args.batch_size)
+    rng = np.random.RandomState(0)
+    for rid in range(args.requests):
+        batcher.submit(Request(
+            rid=rid,
+            prompt=rng.randint(0, cfg.vocab_size, size=(args.prompt_len,))
+            .astype(np.int32),
+            max_new_tokens=args.new_tokens))
+    while len(engine.latencies) < args.requests:
+        if engine.idle():
+            wave = batcher.take()
+            if not wave:
+                break
+            engine.admit(wave)
+        engine.step()
+    print(f"lm serve stats: {engine.stats()}")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="dlrm1")
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--mesh", default="none",
+                   choices=("none", "pod", "multipod"))
+    p.add_argument("--requests", type=int, default=64)
+    p.add_argument("--batch-size", type=int, default=8)
+    p.add_argument("--pipelined", action="store_true",
+                   help="DLRM: overlap sparse/dense via microbatch pipeline")
+    p.add_argument("--microbatches", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=8)
+    p.add_argument("--new-tokens", type=int, default=8)
+    p.add_argument("--max-len", type=int, default=128)
+    args = p.parse_args()
+    if args.arch.startswith("dlrm"):
+        serve_dlrm(args)
+    else:
+        serve_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,237 @@
+"""Unified model API over the architecture zoo.
+
+Everything the launcher, dry-run, tests and benchmarks need:
+
+    init(key, cfg)                  -> (params, logical spec tree)
+    loss(params, cfg, batch)        -> scalar
+    make_train_step(cfg, ...)       -> (optimizer, step fn)
+    prefill / decode_step / init_cache
+    input_specs(cfg, shape, mesh)   -> ShapeDtypeStruct batch stand-ins
+    train_state_specs(...)          -> shardings for params + opt state
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import (active_mesh, batch_axes, resolve,
+                                        use_mesh)
+from repro.models import encdec, transformer
+from repro.optim import optimizers as optim_lib
+
+
+def _impl(cfg: ModelConfig):
+    return encdec if cfg.is_encdec else transformer
+
+
+def init(key: jax.Array, cfg: ModelConfig):
+    return _impl(cfg).init(key, cfg)
+
+
+def forward(params, cfg: ModelConfig, batch):
+    return _impl(cfg).forward(params, cfg, batch)
+
+
+def loss(params, cfg: ModelConfig, batch, remat: bool = True):
+    return _impl(cfg).loss_fn(params, cfg, batch, remat=remat)
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int):
+    return _impl(cfg).prefill(params, cfg, batch, max_len)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    return _impl(cfg).decode_step(params, cfg, cache, tokens, pos)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    return _impl(cfg).init_cache(cfg, batch, max_len, dtype)
+
+
+def default_optimizer(cfg: ModelConfig) -> Tuple[str, Any]:
+    """Adafactor for the >100B MoE archs (state must stay O(P/d)), else
+    AdamW; both wrapped layerwise so update temporaries are bounded to one
+    layer of the stacked params. Returns (name, optimizer)."""
+    if cfg.moe is not None and cfg.d_model >= 4096:
+        return "adafactor", optim_lib.layerwise(optim_lib.adafactor(1e-4))
+    return "adamw", optim_lib.layerwise(optim_lib.adamw(3e-4))
+
+
+def make_train_step(cfg: ModelConfig, optimizer=None,
+                    mesh: Optional[jax.sharding.Mesh] = None,
+                    grad_clip: float = 1.0, microbatches: int = 1):
+    """Returns (opt_name, optimizer, train_step).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+    microbatches > 1 = gradient accumulation: the global batch is split and
+    scanned, so activation memory scales 1/n while the (FSDP-sharded) grad
+    accumulator costs one param-sized buffer — the standard fit-the-big-MoE
+    lever (kimi train_4k cannot hold a full 1M-token step's activations).
+    """
+    if optimizer is None:
+        opt_name, opt = default_optimizer(cfg)
+    else:
+        opt_name, opt = optimizer
+
+    def train_step(params, opt_state, batch):
+        with use_mesh(mesh):
+            if microbatches == 1:
+                loss_val, grads = jax.value_and_grad(loss)(params, cfg,
+                                                           batch)
+            else:
+                mb_batch = jax.tree_util.tree_map(
+                    lambda x: x.reshape((microbatches,
+                                         x.shape[0] // microbatches)
+                                        + x.shape[1:]), batch)
+
+                def body(acc, mb):
+                    l, g = jax.value_and_grad(loss)(params, cfg, mb)
+                    acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                    return acc, l
+
+                zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+                grads, losses = jax.lax.scan(body, zeros, mb_batch)
+                grads = jax.tree_util.tree_map(
+                    lambda g: g / microbatches, grads)
+                loss_val = losses.mean()
+            grads, gnorm = optim_lib.clip_by_global_norm(grads, grad_clip)
+            new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, {"loss": loss_val, "grad_norm": gnorm}
+
+    return opt_name, opt, train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int,
+                      mesh: Optional[jax.sharding.Mesh] = None):
+    def prefill_step(params, batch):
+        with use_mesh(mesh):
+            return prefill(params, cfg, batch, max_len)
+    return prefill_step
+
+
+def make_decode_fn(cfg: ModelConfig,
+                   mesh: Optional[jax.sharding.Mesh] = None):
+    def serve_step(params, cache, batch):
+        with use_mesh(mesh):
+            return decode_step(params, cfg, cache, batch["tokens"],
+                               batch["pos"])
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Dry-run stand-ins
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh, logical):
+    sharding = None
+    if mesh is not None:
+        sharding = jax.sharding.NamedSharding(mesh, resolve(mesh, logical))
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                mesh=None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    Shapes follow the assignment: LM shapes are seq_len x global_batch;
+    decode shapes are one new token against a seq_len cache. Modality
+    frontends are stubs: precomputed patch/frame embeddings.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    small_batch = mesh is not None and b < _n_batch_shards(mesh)
+    bspec = (None,) if small_batch else ("batch",)
+
+    if shape.kind == "decode":
+        return {"tokens": _sds((b,), jnp.int32, mesh, bspec),
+                "pos": _sds((), jnp.int32, mesh, ())}
+
+    if cfg.is_encdec:
+        return {
+            "frames": _sds((b, cfg.enc_memory_len, cfg.d_model),
+                           jnp.bfloat16, mesh, bspec + (None, None)),
+            "tokens": _sds((b, s), jnp.int32, mesh, bspec + (None,)),
+        }
+    if cfg.family == "vlm":
+        p = cfg.n_frontend_tokens
+        return {
+            "patches": _sds((b, p, cfg.d_model), jnp.bfloat16, mesh,
+                            bspec + (None, None)),
+            "tokens": _sds((b, s - p), jnp.int32, mesh, bspec + (None,)),
+        }
+    return {"tokens": _sds((b, s), jnp.int32, mesh, bspec + (None,))}
+
+
+def _n_batch_shards(mesh) -> int:
+    import numpy as np
+    ba = batch_axes(mesh)
+    return int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+
+
+def _attach(mesh, spec_tree, shape_tree):
+    """Attach shardings (from logical specs) to a ShapeDtypeStruct tree."""
+    def leaf(spec, sds):
+        return _sds(sds.shape, sds.dtype, mesh, spec)
+    return jax.tree_util.tree_map(
+        leaf, spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            v is None or isinstance(v, str) for v in x))
+
+
+def train_state_specs(cfg: ModelConfig, opt_name: str, opt, mesh):
+    """(params SDS tree, opt-state SDS tree, logical spec trees).
+
+    Built via eval_shape — no parameter allocation (dry-run safe).
+    """
+    cell = {}
+
+    def _init_values(k):
+        vals, specs = init(k, cfg)
+        cell["specs"] = specs          # static side-channel (no tracing)
+        return vals
+
+    params_shapes = jax.eval_shape(_init_values,
+                                   jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = cell["specs"]
+    params_sds = _attach(mesh, specs, params_shapes)
+
+    shapes_tree = jax.tree_util.tree_map(lambda x: x.shape, params_shapes)
+    opt_specs = optim_lib.state_logical_specs(opt_name, specs, shapes_tree)
+    opt_shapes = jax.eval_shape(opt.init, params_shapes)
+    opt_sds = _attach(mesh, opt_specs, opt_shapes)
+    return params_sds, opt_sds, specs
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, mesh):
+    """Decode-cache ShapeDtypeStructs with batch/model sharding attached."""
+    shapes = jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, max_len))
+
+    small_batch = mesh is not None and batch < _n_batch_shards(mesh)
+    tp = mesh.shape["model"] if (mesh is not None
+                                 and "model" in mesh.axis_names) else 1
+
+    def leaf(sds):
+        # Dim order (L?, B, S, ...). Shard batch over the DP axes and the
+        # cache *position* dim over 'model' (split-KV decode: each model
+        # shard scores its cache slice, psum combines — without this a
+        # 32k x 128 cache replicates 16x and decode becomes all-gather
+        # bound; measured on qwen decode_32k: 139 GB collective/token).
+        logical = [None] * len(sds.shape)
+        for i, d in enumerate(sds.shape):
+            if d == batch and i <= 1 and not small_batch:
+                logical[i] = "batch"
+                break
+        for i, d in enumerate(sds.shape):
+            if d == max_len and logical[i] is None and d % max(tp, 1) == 0:
+                logical[i] = "model"
+                break
+        return _sds(sds.shape, sds.dtype, mesh, tuple(logical))
+
+    return jax.tree_util.tree_map(leaf, shapes)

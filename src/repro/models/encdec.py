@@ -1,0 +1,226 @@
+"""Encoder-decoder assembly (seamless-m4t): stub audio frontend -> encoder
+self-attention stack -> decoder with causal self-attention + cross-attention.
+
+Per the assignment the modality frontend is a STUB: the encoder consumes
+precomputed frame embeddings (B, S_src, d_model) from ``input_specs()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import embedding as emb
+from repro.models import layers
+from repro.models.params import Builder, split, stack_layers
+
+
+def _enc_attn_cfg(cfg: ModelConfig):
+    return dataclasses.replace(cfg.attention, causal=False)
+
+
+def _init_enc_block(b: Builder, cfg: ModelConfig):
+    return {"ln1": layers.init_norm(b, cfg.d_model, cfg.norm),
+            "attn": layers.init_attention(b, cfg.attention, cfg.d_model),
+            "ln2": layers.init_norm(b, cfg.d_model, cfg.norm),
+            "mlp": layers.init_mlp(b, cfg.d_model, cfg.d_ff, cfg.act)}
+
+
+def _init_dec_block(b: Builder, cfg: ModelConfig):
+    return {"ln1": layers.init_norm(b, cfg.d_model, cfg.norm),
+            "self": layers.init_attention(b, cfg.attention, cfg.d_model),
+            "lnx": layers.init_norm(b, cfg.d_model, cfg.norm),
+            "cross": layers.init_attention(b, cfg.attention, cfg.d_model),
+            "ln2": layers.init_norm(b, cfg.d_model, cfg.norm),
+            "mlp": layers.init_mlp(b, cfg.d_model, cfg.d_ff, cfg.act)}
+
+
+def init(key: jax.Array, cfg: ModelConfig):
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    b = Builder(key, dtype=dtype)
+    tree = {
+        "embed": emb.init_table(b, cfg.vocab_size, cfg.d_model),
+        "enc": stack_layers([_init_enc_block(b, cfg)
+                             for _ in range(cfg.enc_layers)]),
+        "enc_ln_f": layers.init_norm(b, cfg.d_model, cfg.norm),
+        "dec": stack_layers([_init_dec_block(b, cfg)
+                             for _ in range(cfg.dec_layers)]),
+        "ln_f": layers.init_norm(b, cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        tree["unembed"] = emb.init_unembed(b, cfg.vocab_size, cfg.d_model)
+    return split(tree)
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array,
+           remat: bool = True) -> jax.Array:
+    """frames: (B, S_src, D) stub embeddings -> encoder memory."""
+    x = constrain(frames, "batch", None, None)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    acfg = _enc_attn_cfg(cfg)
+
+    x = constrain(x, "batch", "model", None)          # SP residual stream
+
+    def body(x, p_l):
+        h = layers.apply_norm(p_l["ln1"], x, cfg.norm)
+        h = constrain(h, "batch", None, None)
+        a = layers.attention_full(p_l["attn"], acfg, h, positions,
+                                  cfg.d_model)
+        x = x + constrain(a, "batch", "model", None)
+        h = layers.apply_norm(p_l["ln2"], x, cfg.norm)
+        h = constrain(h, "batch", None, None)
+        y = layers.apply_mlp(p_l["mlp"], h, cfg.act)
+        return x + constrain(y, "batch", "model", None), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc"])
+    x = constrain(x, "batch", None, None)
+    return layers.apply_norm(params["enc_ln_f"], x, cfg.norm)
+
+
+def _dec_block_full(p, cfg: ModelConfig, x, positions, memory):
+    h = layers.apply_norm(p["ln1"], x, cfg.norm)
+    h = constrain(h, "batch", None, None)
+    a = layers.attention_full(p["self"], cfg.attention, h, positions,
+                              cfg.d_model)
+    x = x + constrain(a, "batch", "model", None)
+    h = layers.apply_norm(p["lnx"], x, cfg.norm)
+    h = constrain(h, "batch", None, None)
+    kv = layers.memory_kv(p["cross"], cfg.attention, memory, cfg.d_model)
+    a = layers.cross_attention_full(p["cross"], cfg.attention, h, kv,
+                                    cfg.d_model)
+    x = x + constrain(a, "batch", "model", None)
+    h = layers.apply_norm(p["ln2"], x, cfg.norm)
+    h = constrain(h, "batch", None, None)
+    y = layers.apply_mlp(p["mlp"], h, cfg.act)
+    return x + constrain(y, "batch", "model", None)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            remat: bool = True):
+    """batch: {'frames': (B,S_src,D), 'tokens': (B,S_tgt)} -> (logits, 0.0)."""
+    memory = encode(params, cfg, batch["frames"], remat)
+    x = emb.embed_tokens(params["embed"], batch["tokens"])
+    x = constrain(x, "batch", "model", None)          # SP residual stream
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, p_l):
+        return _dec_block_full(p_l, cfg, x, positions, memory), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec"])
+    x = constrain(x, "batch", None, None)
+    x = layers.apply_norm(params["ln_f"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = emb.lm_head(x, params["embed"], cfg.vocab_size)
+    else:
+        logits = emb.lm_head_untied(x, params["unembed"], cfg.vocab_size)
+    return logits, 0.0
+
+
+def loss_fn(params, cfg: ModelConfig, batch, remat: bool = True):
+    logits, _ = forward(params, cfg, batch, remat)
+    labels = batch["tokens"][:, 1:]
+    mask = jnp.ones(labels.shape, jnp.float32)
+    return emb.cross_entropy(logits[:, :-1], labels, mask)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Self-attn caches (max_len) + cross K/V (enc_memory_len) per layer."""
+    hd = cfg.attention.resolved_head_dim(cfg.d_model)
+    kh = cfg.attention.n_kv_heads
+
+    def stack(trees):
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+    self_caches = stack([
+        layers.init_kv_cache(cfg.attention, cfg.d_model, batch, max_len,
+                             dtype) for _ in range(cfg.dec_layers)])
+    return {
+        "self": self_caches,
+        "cross_k": jnp.zeros((cfg.dec_layers, batch, cfg.enc_memory_len,
+                              kh, hd), dtype),
+        "cross_v": jnp.zeros((cfg.dec_layers, batch, cfg.enc_memory_len,
+                              kh, hd), dtype),
+    }
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int,
+            dtype=jnp.bfloat16, remat: bool = True):
+    """Encode + teacher-forced decoder pass building all caches."""
+    memory = encode(params, cfg, batch["frames"], remat)
+    x = emb.embed_tokens(params["embed"], batch["tokens"])
+    x = constrain(x, "batch", "model", None)          # SP residual stream
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, p_l):
+        h = layers.apply_norm(p_l["ln1"], x, cfg.norm)
+        h = constrain(h, "batch", None, None)
+        a, (k, v) = layers.attention_full(p_l["self"], cfg.attention, h,
+                                          positions, cfg.d_model,
+                                          return_kv=True)
+        x = x + constrain(a, "batch", "model", None)
+        entry = layers.cache_from_kv(cfg.attention, k, v, max_len, dtype)
+        h = layers.apply_norm(p_l["lnx"], x, cfg.norm)
+        h = constrain(h, "batch", None, None)
+        kv = layers.memory_kv(p_l["cross"], cfg.attention, memory,
+                              cfg.d_model)
+        a = layers.cross_attention_full(p_l["cross"], cfg.attention, h,
+                                        kv, cfg.d_model)
+        x = x + constrain(a, "batch", "model", None)
+        h = layers.apply_norm(p_l["ln2"], x, cfg.norm)
+        h = constrain(h, "batch", None, None)
+        y = layers.apply_mlp(p_l["mlp"], h, cfg.act)
+        x = x + constrain(y, "batch", "model", None)
+        return x, (entry, kv[0].astype(dtype), kv[1].astype(dtype))
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, (entries, cross_k, cross_v) = jax.lax.scan(body_fn, x, params["dec"])
+    x = constrain(x, "batch", None, None)
+    x = layers.apply_norm(params["ln_f"], x[:, -1:], cfg.norm)
+    if cfg.tie_embeddings:
+        logits = emb.lm_head(x, params["embed"], cfg.vocab_size)
+    else:
+        logits = emb.lm_head_untied(x, params["unembed"], cfg.vocab_size)
+    cache = {"self": entries, "cross_k": cross_k, "cross_v": cross_v}
+    return logits[:, 0], cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens: jax.Array,
+                pos: jax.Array):
+    """One decoder token against self cache + fixed cross memory."""
+    x = emb.embed_tokens(params["embed"], tokens[:, None])
+
+    def body(x, xs):
+        p_l, c_l, ck, cv = xs
+        h = layers.apply_norm(p_l["ln1"], x, cfg.norm)
+        a, c_new = layers.attention_decode(p_l["self"], cfg.attention, h,
+                                           pos, c_l, cfg.d_model)
+        x = x + a
+        h = layers.apply_norm(p_l["lnx"], x, cfg.norm)
+        x = x + layers.cross_attention_decode(p_l["cross"], cfg.attention,
+                                              h, (ck, cv), cfg.d_model)
+        h = layers.apply_norm(p_l["ln2"], x, cfg.norm)
+        x = x + layers.apply_mlp(p_l["mlp"], h, cfg.act)
+        return x, c_new
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec"], cache["self"], cache["cross_k"],
+                  cache["cross_v"]))
+    x = layers.apply_norm(params["ln_f"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = emb.lm_head(x, params["embed"], cfg.vocab_size)
+    else:
+        logits = emb.lm_head_untied(x, params["unembed"], cfg.vocab_size)
+    return logits[:, 0], {"self": new_self, "cross_k": cache["cross_k"],
+                          "cross_v": cache["cross_v"]}

@@ -1,0 +1,406 @@
+"""Shared transformer building blocks (norms, RoPE, GQA attention, MLPs).
+
+Attention has three execution paths:
+  * direct — materializes (S, S) scores; used for short sequences;
+  * chunked — online-softmax over q/kv chunks (Rabe–Staats), memory
+    O(chunk^2); the default for long sequences, remat'd scan body;
+  * decode — one query token against a (possibly ring-buffered) KV cache.
+
+All activations carry logical sharding constraints ('batch' = every mesh axis
+but 'model'; heads/ffn sharded on 'model'). GSPMD handles non-divisible head
+counts by padding; shard_map paths (embedding, MoE) require exact divisibility
+and pad explicitly at init.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.distributed.sharding import constrain
+from repro.models.params import Builder
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(b: Builder, d: int, kind: str):
+    if kind == "rmsnorm":
+        return {"w": b.ones((d,), (None,), dtype=jnp.float32)}
+    return {"w": b.ones((d,), (None,), dtype=jnp.float32),
+            "b": b.zeros((d,), (None,), dtype=jnp.float32)}
+
+
+def apply_norm(p, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        scale = jax.lax.rsqrt(jnp.mean(jnp.square(x32), -1, keepdims=True) + eps)
+        return (x32 * scale * p["w"]).astype(x.dtype)
+    mu = x32.mean(-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), -1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * p["w"] + p["b"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                           # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP blocks
+# ---------------------------------------------------------------------------
+
+def init_mlp(b: Builder, d: int, dff: int, act: str):
+    if act in ("swiglu", "geglu"):
+        return {"wg": b.normal((d, dff), (None, "model")),
+                "wu": b.normal((d, dff), (None, "model")),
+                "wd": b.normal((dff, d), ("model", None))}
+    return {"wi": b.normal((d, dff), (None, "model")),
+            "wd": b.normal((dff, d), ("model", None))}
+
+
+def apply_mlp(p, x: jax.Array, act: str) -> jax.Array:
+    if act in ("swiglu", "geglu"):
+        gate_fn = jax.nn.silu if act == "swiglu" else jax.nn.gelu
+        g = gate_fn(x @ p["wg"]) * (x @ p["wu"])
+        g = constrain(g, "batch", None, "model")
+        return g @ p["wd"]
+    act_fn = jax.nn.gelu if act == "gelu" else jax.nn.relu
+    h = act_fn(x @ p["wi"])
+    h = constrain(h, "batch", None, "model")
+    return h @ p["wd"]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def init_attention(b: Builder, acfg: AttentionConfig, d: int):
+    hd = acfg.resolved_head_dim(d)
+    h, k = acfg.n_heads, acfg.n_kv_heads
+    p = {"wq": b.normal((d, h * hd), (None, "model")),
+         "wk": b.normal((d, k * hd), (None, "model")),
+         "wv": b.normal((d, k * hd), (None, "model")),
+         "wo": b.normal((h * hd, d), ("model", None))}
+    if acfg.qkv_bias:
+        p["bq"] = b.zeros((h * hd,), ("model",))
+        p["bk"] = b.zeros((k * hd,), ("model",))
+        p["bv"] = b.zeros((k * hd,), ("model",))
+    return p
+
+
+def head_constrain(x: jax.Array, n_heads: int, head_axis: int = 2):
+    """Shard the head dim over 'model' — with a measured policy.
+
+    A/B'd on the 512-dev dry-run (EXPERIMENTS.md §Perf):
+
+    * heads >= TP (q heads, 15..64 here): FORCE the constraint even when
+      uneven — padding waste is <= ceil/floor ~ 1.07-1.6x, and without it
+      GSPMD replicates attention across 'model' (smollm: 4x flops+bytes).
+    * heads < TP (kv heads 1..8 under TP=16): do NOT constrain — forcing a
+      padded 16-way form conflicts with GSPMD's natural [heads x head_dim]
+      split of the flat projection and triggers 'involuntary full
+      rematerialization' (arctic: ~1e13 collective bytes/step, 40x the
+      model's real traffic). Propagation keeps the split consistent.
+    """
+    from repro.distributed.sharding import active_mesh
+    mesh = active_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return x
+    # Measured boundary (TP=16): kv=8 forced -> involuntary-remat disaster
+    # (arctic, 40x traffic) because 8 divides 16 and GSPMD's natural [8,2]
+    # split must not be fought; q=15 / kv=5 propagated -> 4x flops+bytes
+    # (smollm) because no clean split exists and GSPMD replicates instead.
+    # Rule: propagate only the clean-division case (heads < TP dividing TP).
+    tp = mesh.shape["model"]
+    if n_heads < tp and tp % n_heads == 0:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = "batch"
+    spec[head_axis] = "model"
+    return constrain(x, *spec)
+
+
+def _project_qkv(p, acfg: AttentionConfig, x: jax.Array, d: int):
+    b_, s, _ = x.shape
+    hd = acfg.resolved_head_dim(d)
+    h, k = acfg.n_heads, acfg.n_kv_heads
+    q = constrain(x @ p["wq"], "batch", None, "model")   # flat: divisible
+    kk = constrain(x @ p["wk"], "batch", None, "model")
+    v = constrain(x @ p["wv"], "batch", None, "model")
+    if acfg.qkv_bias:
+        q, kk, v = q + p["bq"], kk + p["bk"], v + p["bv"]
+    q = head_constrain(q.reshape(b_, s, h, hd), h)
+    kk = head_constrain(kk.reshape(b_, s, k, hd), k)
+    v = head_constrain(v.reshape(b_, s, k, hd), k)
+    return q, kk, v
+
+
+def _mask(qpos, kpos, causal: bool, window: Optional[int]):
+    """qpos: (..., Sq), kpos: (..., Sk) -> bool (..., Sq, Sk); True=keep."""
+    m = jnp.ones(qpos.shape + kpos.shape[-1:], bool)
+    if causal:
+        m &= kpos[..., None, :] <= qpos[..., None]
+    if window is not None:
+        m &= kpos[..., None, :] > qpos[..., None] - window
+    return m
+
+
+def _sdpa_direct(q, k, v, qpos, kpos, causal, window):
+    """q: (B,Sq,K,G,h); k,v: (B,Sk,K,h)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqkgh,bckh->bkgqc", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = _mask(qpos, kpos, causal, window)              # (Sq, Sk)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bckh->bqkgh", p.astype(v.dtype), v)
+    return out
+
+
+def _sdpa_chunked(q, k, v, qpos, kpos, causal, window,
+                  q_chunk: int, kv_chunk: int):
+    """Online-softmax attention; same signature as _sdpa_direct."""
+    b_, sq, kh, g, hd = q.shape
+    hv = v.shape[-1]                      # v head dim may differ (MLA)
+    sk = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    assert sq % q_chunk == 0 and sk % kv_chunk == 0, (sq, sk)
+    scale = hd ** -0.5
+
+    q_r = q.reshape(b_, nq, q_chunk, kh, g, hd)
+    qpos_r = qpos.reshape(nq, q_chunk)
+    k_r = k.reshape(b_, nk, kv_chunk, kh, hd)
+    v_r = v.reshape(b_, nk, kv_chunk, kh, hv)
+    kpos_r = kpos.reshape(nk, kv_chunk)
+
+    def one_q_chunk(qc, qp):
+        # qc: (B, qc, K, G, h); qp: (qc,)
+        def kv_step(carry, xs):
+            acc, m, l = carry
+            kc, vc, kp = xs
+            s = jnp.einsum("bqkgh,bckh->bkgqc", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _mask(qp, kp, causal, window)
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bkgqc,bckh->bkgqh", p.astype(vc.dtype), vc)
+            acc_new = acc * corr[..., None] + pv.astype(jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b_, kh, g, q_chunk, hv), jnp.float32)
+        m0 = jnp.full((b_, kh, g, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b_, kh, g, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            jax.checkpoint(kv_step),
+            (acc0, m0, l0),
+            (k_r.swapaxes(0, 1), v_r.swapaxes(0, 1), kpos_r))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.einsum("bkgqh->bqkgh", out).astype(q.dtype)
+
+    outs = jax.lax.map(lambda xs: one_q_chunk(*xs),
+                       (q_r.swapaxes(0, 1), qpos_r))      # (nq, B, qc, K, G, hv)
+    return outs.swapaxes(0, 1).reshape(b_, sq, kh, g, hv)
+
+
+# Sequences at or beyond this length use the chunked path.
+CHUNKED_THRESHOLD = 2048
+Q_CHUNK = 1024
+KV_CHUNK = 1024
+
+
+def pick_chunk(s: int, target: int) -> int:
+    """Largest divisor of s not exceeding target (chunked-path block size)."""
+    for c in range(min(target, s), 0, -1):
+        if s % c == 0:
+            return c
+    return s
+
+
+def attention_full(p, acfg: AttentionConfig, x: jax.Array,
+                   positions: jax.Array, d: int, return_kv: bool = False):
+    """Full-sequence self-attention (train / prefill)."""
+    b_, s, _ = x.shape
+    hd = acfg.resolved_head_dim(d)
+    h, kh = acfg.n_heads, acfg.n_kv_heads
+    g = h // kh
+    q, k, v = _project_qkv(p, acfg, x, d)
+    q = rope(q, positions, acfg.rope_theta)
+    k = rope(k, positions, acfg.rope_theta)
+    from repro.kernels import ops as kops
+    if s >= CHUNKED_THRESHOLD and kops.get_impl() == "pallas":
+        # TPU: fused flash kernel — online-softmax state stays in VMEM,
+        # no O(S^2 H) score traffic through HBM (see kernels/flash_attention)
+        from repro.kernels.flash_attention import flash_attention_gqa
+        out = flash_attention_gqa(q, k, v, causal=acfg.causal,
+                                  window=acfg.window)
+    elif s >= CHUNKED_THRESHOLD:
+        qg = q.reshape(b_, s, kh, g, hd)
+        out = _sdpa_chunked(qg, k, v, positions, positions, acfg.causal,
+                            acfg.window, pick_chunk(s, Q_CHUNK),
+                            pick_chunk(s, KV_CHUNK))
+    else:
+        qg = q.reshape(b_, s, kh, g, hd)
+        out = _sdpa_direct(qg, k, v, positions, positions, acfg.causal,
+                           acfg.window)
+    out = out.reshape(b_, s, h * hd).astype(x.dtype)
+    out = constrain(out, "batch", None, "model")
+    out = out @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def cross_attention_full(p, acfg: AttentionConfig, x: jax.Array,
+                         memory_kv: Tuple[jax.Array, jax.Array],
+                         d: int) -> jax.Array:
+    """Cross-attention against precomputed (K, V) memory (enc-dec)."""
+    b_, s, _ = x.shape
+    hd = acfg.resolved_head_dim(d)
+    h, kh = acfg.n_heads, acfg.n_kv_heads
+    g = h // kh
+    q = (x @ p["wq"]).reshape(b_, s, h, hd)
+    if acfg.qkv_bias:
+        q = q + p["bq"].reshape(h, hd)
+    k, v = memory_kv
+    sk = k.shape[1]
+    qg = q.reshape(b_, s, kh, g, hd)
+    qpos = jnp.arange(s)
+    kpos = jnp.arange(sk)
+    if s >= CHUNKED_THRESHOLD:
+        out = _sdpa_chunked(qg, k, v, qpos, kpos, causal=False, window=None,
+                            q_chunk=pick_chunk(s, Q_CHUNK),
+                            kv_chunk=pick_chunk(sk, KV_CHUNK))
+    else:
+        out = _sdpa_direct(qg, k, v, qpos, kpos, causal=False, window=None)
+    out = out.reshape(b_, s, h * hd).astype(x.dtype)
+    return out @ p["wo"]
+
+
+def memory_kv(p, acfg: AttentionConfig, memory: jax.Array, d: int):
+    """Precompute cross-attention K/V from encoder output."""
+    b_, sk, _ = memory.shape
+    hd = acfg.resolved_head_dim(d)
+    kh = acfg.n_kv_heads
+    k = (memory @ p["wk"]).reshape(b_, sk, kh, hd)
+    v = (memory @ p["wv"]).reshape(b_, sk, kh, hd)
+    if acfg.qkv_bias:
+        k = k + p["bk"].reshape(kh, hd)
+        v = v + p["bv"].reshape(kh, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Decode (KV cache) path
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(acfg: AttentionConfig, d: int, batch: int, max_len: int,
+                  dtype=jnp.bfloat16, ring: bool = False):
+    """Cache pytree for one attention layer.
+
+    ring=True bounds the buffer at `window` slots (SWA long-context decode);
+    slot_pos records the absolute position stored in each slot (-1 = empty).
+    """
+    hd = acfg.resolved_head_dim(d)
+    kh = acfg.n_kv_heads
+    size = min(max_len, acfg.window) if (ring and acfg.window) else max_len
+    return {
+        "k": jnp.zeros((batch, size, kh, hd), dtype),
+        "v": jnp.zeros((batch, size, kh, hd), dtype),
+        "slot_pos": jnp.full((size,), -1, jnp.int32),
+    }
+
+
+def cache_from_kv(acfg: AttentionConfig, k: jax.Array, v: jax.Array,
+                  max_len: int, dtype=jnp.bfloat16, ring: bool = False):
+    """Build a decode cache from prefill K/V. k/v: (B, S, KV, hd)."""
+    b_, s, kh, hd = k.shape
+    size = min(max_len, acfg.window) if (ring and acfg.window) else max_len
+    cache = {"k": jnp.zeros((b_, size, kh, hd), dtype),
+             "v": jnp.zeros((b_, size, kh, hd), dtype),
+             "slot_pos": jnp.full((size,), -1, jnp.int32)}
+    keep = min(s, size)
+    positions = jnp.arange(s - keep, s)
+    slots = jnp.mod(positions, size)
+    cache["k"] = cache["k"].at[:, slots].set(k[:, -keep:].astype(dtype))
+    cache["v"] = cache["v"].at[:, slots].set(v[:, -keep:].astype(dtype))
+    cache["slot_pos"] = cache["slot_pos"].at[slots].set(positions)
+    return cache
+
+
+def attention_decode(p, acfg: AttentionConfig, x: jax.Array, pos: jax.Array,
+                     cache, d: int, cross_kv=None):
+    """One-token attention step. x: (B, 1, D); pos: scalar int32.
+
+    Returns (out (B,1,D), new_cache). Works for both linear caches
+    (size >= max position) and ring buffers (size == window).
+    """
+    b_, _, _ = x.shape
+    hd = acfg.resolved_head_dim(d)
+    h, kh = acfg.n_heads, acfg.n_kv_heads
+    g = h // kh
+    q, k_new, v_new = _project_qkv(p, acfg, x, d)
+    posb = jnp.full((b_, 1), pos)
+    q = rope(q, posb, acfg.rope_theta)
+    k_new = rope(k_new, posb, acfg.rope_theta)
+
+    size = cache["k"].shape[1]
+    slot = jnp.mod(pos, size)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    slot_pos = cache["slot_pos"].at[slot].set(pos)
+
+    qg = q.reshape(b_, 1, kh, g, hd)
+    scale = hd ** -0.5
+    s = jnp.einsum("bqkgh,bckh->bkgqc", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    keep = (slot_pos >= 0) & (slot_pos <= pos)
+    if acfg.window is not None:
+        keep &= slot_pos > pos - acfg.window
+    s = jnp.where(keep[None, None, None, None, :], s, -1e30)
+    prob = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bckh->bqkgh", prob.astype(v.dtype), v)
+    out = out.reshape(b_, 1, h * hd).astype(x.dtype)
+    out = out @ p["wo"]
+    return out, {"k": k, "v": v, "slot_pos": slot_pos}
+
+
+def cross_attention_decode(p, acfg: AttentionConfig, x: jax.Array,
+                           cross_kv, d: int):
+    """One-token cross-attention against fixed memory K/V."""
+    b_ = x.shape[0]
+    hd = acfg.resolved_head_dim(d)
+    h, kh = acfg.n_heads, acfg.n_kv_heads
+    g = h // kh
+    q = (x @ p["wq"]).reshape(b_, 1, h, hd)
+    if acfg.qkv_bias:
+        q = q + p["bq"].reshape(h, hd)
+    k, v = cross_kv
+    qg = q.reshape(b_, 1, kh, g, hd)
+    out = _sdpa_direct(qg, k, v, jnp.zeros((1,), jnp.int32),
+                       jnp.zeros((k.shape[1],), jnp.int32),
+                       causal=False, window=None)
+    out = out.reshape(b_, 1, h * hd).astype(x.dtype)
+    return out @ p["wo"]

@@ -1,0 +1,181 @@
+"""Multi-head latent attention (MiniCPM3 / DeepSeek-V2 family).
+
+Queries go through a low-rank bottleneck; keys/values are reconstructed from
+a compressed latent ``c_kv`` (kv_lora_rank) plus one shared RoPE key head.
+The decode cache stores only ``(c_kv, k_rope)`` — (256+32) floats/token here
+vs n_heads*(nope+v) = 5120 for an equivalent MHA cache.
+
+Two decode paths, numerically identical (tested):
+  * naive   — reconstruct K/V for the whole cache each step (baseline);
+  * absorbed — fold W_uk into the query and W_uv into the output so scores
+    and values are computed directly in the latent space; per-step cost drops
+    from O(S * r * H * (nope+v)) to O(S * H * (r + rope)). This is the §Perf
+    optimization for decode cells.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers
+from repro.models.params import Builder
+
+
+def init_mla(b: Builder, acfg: AttentionConfig, d: int):
+    m = acfg.mla
+    h = acfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": b.normal((d, m.q_lora_rank), (None, None)),
+        "q_norm": layers.init_norm(b, m.q_lora_rank, "rmsnorm"),
+        "wq_b": b.normal((m.q_lora_rank, h * qk), (None, "model")),
+        "wkv_a": b.normal((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                          (None, None)),
+        "kv_norm": layers.init_norm(b, m.kv_lora_rank, "rmsnorm"),
+        "wk_b": b.normal((m.kv_lora_rank, h * m.qk_nope_head_dim),
+                         (None, "model")),
+        "wv_b": b.normal((m.kv_lora_rank, h * m.v_head_dim),
+                         (None, "model")),
+        "wo": b.normal((h * m.v_head_dim, d), ("model", None)),
+    }
+
+
+def _latent(p, acfg: AttentionConfig, x: jax.Array):
+    """x (B,S,D) -> (c_kv normed (B,S,r), k_rope (B,S,1,rope))."""
+    m = acfg.mla
+    kv_a = x @ p["wkv_a"]
+    c_kv, k_rope = kv_a[..., :m.kv_lora_rank], kv_a[..., m.kv_lora_rank:]
+    c_kv = layers.apply_norm(p["kv_norm"], c_kv, "rmsnorm")
+    return c_kv, k_rope[..., None, :]
+
+
+def _queries(p, acfg: AttentionConfig, x: jax.Array, positions):
+    m = acfg.mla
+    h = acfg.n_heads
+    b_, s, _ = x.shape
+    q = layers.apply_norm(p["q_norm"], x @ p["wq_a"], "rmsnorm") @ p["wq_b"]
+    q = q.reshape(b_, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = (q[..., :m.qk_nope_head_dim],
+                      q[..., m.qk_nope_head_dim:])
+    q_rope = layers.rope(q_rope, positions, acfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_full(p, acfg: AttentionConfig, x: jax.Array,
+             positions: jax.Array, d: int, return_latent: bool = False):
+    """Train / prefill path: reconstruct K/V, run standard (chunked) SDPA."""
+    m = acfg.mla
+    h = acfg.n_heads
+    b_, s, _ = x.shape
+    q_nope, q_rope = _queries(p, acfg, x, positions)
+    c_kv, k_rope = _latent(p, acfg, x)
+    k_rope = layers.rope(k_rope, positions, acfg.rope_theta)
+
+    k_nope = (c_kv @ p["wk_b"]).reshape(b_, s, h, m.qk_nope_head_dim)
+    v = (c_kv @ p["wv_b"]).reshape(b_, s, h, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope, k_rope.shape[:2] + (h,)
+                                          + k_rope.shape[3:])], -1)
+    q = layers.head_constrain(q, h)
+    k = layers.head_constrain(k, h)
+    qg = q[:, :, :, None, :]                    # (B,S,H,1,qk) — MHA: G=1
+    if s >= layers.CHUNKED_THRESHOLD:
+        out = layers._sdpa_chunked(qg, k, v, positions, positions,
+                                   acfg.causal, acfg.window,
+                                   layers.pick_chunk(s, layers.Q_CHUNK),
+                                   layers.pick_chunk(s, layers.KV_CHUNK))
+    else:
+        out = layers._sdpa_direct(qg, k, v, positions, positions,
+                                  acfg.causal, acfg.window)
+    out = out.reshape(b_, s, h * m.v_head_dim).astype(x.dtype)
+    out = constrain(out, "batch", None, "model")
+    out = out @ p["wo"]
+    if return_latent:
+        return out, (c_kv, k_rope[:, :, 0])
+    return out
+
+
+def cache_from_latent(acfg: AttentionConfig, c_kv: jax.Array,
+                      k_rope: jax.Array, max_len: int, dtype=jnp.bfloat16):
+    """Build a decode cache from prefill latents. c_kv: (B,S,r)."""
+    b_, s, _ = c_kv.shape
+    cache = init_mla_cache(acfg, b_, max_len, dtype)
+    keep = min(s, max_len)
+    positions = jnp.arange(s - keep, s)
+    slots = jnp.mod(positions, max_len)
+    cache["c_kv"] = cache["c_kv"].at[:, slots].set(
+        c_kv[:, -keep:].astype(dtype))
+    cache["k_rope"] = cache["k_rope"].at[:, slots].set(
+        k_rope[:, -keep:].astype(dtype))
+    cache["slot_pos"] = cache["slot_pos"].at[slots].set(positions)
+    return cache
+
+
+def init_mla_cache(acfg: AttentionConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16):
+    m = acfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+        "slot_pos": jnp.full((max_len,), -1, jnp.int32),
+    }
+
+
+def mla_decode(p, acfg: AttentionConfig, x: jax.Array, pos: jax.Array,
+               cache, d: int, absorbed: bool = True):
+    """One-token MLA step against the compressed cache."""
+    m = acfg.mla
+    h = acfg.n_heads
+    b_ = x.shape[0]
+    posb = jnp.full((b_, 1), pos)
+    q_nope, q_rope = _queries(p, acfg, x, posb)    # (B,1,H,·)
+    c_new, k_rope_new = _latent(p, acfg, x)
+    k_rope_new = layers.rope(k_rope_new, posb, acfg.rope_theta)
+
+    size = cache["c_kv"].shape[1]
+    slot = jnp.mod(pos, size)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, slot, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new[:, :, 0].astype(cache["k_rope"].dtype),
+        (0, slot, 0))
+    slot_pos = cache["slot_pos"].at[slot].set(pos)
+    keep = (slot_pos >= 0) & (slot_pos <= pos)
+
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    if absorbed:
+        # score_nope = q_nope^T W_uk c = (W_uk^T q_nope)^T c  — latent space
+        wk = p["wk_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+        q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, wk)       # (B,1,H,r)
+        s_nope = jnp.einsum("bqhr,bcr->bhqc", q_lat.astype(jnp.float32),
+                            c_kv.astype(jnp.float32))
+        s_rope = jnp.einsum("bqhn,bcn->bhqc", q_rope.astype(jnp.float32),
+                            k_rope.astype(jnp.float32))
+        s = (s_nope + s_rope) * scale
+        s = jnp.where(keep[None, None, None, :], s, -1e30)
+        prob = jax.nn.softmax(s, axis=-1)
+        # out = prob · V = prob · (c W_uv): contract cache first (latent)
+        ctx = jnp.einsum("bhqc,bcr->bqhr", prob,
+                         c_kv.astype(jnp.float32))              # (B,1,H,r)
+        wv = p["wv_b"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+        out = jnp.einsum("bqhr,rhv->bqhv", ctx, wv)
+    else:
+        k_nope = (c_kv @ p["wk_b"]).reshape(b_, size, h, m.qk_nope_head_dim)
+        v = (c_kv @ p["wv_b"]).reshape(b_, size, h, m.v_head_dim)
+        s_nope = jnp.einsum("bqhn,bchn->bhqc", q_nope.astype(jnp.float32),
+                            k_nope.astype(jnp.float32))
+        s_rope = jnp.einsum("bqhn,bcn->bhqc", q_rope.astype(jnp.float32),
+                            k_rope.astype(jnp.float32))
+        s = (s_nope + s_rope) * scale
+        s = jnp.where(keep[None, None, None, :], s, -1e30)
+        prob = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhqc,bchv->bqhv", prob, v.astype(jnp.float32))
+
+    out = out.reshape(b_, 1, h * m.v_head_dim).astype(x.dtype)
+    out = out @ p["wo"]
+    return out, {"c_kv": c_kv, "k_rope": k_rope, "slot_pos": slot_pos}

@@ -1,0 +1,77 @@
+"""Parameter trees that carry their sharding.
+
+Init functions build nested dicts whose leaves are ``Param(value, spec)``;
+``split`` separates them into a plain value tree (fed to apply fns / the
+optimizer) and a logical-spec tree (fed to the dry-run in_shardings and the
+checkpoint resharder). Only dicts/lists are used as containers so the spec
+tree is unambiguous.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Param:
+    __slots__ = ("value", "spec")
+
+    def __init__(self, value, spec: Tuple[Optional[str], ...]):
+        assert len(spec) == value.ndim, (spec, value.shape)
+        self.value = value
+        self.spec = spec
+
+
+def split(tree) -> Tuple[Any, Any]:
+    """Param-leaf tree -> (value tree, logical spec tree)."""
+    if isinstance(tree, Param):
+        return tree.value, tree.spec
+    if isinstance(tree, dict):
+        vals, specs = {}, {}
+        for k, v in tree.items():
+            vals[k], specs[k] = split(v)
+        return vals, specs
+    if isinstance(tree, (list, tuple)):
+        pairs = [split(v) for v in tree]
+        ctor = type(tree)
+        return ctor(p[0] for p in pairs), ctor(p[1] for p in pairs)
+    raise TypeError(f"unexpected node {type(tree)}")
+
+
+class Builder:
+    """Stateful PRNG-splitting param factory."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.bfloat16):
+        self.key = key
+        self.dtype = dtype
+
+    def _next(self) -> jax.Array:
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def normal(self, shape, spec, scale: Optional[float] = None,
+               dtype=None) -> Param:
+        if scale is None:
+            fan_in = shape[0] if len(shape) > 1 else shape[-1]
+            scale = fan_in ** -0.5
+        v = scale * jax.random.normal(self._next(), shape, jnp.float32)
+        return Param(v.astype(dtype or self.dtype), spec)
+
+    def zeros(self, shape, spec, dtype=None) -> Param:
+        return Param(jnp.zeros(shape, dtype or self.dtype), spec)
+
+    def ones(self, shape, spec, dtype=None) -> Param:
+        return Param(jnp.ones(shape, dtype or self.dtype), spec)
+
+    def const(self, value, spec, dtype=None) -> Param:
+        return Param(jnp.asarray(value, dtype or self.dtype), spec)
+
+
+def stack_layers(trees):
+    """Stack per-layer Param trees along a new leading axis for lax.scan."""
+    def stack_leaf(*leaves):
+        vals = jnp.stack([l.value for l in leaves])
+        return Param(vals, (None,) + leaves[0].spec)
+    return jax.tree_util.tree_map(
+        stack_leaf, *trees, is_leaf=lambda x: isinstance(x, Param))

@@ -1,0 +1,102 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Recurrence: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with a_t = exp(-c * softplus(Lambda) * r_t), r/i input-dependent gates.
+
+The diagonal linear recurrence is computed with ``jax.lax.associative_scan``
+(log-depth on TPU) instead of a sequential loop — the TPU-native counterpart
+of the paper's streaming reduction: the state combine (a2*a1, a2*b1+b2) is
+an on-the-fly reduction over the time axis.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RGLRUConfig
+from repro.distributed.sharding import constrain
+from repro.models.params import Builder
+
+_C = 8.0
+
+
+def init_rec(b: Builder, rcfg: RGLRUConfig, d: int):
+    w = rcfg.lru_width or d
+    return {
+        "wx": b.normal((d, w), (None, "model")),
+        "wgate": b.normal((d, w), (None, "model")),
+        "conv_w": b.normal((rcfg.conv_width, w), (None, "model"), scale=0.1),
+        "conv_b": b.zeros((w,), ("model",)),
+        "wa": b.normal((w, w), (None, "model"), scale=0.01),
+        "ba": b.const(jnp.zeros((w,)) - 1.0, ("model",)),
+        "wi": b.normal((w, w), (None, "model"), scale=0.01),
+        "bi": b.zeros((w,), ("model",)),
+        # Lambda init so a ~ U[0.9, 0.999] at r=1 (Griffin appendix)
+        "lam": b.const(jnp.log(jnp.expm1(-jnp.log(
+            jnp.linspace(0.9, 0.999, w)) / _C)), (None,), dtype=jnp.float32),
+        "wo": b.normal((w, d), ("model", None)),
+    }
+
+
+def _gates(p, xc):
+    r = jax.nn.sigmoid(xc @ p["wa"] + p["ba"])
+    i = jax.nn.sigmoid(xc @ p["wi"] + p["bi"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * (i * xc).astype(jnp.float32)
+
+
+def _conv_full(p, xb, conv_w: int, state=None):
+    """Causal depthwise conv over S. state: (B, conv_w-1, W) history."""
+    if state is None:
+        pad = jnp.zeros(xb.shape[:1] + (conv_w - 1,) + xb.shape[2:], xb.dtype)
+    else:
+        pad = state.astype(xb.dtype)
+    xp = jnp.concatenate([pad, xb], axis=1)
+    out = sum(xp[:, i:i + xb.shape[1]] * p["conv_w"][i]
+              for i in range(conv_w))
+    new_state = xp[:, -(conv_w - 1):]
+    return out + p["conv_b"], new_state
+
+
+def rec_full(p, rcfg: RGLRUConfig, x: jax.Array,
+             h0=None) -> Tuple[jax.Array, dict]:
+    """x: (B,S,D) -> (y (B,S,D), state {'h','conv'}). Full-sequence scan."""
+    xb = x @ p["wx"]
+    xb = constrain(xb, "batch", None, "model")
+    gate = jax.nn.gelu(x @ p["wgate"])
+    xc, conv_state = _conv_full(p, xb, rcfg.conv_width)
+    a, b_term = _gates(p, xc)
+    if h0 is not None:
+        # fold the carried state into step 0: b_0 += a_0 * h0
+        b_term = b_term.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b_term), axis=1)
+    y = (h.astype(x.dtype) * gate) @ p["wo"]
+    return y, {"h": h[:, -1], "conv": conv_state}
+
+
+def init_rec_state(rcfg: RGLRUConfig, d: int, batch: int,
+                   dtype=jnp.float32):
+    w = rcfg.lru_width or d
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, rcfg.conv_width - 1, w), dtype)}
+
+
+def rec_step(p, rcfg: RGLRUConfig, x: jax.Array, state):
+    """One-token step. x: (B,1,D)."""
+    xb = x @ p["wx"]
+    gate = jax.nn.gelu(x @ p["wgate"])
+    xc, conv_state = _conv_full(p, xb, rcfg.conv_width, state["conv"])
+    a, b_term = _gates(p, xc)
+    h = a[:, 0] * state["h"] + b_term[:, 0]
+    y = (h[:, None].astype(x.dtype) * gate) @ p["wo"]
+    return y, {"h": h, "conv": conv_state}

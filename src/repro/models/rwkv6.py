@@ -1,0 +1,202 @@
+"""RWKV-6 "Finch" block: data-dependent token-shift + decay linear attention.
+
+State per head is a (head_dim x head_dim) matrix updated as
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t,
+    out_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t a *data-dependent* per-channel decay (the Finch contribution).
+Attention-free: decode state is O(1) in context length, so this arch runs
+the 524k long-context shape.
+
+Baseline sequential scan over time; ``time_mix_chunked`` (same math, chunk
+matmul form) is the §Perf variant for train/prefill.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RWKVConfig
+from repro.distributed.sharding import constrain
+from repro.models.params import Builder
+
+_COMPONENTS = 5   # r, k, v, w, g
+
+
+def init_time_mix(b: Builder, rcfg: RWKVConfig, d: int):
+    h = d // rcfg.head_dim
+    ts = rcfg.token_shift_lora
+    return {
+        "mu_x": b.normal((d,), (None,), scale=0.1),
+        "mu": b.normal((_COMPONENTS, d), (None, None), scale=0.1),
+        "lora_a": b.normal((d, _COMPONENTS * ts), (None, None), scale=0.01),
+        "lora_b": b.normal((_COMPONENTS, ts, d), (None, None, None),
+                           scale=0.01),
+        "wr": b.normal((d, d), (None, "model")),
+        "wk": b.normal((d, d), (None, "model")),
+        "wv": b.normal((d, d), (None, "model")),
+        "wg": b.normal((d, d), (None, "model")),
+        "w_base": b.const(-6.0 * jnp.ones((d,)), (None,), dtype=jnp.float32),
+        "w_lora_a": b.normal((d, rcfg.decay_lora), (None, None), scale=0.01),
+        "w_lora_b": b.normal((rcfg.decay_lora, d), (None, None), scale=0.01),
+        "u": b.normal((h, rcfg.head_dim), ("model", None), scale=0.1),
+        "ln_w": b.ones((d,), (None,), dtype=jnp.float32),
+        "wo": b.normal((d, d), ("model", None)),
+    }
+
+
+def _shifted(x, x_prev):
+    """Token shift: prepend carry (B,1,D) (zeros at seq start)."""
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def _mix_inputs(p, x, xs):
+    """Data-dependent lerp between x and shifted x for the 5 components."""
+    dx = xs - x
+    xxx = x + dx * p["mu_x"]
+    lora = jnp.tanh(xxx @ p["lora_a"])
+    b_, s, _ = x.shape
+    ts = p["lora_b"].shape[1]
+    lora = lora.reshape(b_, s, _COMPONENTS, ts)
+    adj = jnp.einsum("bsft,ftd->bsfd", lora, p["lora_b"])
+    mixed = x[:, :, None] + dx[:, :, None] * (p["mu"] + adj)
+    return [mixed[:, :, i] for i in range(_COMPONENTS)]
+
+
+def _rkvwg(p, rcfg: RWKVConfig, x, xs):
+    x_r, x_k, x_v, x_w, x_g = _mix_inputs(p, x, xs)
+    b_, s, d = x.shape
+    h, hd = d // rcfg.head_dim, rcfg.head_dim
+    r = (x_r @ p["wr"]).reshape(b_, s, h, hd)
+    k = (x_k @ p["wk"]).reshape(b_, s, h, hd)
+    v = (x_v @ p["wv"]).reshape(b_, s, h, hd)
+    g = jax.nn.silu(x_g @ p["wg"])
+    w_log = p["w_base"] + jnp.tanh(x_w @ p["w_lora_a"]) @ p["w_lora_b"]
+    w = jnp.exp(-jnp.exp(w_log.astype(jnp.float32))).reshape(b_, s, h, hd)
+    from repro.models.layers import head_constrain
+    r = head_constrain(r, h)
+    k = head_constrain(k, h)
+    v = head_constrain(v, h)
+    return r, k, v, w, g
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """Sequential WKV recurrence. r/k/v/w: (B,S,H,hd); s0: (B,H,hd,hd)."""
+    def step(s_state, xs):
+        r_t, k_t, v_t, w_t = xs                    # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,hd,hd)
+        out = jnp.einsum("bhi,bhij->bhj",
+                         r_t, s_state + u[..., :, None] * kv)
+        s_new = w_t[..., :, None] * s_state + kv
+        return s_new, out
+
+    xs = tuple(a.swapaxes(0, 1).astype(jnp.float32) for a in (r, k, v, w))
+    s_last, outs = jax.lax.scan(jax.checkpoint(step), s0, xs)
+    return outs.swapaxes(0, 1), s_last            # (B,S,H,hd), (B,H,hd,hd)
+
+
+def _wkv_chunked(r, k, v, w, u, s0, chunk: int):
+    """Chunk-parallel WKV: intra-chunk attention matmul + inter-chunk state.
+
+    Identical math to _wkv_scan (tested); turns S sequential steps into
+    S/chunk steps of MXU-friendly matmuls.
+    """
+    b_, s, h, hd = r.shape
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    rc, kc, vc, wc = (a.reshape(b_, n, chunk, h, hd)
+                       .swapaxes(0, 1).astype(jnp.float32)
+                      for a in (r, k, v, w))
+
+    def chunk_step(s_state, xs):
+        r_, k_, v_, w_ = xs                        # (B,c,H,hd)
+        logw = jnp.log(jnp.maximum(w_, 1e-38))
+        cum = jnp.cumsum(logw, axis=1)             # prod of decays up to t
+        # contribution of the carried state: r_t * (prod_{<=t-1} w) * S
+        decay_in = jnp.exp(cum - logw)             # prod_{j<t} w_j
+        out_state = jnp.einsum("bchi,bhij->bchj", r_ * decay_in, s_state)
+        # intra-chunk pairwise: sum_{j<t} r_t (prod_{j<m<t} w_m) k_j v_j.
+        # The decay between j and t is channel-dependent, so fold it into
+        # the operands: r~_t = r_t * exp(cum_{t-1}), k~_j = k_j * exp(-cum_j)
+        # => scores[t,j] = <r~_t, k~_j> (strict lower triangle).
+        r_tilde = r_ * jnp.exp(cum - logw)
+        k_tilde = k_ * jnp.exp(-cum)
+        scores = jnp.einsum("bchi,bdhi->bhcd", r_tilde, k_tilde)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        out_intra = jnp.einsum("bhcd,bdhj->bchj", scores, v_)
+        # current-token bonus: r_t · (diag(u) k_t^T v_t)
+        out_bonus = (r_ * (u[None, None] * k_)).sum(-1, keepdims=True) * v_
+        # state update to end of chunk:
+        #   S' = diag(prod w) S + sum_j (prod_{j<m} w) k_j v_j
+        decay_all = jnp.exp(cum[:, -1])            # (B,H,hd)
+        k_fold = k_ * jnp.exp(cum[:, -1:] - cum)   # prod_{m>j} w
+        s_new = decay_all[..., None] * s_state \
+            + jnp.einsum("bchi,bchj->bhij", k_fold, v_)
+        return s_new, out_state + out_intra + out_bonus
+
+    s_last, outs = jax.lax.scan(jax.checkpoint(chunk_step), s0,
+                                (rc, kc, vc, wc))
+    return (outs.swapaxes(0, 1).reshape(b_, s, h, hd), s_last)
+
+
+def time_mix_full(p, rcfg: RWKVConfig, x: jax.Array, state=None,
+                  chunked: bool = False):
+    """x: (B,S,D) -> (y, new_state). state: {'x_prev','S'} or None."""
+    b_, s, d = x.shape
+    h, hd = d // rcfg.head_dim, rcfg.head_dim
+    x_prev = (state["x_prev"][:, None] if state is not None
+              else jnp.zeros((b_, 1, d), x.dtype))
+    xs = _shifted(x, x_prev)
+    r, k, v, w, g = _rkvwg(p, rcfg, x, xs)
+    s0 = (state["S"] if state is not None
+          else jnp.zeros((b_, h, hd, hd), jnp.float32))
+    if chunked and s % rcfg.chunk_size == 0 and s > 1:
+        out, s_last = _wkv_chunked(r, k, v, w,
+                                   p["u"].astype(jnp.float32), s0,
+                                   rcfg.chunk_size)
+    else:
+        out, s_last = _wkv_scan(r, k, v, w, p["u"].astype(jnp.float32), s0)
+    out = out.reshape(b_, s, d)
+    # per-head norm then gate
+    out = out.reshape(b_, s, h, hd)
+    rms = jax.lax.rsqrt(jnp.mean(jnp.square(out), -1, keepdims=True) + 1e-6)
+    out = (out * rms).reshape(b_, s, d) * p["ln_w"]
+    y = (out.astype(x.dtype) * g) @ p["wo"]
+    return y, {"x_prev": x[:, -1], "S": s_last}
+
+
+def init_channel_mix(b: Builder, d: int, dff: int):
+    return {
+        "mu_k": b.normal((d,), (None,), scale=0.1),
+        "mu_r": b.normal((d,), (None,), scale=0.1),
+        "wk": b.normal((d, dff), (None, "model")),
+        "wv": b.normal((dff, d), ("model", None)),
+        "wr": b.normal((d, d), (None, None)),
+    }
+
+
+def channel_mix_full(p, x: jax.Array, state=None):
+    b_, s, d = x.shape
+    x_prev = (state["x_prev"][:, None] if state is not None
+              else jnp.zeros((b_, 1, d), x.dtype))
+    xs = _shifted(x, x_prev)
+    dx = xs - x
+    x_k = x + dx * p["mu_k"]
+    x_r = x + dx * p["mu_r"]
+    k = jnp.square(jax.nn.relu(x_k @ p["wk"]))
+    k = constrain(k, "batch", None, "model")
+    y = jax.nn.sigmoid(x_r @ p["wr"]) * (k @ p["wv"])
+    return y, {"x_prev": x[:, -1]}
+
+
+def init_tm_state(rcfg: RWKVConfig, d: int, batch: int, dtype=jnp.bfloat16):
+    h = d // rcfg.head_dim
+    return {"x_prev": jnp.zeros((batch, d), dtype),
+            "S": jnp.zeros((batch, h, rcfg.head_dim, rcfg.head_dim),
+                           jnp.float32)}
+
+
+def init_cm_state(d: int, batch: int, dtype=jnp.bfloat16):
+    return {"x_prev": jnp.zeros((batch, d), dtype)}

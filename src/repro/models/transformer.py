@@ -1,0 +1,469 @@
+"""Decoder-only model assembly for the arch zoo (decoder / vlm / ssm / hybrid).
+
+Layers are scanned (``lax.scan`` over stacked per-layer params) to keep the
+HLO small enough to SPMD-partition 512 ways; the scan body is remat'd.
+Heterogeneous-block archs (recurrentgemma's rec/rec/attn pattern) scan over
+*groups* with leftover tail blocks unrolled.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import embedding as emb
+from repro.models import layers, mla, moe, rglru, rwkv6
+from repro.models.params import Builder, Param, split, stack_layers
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+
+def _init_attn_block(b: Builder, cfg: ModelConfig):
+    p = {"ln1": layers.init_norm(b, cfg.d_model, cfg.norm),
+         "ln2": layers.init_norm(b, cfg.d_model, cfg.norm)}
+    if cfg.attention.kind == "mla":
+        p["mla"] = mla.init_mla(b, cfg.attention, cfg.d_model)
+    else:
+        p["attn"] = layers.init_attention(b, cfg.attention, cfg.d_model)
+    if cfg.moe is not None:
+        p["moe"] = moe.init_moe(b, cfg.moe, cfg.d_model)
+        if cfg.moe.dense_residual_ff:
+            p["res_mlp"] = layers.init_mlp(b, cfg.d_model,
+                                           cfg.moe.dense_residual_ff, cfg.act)
+    else:
+        p["mlp"] = layers.init_mlp(b, cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def _init_rwkv_block(b: Builder, cfg: ModelConfig):
+    return {"ln1": layers.init_norm(b, cfg.d_model, cfg.norm),
+            "tm": rwkv6.init_time_mix(b, cfg.rwkv, cfg.d_model),
+            "ln2": layers.init_norm(b, cfg.d_model, cfg.norm),
+            "cm": rwkv6.init_channel_mix(b, cfg.d_model, cfg.d_ff)}
+
+
+def _init_rec_block(b: Builder, cfg: ModelConfig):
+    return {"ln1": layers.init_norm(b, cfg.d_model, cfg.norm),
+            "rec": rglru.init_rec(b, cfg.rglru, cfg.d_model),
+            "ln2": layers.init_norm(b, cfg.d_model, cfg.norm),
+            "mlp": layers.init_mlp(b, cfg.d_model, cfg.d_ff, cfg.act)}
+
+
+def _hybrid_layout(cfg: ModelConfig) -> Tuple[int, Tuple[str, ...]]:
+    """(n_full_groups, tail kinds) for the block pattern over n_layers."""
+    pat = cfg.rglru.block_pattern
+    n_groups = cfg.n_layers // len(pat)
+    tail = tuple(pat[i] for i in range(cfg.n_layers - n_groups * len(pat)))
+    return n_groups, tail
+
+
+def init(key: jax.Array, cfg: ModelConfig):
+    """Returns (param values, logical spec tree)."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    b = Builder(key, dtype=dtype)
+    tree: Dict[str, Any] = {"embed": emb.init_table(b, cfg.vocab_size,
+                                                    cfg.d_model)}
+    if cfg.family in ("decoder", "vlm"):
+        blocks = [_init_attn_block(b, cfg) for _ in range(cfg.n_layers)]
+        tree["layers"] = stack_layers(blocks)
+    elif cfg.family == "ssm":
+        blocks = [_init_rwkv_block(b, cfg) for _ in range(cfg.n_layers)]
+        tree["layers"] = stack_layers(blocks)
+    elif cfg.family == "hybrid":
+        n_groups, tail = _hybrid_layout(cfg)
+        groups = []
+        for _ in range(n_groups):
+            g = {}
+            for j, kind in enumerate(cfg.rglru.block_pattern):
+                g[f"b{j}"] = (_init_rec_block(b, cfg) if kind == "rec"
+                              else _init_attn_block(b, cfg))
+            groups.append(g)
+        tree["groups"] = stack_layers(groups)
+        tree["tail"] = [(_init_rec_block(b, cfg) if kind == "rec"
+                         else _init_attn_block(b, cfg)) for kind in tail]
+    else:
+        raise ValueError(cfg.family)
+    tree["ln_f"] = layers.init_norm(b, cfg.d_model, cfg.norm)
+    if not cfg.tie_embeddings:
+        tree["unembed"] = emb.init_unembed(b, cfg.vocab_size, cfg.d_model)
+    return split(tree)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence block application
+# ---------------------------------------------------------------------------
+
+def _attn_block_full(p, cfg: ModelConfig, x, positions):
+    """One block with Megatron-style sequence parallelism: the residual
+    stream x stays S-sharded over 'model' between blocks (so the per-layer
+    activations saved by the scan's autodiff are 1/TP the size); attention
+    and MLP gather the sequence at entry and reduce-scatter their output."""
+    h = layers.apply_norm(p["ln1"], x, cfg.norm)
+    h = constrain(h, "batch", None, None)            # SP all-gather
+    if cfg.attention.kind == "mla":
+        a = mla.mla_full(p["mla"], cfg.attention, h, positions, cfg.d_model)
+    else:
+        a = layers.attention_full(p["attn"], cfg.attention, h, positions,
+                                  cfg.d_model)
+    x = x + constrain(a, "batch", "model", None)     # SP reduce-scatter
+    h = layers.apply_norm(p["ln2"], x, cfg.norm)
+    if cfg.moe is not None:
+        # MoE is tokenwise: consume the S-sharded stream directly (tokens
+        # already sharded over every axis — no gather needed).
+        y, aux = moe.apply_moe(p["moe"], cfg.moe, h)
+        if cfg.moe.dense_residual_ff:
+            hg = constrain(h, "batch", None, None)
+            y = y + layers.apply_mlp(p["res_mlp"], hg, cfg.act)
+    else:
+        hg = constrain(h, "batch", None, None)
+        y, aux = layers.apply_mlp(p["mlp"], hg, cfg.act), 0.0
+    return x + constrain(y, "batch", "model", None), aux
+
+
+def _rwkv_block_full(p, cfg: ModelConfig, x, state=None, chunked=False):
+    h = layers.apply_norm(p["ln1"], x, cfg.norm)
+    h = constrain(h, "batch", None, None)            # SP gather (time scan)
+    a, tm_state = rwkv6.time_mix_full(
+        p["tm"], cfg.rwkv, h,
+        None if state is None else state["tm"], chunked=chunked)
+    x = x + constrain(a, "batch", "model", None)
+    h = layers.apply_norm(p["ln2"], x, cfg.norm)
+    h = constrain(h, "batch", None, None)
+    y, cm_state = rwkv6.channel_mix_full(
+        p["cm"], h, None if state is None else state["cm"])
+    return (x + constrain(y, "batch", "model", None),
+            {"tm": tm_state, "cm": cm_state})
+
+
+def _rec_block_full(p, cfg: ModelConfig, x):
+    h = layers.apply_norm(p["ln1"], x, cfg.norm)
+    h = constrain(h, "batch", None, None)            # SP gather (time scan)
+    a, h_last = rglru.rec_full(p["rec"], cfg.rglru, h)
+    x = x + constrain(a, "batch", "model", None)
+    h = layers.apply_norm(p["ln2"], x, cfg.norm)
+    h = constrain(h, "batch", None, None)
+    y = layers.apply_mlp(p["mlp"], h, cfg.act)
+    return x + constrain(y, "batch", "model", None), h_last
+
+
+def _embed_input(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+                 seq_shard: bool = True):
+    """Tokens (+ modality-frontend stub embeddings) -> (B, S, D).
+
+    The residual stream leaves here S-sharded over 'model' (sequence
+    parallelism) for full-sequence paths."""
+    x = emb.embed_tokens(params["embed"], batch["tokens"])
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    if seq_shard:
+        x = constrain(x, "batch", "model", None)
+    else:
+        x = constrain(x, "batch", None, None)
+    return x
+
+
+def _head(params, cfg: ModelConfig, x):
+    x = constrain(x, "batch", None, None)            # gather S for the head
+    x = layers.apply_norm(params["ln_f"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        return emb.lm_head(x, params["embed"], cfg.vocab_size)
+    return emb.lm_head_untied(x, params["unembed"], cfg.vocab_size)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            remat: bool = True, rwkv_chunked: bool = True):
+    """Teacher-forced forward -> (logits (B,S,Vpad) f32, aux scalar)."""
+    x = _embed_input(params, cfg, batch)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+
+    if cfg.family in ("decoder", "vlm"):
+        def body(carry, p_l):
+            x, aux = carry
+            x, a = _attn_block_full(p_l, cfg, x, positions)
+            return (x, aux + jnp.asarray(a, jnp.float32)), None
+        body_fn = jax.checkpoint(body) if remat else body
+        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+    elif cfg.family == "ssm":
+        def body(x, p_l):
+            x, _ = _rwkv_block_full(p_l, cfg, x, chunked=rwkv_chunked)
+            return x, None
+        body_fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["layers"])
+        aux = 0.0
+    elif cfg.family == "hybrid":
+        pat = cfg.rglru.block_pattern
+
+        def body(x, p_g):
+            for j, kind in enumerate(pat):
+                if kind == "rec":
+                    x, _ = _rec_block_full(p_g[f"b{j}"], cfg, x)
+                else:
+                    x, _ = _attn_block_full(p_g[f"b{j}"], cfg, x, positions)
+            return x, None
+        body_fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["groups"])
+        _, tail = _hybrid_layout(cfg)
+        for p_t, kind in zip(params["tail"], tail):
+            if kind == "rec":
+                x, _ = _rec_block_full(p_t, cfg, x)
+            else:
+                x, _ = _attn_block_full(p_t, cfg, x, positions)
+        aux = 0.0
+    else:
+        raise ValueError(cfg.family)
+
+    return _head(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch, remat: bool = True):
+    logits, aux = forward(params, cfg, batch, remat=remat)
+    tokens = batch["tokens"]
+    if cfg.family == "vlm":
+        # predictions over the text region only
+        p = batch["patches"].shape[1]
+        logits = logits[:, p:]
+    labels = tokens[:, 1:]
+    lg = logits[:, :-1]
+    mask = jnp.ones(labels.shape, jnp.float32)
+    ce = emb.cross_entropy(lg, labels, mask)
+    coef = cfg.moe.aux_loss_coef if cfg.moe is not None else 0.0
+    return ce + coef * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _attn_block_prefill(p, cfg: ModelConfig, x, positions, max_len,
+                        dtype=jnp.bfloat16):
+    ring = (cfg.attention.window is not None
+            and max_len > cfg.attention.window)
+    h = layers.apply_norm(p["ln1"], x, cfg.norm)
+    h = constrain(h, "batch", None, None)            # SP all-gather
+    if cfg.attention.kind == "mla":
+        a, (c_kv, k_rope) = mla.mla_full(p["mla"], cfg.attention, h,
+                                         positions, cfg.d_model,
+                                         return_latent=True)
+        entry = mla.cache_from_latent(cfg.attention, c_kv, k_rope, max_len,
+                                      dtype)
+    else:
+        a, (k, v) = layers.attention_full(p["attn"], cfg.attention, h,
+                                          positions, cfg.d_model,
+                                          return_kv=True)
+        entry = layers.cache_from_kv(cfg.attention, k, v, max_len, dtype,
+                                     ring=ring)
+    x = x + constrain(a, "batch", "model", None)     # SP reduce-scatter
+    h = layers.apply_norm(p["ln2"], x, cfg.norm)
+    if cfg.moe is not None:
+        y, _ = moe.apply_moe(p["moe"], cfg.moe, h)
+        if cfg.moe.dense_residual_ff:
+            hg = constrain(h, "batch", None, None)
+            y = y + layers.apply_mlp(p["res_mlp"], hg, cfg.act)
+    else:
+        hg = constrain(h, "batch", None, None)
+        y = layers.apply_mlp(p["mlp"], hg, cfg.act)
+    return x + constrain(y, "batch", "model", None), entry
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            max_len: int, dtype=jnp.bfloat16, remat: bool = True):
+    """Run the prompt through the model, building the decode cache.
+
+    Returns (last-position logits (B, Vpad) f32, cache pytree).
+    """
+    x = _embed_input(params, cfg, batch)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+
+    if cfg.family in ("decoder", "vlm"):
+        def body(x, p_l):
+            x, entry = _attn_block_prefill(p_l, cfg, x, positions, max_len,
+                                           dtype)
+            return x, entry
+        body_fn = jax.checkpoint(body) if remat else body
+        x, entries = jax.lax.scan(body_fn, x, params["layers"])
+        cache = {"layers": entries}
+    elif cfg.family == "ssm":
+        def body(x, p_l):
+            x, state = _rwkv_block_full(p_l, cfg, x, chunked=True)
+            return x, state
+        body_fn = jax.checkpoint(body) if remat else body
+        x, states = jax.lax.scan(body_fn, x, params["layers"])
+        cache = {"layers": states}
+    elif cfg.family == "hybrid":
+        pat = cfg.rglru.block_pattern
+
+        def body(x, p_g):
+            entries = {}
+            for j, kind in enumerate(pat):
+                if kind == "rec":
+                    h = layers.apply_norm(p_g[f"b{j}"]["ln1"], x, cfg.norm)
+                    a, st = rglru.rec_full(p_g[f"b{j}"]["rec"], cfg.rglru, h)
+                    x = x + a
+                    h = layers.apply_norm(p_g[f"b{j}"]["ln2"], x, cfg.norm)
+                    x = x + layers.apply_mlp(p_g[f"b{j}"]["mlp"], h, cfg.act)
+                    entries[f"b{j}"] = st
+                else:
+                    x, entries[f"b{j}"] = _attn_block_prefill(
+                        p_g[f"b{j}"], cfg, x, positions, max_len, dtype)
+            return x, entries
+        body_fn = jax.checkpoint(body) if remat else body
+        x, group_entries = jax.lax.scan(body_fn, x, params["groups"])
+        _, tail = _hybrid_layout(cfg)
+        tail_entries = []
+        for p_t, kind in zip(params["tail"], tail):
+            if kind == "rec":
+                h = layers.apply_norm(p_t["ln1"], x, cfg.norm)
+                a, st = rglru.rec_full(p_t["rec"], cfg.rglru, h)
+                x = x + a
+                h = layers.apply_norm(p_t["ln2"], x, cfg.norm)
+                x = x + layers.apply_mlp(p_t["mlp"], h, cfg.act)
+                tail_entries.append(st)
+            else:
+                x, entry = _attn_block_prefill(p_t, cfg, x, positions,
+                                               max_len, dtype)
+                tail_entries.append(entry)
+        cache = {"groups": group_entries, "tail": tail_entries}
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _head(params, cfg, x[:, -1:])
+    return logits[:, 0], cache
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Stacked per-layer cache pytree sized for `max_len` positions."""
+    ring = cfg.attention.window is not None and max_len > cfg.attention.window
+
+    def one_attn():
+        if cfg.attention.kind == "mla":
+            return mla.init_mla_cache(cfg.attention, batch, max_len, dtype)
+        return layers.init_kv_cache(cfg.attention, cfg.d_model, batch,
+                                    max_len, dtype, ring=ring)
+
+    def stack(trees):
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+    if cfg.family in ("decoder", "vlm"):
+        return {"layers": stack([one_attn() for _ in range(cfg.n_layers)])}
+    if cfg.family == "ssm":
+        one = lambda: {"tm": rwkv6.init_tm_state(cfg.rwkv, cfg.d_model,
+                                                 batch, dtype),
+                       "cm": rwkv6.init_cm_state(cfg.d_model, batch, dtype)}
+        return {"layers": stack([one() for _ in range(cfg.n_layers)])}
+    if cfg.family == "hybrid":
+        n_groups, tail = _hybrid_layout(cfg)
+
+        def one_group():
+            g = {}
+            for j, kind in enumerate(cfg.rglru.block_pattern):
+                g[f"b{j}"] = (rglru.init_rec_state(cfg.rglru, cfg.d_model,
+                                                   batch, dtype)
+                              if kind == "rec" else one_attn())
+            return g
+        return {"groups": stack([one_group() for _ in range(n_groups)]),
+                "tail": [(rglru.init_rec_state(cfg.rglru, cfg.d_model,
+                                               batch, dtype)
+                          if kind == "rec" else one_attn())
+                         for kind in tail]}
+    raise ValueError(cfg.family)
+
+
+def _attn_block_decode(p, cfg: ModelConfig, x, pos, cache):
+    h = layers.apply_norm(p["ln1"], x, cfg.norm)
+    if cfg.attention.kind == "mla":
+        a, cache = mla.mla_decode(p["mla"], cfg.attention, h, pos, cache,
+                                  cfg.d_model)
+    else:
+        a, cache = layers.attention_decode(p["attn"], cfg.attention, h, pos,
+                                           cache, cfg.d_model)
+    x = x + a
+    h = layers.apply_norm(p["ln2"], x, cfg.norm)
+    if cfg.moe is not None:
+        y, _ = moe.apply_moe(p["moe"], cfg.moe, h)
+        if cfg.moe.dense_residual_ff:
+            y = y + layers.apply_mlp(p["res_mlp"], h, cfg.act)
+    else:
+        y = layers.apply_mlp(p["mlp"], h, cfg.act)
+    return x + y, cache
+
+
+def _rwkv_block_decode(p, cfg: ModelConfig, x, state):
+    h = layers.apply_norm(p["ln1"], x, cfg.norm)
+    a, tm = rwkv6.time_mix_full(p["tm"], cfg.rwkv, h, state["tm"])
+    x = x + a
+    h = layers.apply_norm(p["ln2"], x, cfg.norm)
+    y, cm = rwkv6.channel_mix_full(p["cm"], h, state["cm"])
+    return x + y, {"tm": tm, "cm": cm}
+
+
+def _rec_block_decode(p, cfg: ModelConfig, x, state):
+    h = layers.apply_norm(p["ln1"], x, cfg.norm)
+    a, state = rglru.rec_step(p["rec"], cfg.rglru, h, state)
+    x = x + a
+    h = layers.apply_norm(p["ln2"], x, cfg.norm)
+    return x + layers.apply_mlp(p["mlp"], h, cfg.act), state
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens: jax.Array,
+                pos: jax.Array):
+    """One decode step. tokens: (B,) int32; pos: scalar int32 (next slot).
+
+    Returns (logits (B, Vpad) f32, new cache).
+    """
+    x = emb.embed_tokens(params["embed"], tokens[:, None])
+    x = constrain(x, "batch", None, None)
+
+    if cfg.family in ("decoder", "vlm"):
+        def body(x, xs):
+            p_l, c_l = xs
+            x, c_new = _attn_block_decode(p_l, cfg, x, pos, c_l)
+            return x, c_new
+        x, new_layers = jax.lax.scan(body, x,
+                                     (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_layers}
+    elif cfg.family == "ssm":
+        def body(x, xs):
+            p_l, c_l = xs
+            x, c_new = _rwkv_block_decode(p_l, cfg, x, c_l)
+            return x, c_new
+        x, new_layers = jax.lax.scan(body, x,
+                                     (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_layers}
+    elif cfg.family == "hybrid":
+        pat = cfg.rglru.block_pattern
+
+        def body(x, xs):
+            p_g, c_g = xs
+            c_new = {}
+            for j, kind in enumerate(pat):
+                if kind == "rec":
+                    x, c_new[f"b{j}"] = _rec_block_decode(
+                        p_g[f"b{j}"], cfg, x, c_g[f"b{j}"])
+                else:
+                    x, c_new[f"b{j}"] = _attn_block_decode(
+                        p_g[f"b{j}"], cfg, x, pos, c_g[f"b{j}"])
+            return x, c_new
+        x, new_groups = jax.lax.scan(body, x,
+                                     (params["groups"], cache["groups"]))
+        _, tail = _hybrid_layout(cfg)
+        new_tail = []
+        for p_t, c_t, kind in zip(params["tail"], cache["tail"], tail):
+            if kind == "rec":
+                x, c_new = _rec_block_decode(p_t, cfg, x, c_t)
+            else:
+                x, c_new = _attn_block_decode(p_t, cfg, x, pos, c_t)
+            new_tail.append(c_new)
+        new_cache = {"groups": new_groups, "tail": new_tail}
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _head(params, cfg, x)
+    return logits[:, 0], new_cache

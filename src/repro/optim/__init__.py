@@ -1,0 +1,9 @@
+from repro.optim import optimizers
+from repro.optim.optimizers import (Optimizer, adafactor, adamw,
+                                    clip_by_global_norm, from_config,
+                                    global_norm, layerwise, partitioned,
+                                    rowwise_adagrad, sgd, warmup_cosine)
+
+__all__ = ["Optimizer", "adafactor", "adamw", "clip_by_global_norm",
+           "from_config", "global_norm", "layerwise", "optimizers",
+           "partitioned", "rowwise_adagrad", "sgd", "warmup_cosine"]

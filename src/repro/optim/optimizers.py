@@ -1,0 +1,344 @@
+"""Minimal optax-style optimizer substrate (no external deps).
+
+An optimizer is a pair of pure functions:
+    init(params) -> state
+    update(grads, state, params) -> (new_params, new_state)
+
+Provided: sgd (momentum), adamw, adafactor (factored second moment — the only
+optimizer whose state fits a trillion-param MoE on v5e), rowwise_adagrad (the
+standard DLRM embedding-table optimizer: one adaptive scalar per row, which
+keeps optimizer state at 1/D of the table), global-norm clipping, and
+warmup-cosine schedules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Any]   # (grads, state, params) -> (params, state)
+
+
+def _tree_map(f, *trees, **kw):
+    return jax.tree_util.tree_map(f, *trees, **kw)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return _tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                     grads), norm
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(1.0, warmup_steps)
+        prog = (step - warmup_steps) / jnp.maximum(
+            1.0, total_steps - warmup_steps)
+        prog = jnp.clip(prog, 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(step < warmup_steps, warm, cos)
+    return schedule
+
+
+def _as_schedule(lr):
+    return lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+def sgd(lr, momentum: float = 0.9) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return {"mu": _tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        mu = _tree_map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                       state["mu"], grads)
+        new_params = _tree_map(
+            lambda p, m: (p.astype(jnp.float32) - lr_t * m).astype(p.dtype),
+            params, mu)
+        return new_params, {"mu": mu, "step": step}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": _tree_map(z, params), "v": _tree_map(z, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        t = step.astype(jnp.float32)
+        c1 = 1 - b1 ** t
+        c2 = 1 - b2 ** t
+        m = _tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                      state["m"], grads)
+        v = _tree_map(lambda v_, g: b2 * v_ + (1 - b2)
+                      * jnp.square(g.astype(jnp.float32)),
+                      state["v"], grads)
+
+        def upd(p, m_, v_):
+            mh = m_ / c1
+            vh = v_ / c2
+            step_ = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * step_).astype(p.dtype)
+
+        return _tree_map(upd, params, m, v), {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; state ~ O(P/D) for matrices)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def per_leaf(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"fac": _tree_map(per_leaf, params,
+                                 is_leaf=lambda x: isinstance(x, jax.Array)),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def per_leaf(g, st, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if _factored(p.shape):
+                vr = beta * st["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * st["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1, keepdims=True)[..., None], eps))
+                upd = g32 / jnp.sqrt(denom + eps)
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta * st["v"] + (1 - beta) * g2
+                upd = g32 / jnp.sqrt(v + eps)
+                new_st = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + eps)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr_t * upd).astype(p.dtype), new_st
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["fac"])
+        out = [per_leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_fac = treedef.unflatten([o[1] for o in out])
+        return new_params, {"fac": new_fac, "step": step}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Row-wise Adagrad (DLRM embedding tables)
+# ---------------------------------------------------------------------------
+
+def rowwise_adagrad(lr, eps: float = 1e-8) -> Optimizer:
+    """One adaptive accumulator scalar per table *row* (paper-standard for
+    embedding tables: state is rows x 1 instead of rows x dim)."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return {"acc": _tree_map(
+            lambda p: jnp.zeros(p.shape[:-1] + (1,), jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+
+        def upd(p, g, a):
+            g32 = g.astype(jnp.float32)
+            a_new = a + jnp.mean(jnp.square(g32), axis=-1, keepdims=True)
+            p_new = p.astype(jnp.float32) - lr_t * g32 / (jnp.sqrt(a_new) + eps)
+            return p_new.astype(p.dtype), a_new
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_a = treedef.flatten_up_to(state["acc"])
+        out = [upd(p, g, a) for p, g, a in zip(flat_p, flat_g, flat_a)]
+        return (treedef.unflatten([o[0] for o in out]),
+                {"acc": treedef.unflatten([o[1] for o in out]), "step": step})
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Partitioned optimizer (different rules per subtree, e.g. DLRM)
+# ---------------------------------------------------------------------------
+
+def partitioned(rules: dict, default: Optimizer) -> Optimizer:
+    """Apply a different optimizer to top-level keys named in `rules`.
+
+    Params must be a dict at the top level; e.g. DLRM uses
+    ``partitioned({'arena': rowwise_adagrad(...)}, adamw(...))``.
+    """
+    def pick(key):
+        return rules.get(key, default)
+
+    def init(params):
+        return {k: pick(k).init(v) for k, v in params.items()}
+
+    def update(grads, state, params):
+        new_p, new_s = {}, {}
+        for k, p in params.items():
+            np_, ns_ = pick(k).update(grads[k], state[k], p)
+            new_p[k], new_s[k] = np_, ns_
+        return new_p, new_s
+
+    return Optimizer(init, update)
+
+
+def layerwise(opt: Optimizer, min_layers: int = 8) -> Optimizer:
+    """Apply `opt`'s update via lax.scan over stacked-layer subtrees.
+
+    A fused elementwise update over a scan-stacked (L, ...) parameter tensor
+    materializes f32 temporaries of the WHOLE stack (measured: ~53 GB of
+    optimizer temp on the 1T-param MoE). Scanning the update over the layer
+    dim bounds temporaries to one layer. Top-level subtrees whose leaves all
+    share a leading dim >= min_layers are scanned; the rest update directly.
+    Leaf-wise optimizers only (adamw/sgd/adafactor/rowwise — all are).
+    """
+    def _stacked_dim(subtree):
+        # A layer stack is a MULTI-leaf subtree whose leaves all share a
+        # small leading dim (the layer count). Requiring >= 2 leaves and
+        # dim <= 256 excludes single big arrays: without that, the vocab
+        # embedding (152k, d) was scanned row-by-row — a 151936-trip
+        # update loop (caught by the dry-run trip-count audit).
+        leaves = jax.tree_util.tree_leaves(subtree)
+        if len(leaves) < 2:
+            return None
+        dims = {x.shape[0] if getattr(x, "ndim", 0) > 0 else None
+                for x in leaves}
+        d = dims.pop() if len(dims) == 1 else None
+        return d if (d is not None and min_layers <= d <= 256) else None
+
+    def init(params):
+        return opt.init(params)
+
+    def update(grads, state, params):
+        if not isinstance(params, dict):
+            return opt.update(grads, state, params)
+        step = state.get("step")
+        new_p, new_s = {}, {}
+        # state trees mirror params one level down inside each state field
+        state_fields = [k for k in state if k != "step"]
+
+        for key, p_sub in params.items():
+            g_sub = grads[key]
+            s_sub = {f: state[f][key] for f in state_fields}
+            n = _stacked_dim(p_sub)
+            if n is not None and _stacked_dim(g_sub) == n and all(
+                    _stacked_dim(s_sub[f]) == n for f in state_fields):
+                def body(_, xs):
+                    p_l, g_l, s_l = xs
+                    st_l = dict(s_l)
+                    st_l["step"] = step
+                    p_new, st_new = opt.update(g_l, st_l, p_l)
+                    return None, (p_new,
+                                  {f: st_new[f] for f in state_fields})
+                _, (p_new, s_new) = jax.lax.scan(
+                    body, None, (p_sub, g_sub, s_sub))
+            else:
+                st = dict(s_sub)
+                st["step"] = step
+                p_new, st_new = opt.update(g_sub, st, p_sub)
+                s_new = {f: st_new[f] for f in state_fields}
+            new_p[key] = p_new
+            for f in state_fields:
+                new_s.setdefault(f, {})[key] = s_new[f]
+        new_s["step"] = step + 1
+        return new_p, new_s
+
+    return Optimizer(init, update)
+
+
+def state_logical_specs(name: str, param_specs, param_shapes):
+    """Logical sharding specs for an optimizer's state, mirroring the rules
+    used for params (needed to attach shardings to dry-run ShapeDtypeStructs).
+
+    param_specs / param_shapes: pytrees with tuple leaves (specs) and tuple
+    leaves (shapes) of identical structure.
+    """
+    scalar = ()
+
+    def map2(f):
+        return jax.tree_util.tree_map(
+            f, param_specs, param_shapes,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                v is None or isinstance(v, (str, int)) for v in x))
+
+    if name == "adamw":
+        full = map2(lambda s, _: s)
+        return {"m": full, "v": full, "step": scalar}
+    if name == "sgd":
+        return {"mu": map2(lambda s, _: s), "step": scalar}
+    if name == "rowwise_adagrad":
+        return {"acc": map2(lambda s, _: s[:-1] + (None,)), "step": scalar}
+    if name == "adafactor":
+        def fac(s, shape):
+            if len(shape) >= 2:
+                return {"vr": s[:-1], "vc": s[:-2] + s[-1:]}
+            return {"v": s}
+        return {"fac": map2(fac), "step": scalar}
+    raise ValueError(name)
+
+
+def from_config(cfg) -> Optimizer:
+    """Build from configs.base.OptimizerConfig."""
+    if cfg.name == "sgd":
+        return sgd(cfg.lr)
+    if cfg.name == "adamw":
+        return adamw(cfg.lr, cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay)
+    if cfg.name == "adafactor":
+        return adafactor(cfg.lr)
+    raise ValueError(f"unknown optimizer {cfg.name!r}")

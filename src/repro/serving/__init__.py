@@ -1,0 +1,3 @@
+from repro.serving.engine import Batcher, DecodeEngine, Request
+
+__all__ = ["Batcher", "DecodeEngine", "Request"]

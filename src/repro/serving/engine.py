@@ -1,0 +1,140 @@
+"""Serving engine: request batcher + continuous-batching decode loop.
+
+The paper's deployment target is user-facing inference with firm SLAs
+(Section IV-A); this engine is the framework's answer:
+
+* ``Batcher`` — admission queue with (max_batch, max_wait_ms) micro-batching,
+  the standard SLA/throughput knob;
+* ``DecodeEngine`` — fixed slot pool with *wave* batching: a wave of
+  requests is admitted together (positions stay aligned with the scalar-pos
+  KV cache), decoded until every member finishes, then the slots are
+  reused. Sequences that hit max_new_tokens early stop contributing to
+  latency but their slots decode inertly until the wave drains — the
+  aligned-position simplification vs full continuous batching (which needs
+  a per-row position cache; noted as future work in DESIGN.md);
+* latency stats (p50/p95/p99) per request.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 16
+    submitted_at: float = field(default_factory=time.time)
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    output: List[int] = field(default_factory=list)
+
+
+class Batcher:
+    def __init__(self, max_batch: int = 8, max_wait_ms: float = 5.0):
+        self.max_batch = max_batch
+        self.max_wait_ms = max_wait_ms
+        self._queue: List[Request] = []
+
+    def submit(self, req: Request):
+        self._queue.append(req)
+
+    def take(self) -> List[Request]:
+        """Non-blocking micro-batch: whatever is queued up to max_batch,
+        or everything older than max_wait_ms."""
+        if not self._queue:
+            return []
+        oldest = time.time() - self._queue[0].submitted_at
+        if len(self._queue) >= self.max_batch \
+                or oldest * 1e3 >= self.max_wait_ms:
+            batch, self._queue = (self._queue[:self.max_batch],
+                                  self._queue[self.max_batch:])
+            return batch
+        return []
+
+
+class DecodeEngine:
+    """Slot-pooled decode over a fixed cache; CPU-runnable at smoke scale."""
+
+    def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
+                 max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = api.init_cache(cfg, n_slots, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, np.int32)
+        self.latencies: List[float] = []
+        self._decode = jax.jit(
+            lambda p, c, t, pos: api.decode_step(p, cfg, c, t, pos))
+
+    def idle(self) -> bool:
+        return all(r is None for r in self.slot_req)
+
+    def admit(self, reqs: List[Request]):
+        """Admit a wave (only when idle); batched aligned prefill."""
+        if not reqs or not self.idle():
+            return
+        reqs = reqs[:self.n_slots]
+        plen = max(len(r.prompt) for r in reqs)
+        # fresh cache for the wave
+        self.cache = api.init_cache(self.cfg, self.n_slots, self.max_len)
+        self.pos = 0
+        for i, req in enumerate(reqs):
+            req.started_at = time.time()
+            self.slot_req[i] = req
+        # aligned prefill: one batched decode step per prompt position
+        # (left-pad shorter prompts with token 0)
+        for t in range(plen):
+            tokens = np.zeros((self.n_slots,), np.int32)
+            for i, req in enumerate(reqs):
+                off = plen - len(req.prompt)
+                if t >= off:
+                    tokens[i] = req.prompt[t - off]
+            self._last_logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(self.pos, jnp.int32))
+            self.pos += 1
+
+    def step(self) -> int:
+        """One decode step for the wave; returns #still-active."""
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        tokens = np.zeros((self.n_slots,), np.int32)
+        nxt = np.asarray(jnp.argmax(self._last_logits, -1))
+        for i in active:
+            tokens[i] = nxt[i]
+        self._last_logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(self.pos, jnp.int32))
+        self.pos += 1
+        out = np.asarray(jnp.argmax(self._last_logits, -1))
+        for i in active:
+            req = self.slot_req[i]
+            req.output.append(int(out[i]))
+            if len(req.output) >= req.max_new_tokens \
+                    or self.pos >= self.max_len - 1:
+                req.finished_at = time.time()
+                self.latencies.append(req.finished_at - req.submitted_at)
+                self.slot_req[i] = None
+        return len([r for r in self.slot_req if r is not None])
+
+    def stats(self) -> Dict[str, float]:
+        if not self.latencies:
+            return {}
+        arr = np.array(self.latencies)
+        return {"n": len(arr),
+                "p50_ms": float(np.percentile(arr, 50) * 1e3),
+                "p95_ms": float(np.percentile(arr, 95) * 1e3),
+                "p99_ms": float(np.percentile(arr, 99) * 1e3)}

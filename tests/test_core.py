@@ -1,0 +1,160 @@
+"""Core-engine tests: sparse engine, dense engine, DLRM, hybrid executor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.dlrm import DLRM_CONFIGS, DLRM_SMOKE
+from repro.core import dense_engine as de
+from repro.core import dlrm, hybrid
+from repro.core import sparse_engine as se
+
+
+@pytest.fixture
+def dlrm_setup(rng):
+    cfg = DLRM_SMOKE
+    params = dlrm.init(jax.random.PRNGKey(0), cfg)
+    b = 16
+    batch = {
+        "dense": jnp.asarray(rng.randn(b, cfg.dense_features), jnp.float32),
+        "indices": jnp.asarray(
+            rng.randint(0, cfg.rows_per_table,
+                        (b, cfg.n_tables, cfg.lookups_per_table)), jnp.int32),
+        "labels": jnp.asarray(rng.randint(0, 2, (b,)), jnp.float32),
+    }
+    return cfg, params, batch
+
+
+def test_arena_null_row_is_zero():
+    spec = se.ArenaSpec(3, 100, 8)
+    arena = se.init_arena(jax.random.PRNGKey(0), spec)
+    assert np.allclose(np.asarray(arena)[spec.null_row:], 0.0)
+
+
+def test_arena_flatten_indices_base_offsets(rng):
+    spec = se.ArenaSpec(4, 50, 8)
+    idx = rng.randint(0, 50, (2, 4, 3)).astype(np.int32)
+    flat = np.asarray(se.flatten_indices(spec, jnp.asarray(idx)))
+    assert flat.shape == (8, 3)
+    # table t's rows live at [t*50, (t+1)*50)
+    for b in range(2):
+        for t in range(4):
+            row = flat[b * 4 + t]
+            assert ((row >= t * 50) & (row < (t + 1) * 50)).all()
+
+
+def test_lookup_matches_manual(rng):
+    spec = se.ArenaSpec(2, 30, 4)
+    arena = se.init_arena(jax.random.PRNGKey(1), spec)
+    idx = jnp.asarray(rng.randint(0, 30, (3, 2, 5)), jnp.int32)
+    out = se.lookup(arena, spec, idx)
+    a = np.asarray(arena)
+    for b in range(3):
+        for t in range(2):
+            want = a[np.asarray(idx)[b, t] + t * 30].sum(0)
+            np.testing.assert_allclose(out[b, t], want, rtol=1e-5)
+
+
+def test_dlrm_forward_baseline_pipelined_agree(dlrm_setup):
+    cfg, params, batch = dlrm_setup
+    f = dlrm.forward(params, cfg, batch["dense"], batch["indices"])
+    b = hybrid.baseline_forward(params, cfg, batch["dense"],
+                                batch["indices"])
+    p = hybrid.pipelined_forward(params, cfg, batch["dense"],
+                                 batch["indices"], n_micro=4)
+    np.testing.assert_allclose(f, b, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(f, p, rtol=1e-4, atol=1e-4)
+
+
+def test_dlrm_training_reduces_loss(dlrm_setup):
+    cfg, params, batch = dlrm_setup
+    opt, step = dlrm.make_train_step(cfg)
+    state = opt.init(params)
+    step = jax.jit(step)
+    losses = []
+    for _ in range(20):
+        params, state, loss = step(params, state, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses
+    assert not np.isnan(losses[-1])
+
+
+def test_dlrm_all_six_table1_configs_instantiate():
+    """Paper Table I: every config's arena matches the stated table size."""
+    for name, cfg in DLRM_CONFIGS.items():
+        expected = {"dlrm1": 128, "dlrm2": 1280, "dlrm3": 128,
+                    "dlrm4": 1280, "dlrm5": 3200, "dlrm6": 128}[name]
+        assert abs(cfg.table_bytes / 1e6 - expected) / expected < 0.01, name
+        # smoke-scale instantiation of the same topology
+        small = cfg.__class__(name=name, n_tables=cfg.n_tables,
+                              rows_per_table=64,
+                              lookups_per_table=cfg.lookups_per_table,
+                              bottom_mlp=cfg.bottom_mlp,
+                              top_mlp=cfg.top_mlp)
+        params = dlrm.init(jax.random.PRNGKey(0), small)
+        logit = dlrm.forward(
+            params, small,
+            jnp.zeros((2, small.dense_features), jnp.float32),
+            jnp.zeros((2, small.n_tables, small.lookups_per_table),
+                      jnp.int32))
+        assert logit.shape == (2,)
+        assert not np.isnan(np.asarray(logit)).any()
+
+
+def test_mlp_engine_matches_reference(rng):
+    params = de.init_mlp(jax.random.PRNGKey(0), (16, 32, 8))
+    x = jnp.asarray(rng.randn(4, 16), jnp.float32)
+    out = de.mlp_apply(params, x)
+    h = np.maximum(np.asarray(x) @ np.asarray(params[0][0])
+                   + np.asarray(params[0][1]), 0)
+    want = h @ np.asarray(params[1][0]) + np.asarray(params[1][1])
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 3), st.integers(0, 2**31 - 1))
+def test_dlrm_pipelined_equivalence_property(n_micro_pow, seed):
+    """Property: the microbatch pipeline computes the same probabilities as
+    single-shot execution for any microbatch count."""
+    r = np.random.RandomState(seed % (2**32 - 1))
+    cfg = DLRM_SMOKE
+    params = dlrm.init(jax.random.PRNGKey(seed % 1000), cfg)
+    b = 8
+    dense = jnp.asarray(r.randn(b, cfg.dense_features), jnp.float32)
+    idx = jnp.asarray(r.randint(0, cfg.rows_per_table,
+                                (b, cfg.n_tables, cfg.lookups_per_table)),
+                      jnp.int32)
+    f = dlrm.forward(params, cfg, dense, idx)
+    p = hybrid.pipelined_forward(params, cfg, dense, idx,
+                                 n_micro=2 ** n_micro_pow)
+    np.testing.assert_allclose(f, p, rtol=1e-3, atol=1e-3)
+
+
+def test_quantized_arena_lookup_error_bound(rng):
+    """int8 arena: 3.9x capacity, bounded dequantization error."""
+    spec = se.ArenaSpec(2, 50, 16)
+    arena = se.init_arena(jax.random.PRNGKey(0), spec, scale=1.0)
+    q, scales = se.quantize_arena(arena)
+    assert q.dtype == jnp.int8
+    idx = jnp.asarray(rng.randint(0, 50, (4, 2, 6)), jnp.int32)
+    exact = se.lookup(arena, spec, idx)
+    approx = se.lookup_quantized(q, scales, spec, idx)
+    # error <= L * max_row_scale per component
+    bound = 6 * float(scales.max()) + 1e-6
+    assert float(jnp.abs(exact - approx).max()) <= bound
+    # null row stays inert
+    assert float(jnp.abs(q[spec.null_row:]).max()) == 0.0
+
+
+def test_ragged_kernel_matches_ref(rng):
+    from repro.kernels import embedding_gather as eg
+    from repro.kernels import ref as kref
+    table = jnp.asarray(rng.randn(80, 8), jnp.float32)
+    indices = jnp.asarray(rng.randint(0, 80, (11,)), jnp.int32)
+    offsets = jnp.asarray([0, 2, 2, 5, 11], jnp.int32)
+    got = eg.sparse_lengths_sum(table, indices, offsets, max_l=8,
+                                interpret=True)
+    want = kref.sparse_lengths_sum(table, indices, offsets)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

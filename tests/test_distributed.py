@@ -1,0 +1,138 @@
+"""Distribution tests that need >1 device: run in a subprocess with 8 fake
+host devices (the main pytest process must keep seeing 1 device)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def run_with_devices(code: str, n: int = 8, timeout: int = 480) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = SRC
+    prelude = textwrap.dedent("""
+        import json, jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.launch.mesh import make_mesh
+    """)
+    out = subprocess.run([sys.executable, "-c", prelude + code],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_embedding_matches_replicated():
+    """Row-sharded vocab gather (the sparse engine) == plain table[tokens]."""
+    r = run_with_devices("""
+from repro.models import embedding as emb
+from repro.distributed.sharding import use_mesh
+mesh = make_mesh((2, 4), ('data', 'model'))
+rng = np.random.RandomState(0)
+table = jnp.asarray(rng.randn(128, 16), jnp.float32)
+tokens = jnp.asarray(rng.randint(0, 100, (4, 8)), jnp.int32)
+with use_mesh(mesh):
+    out_sharded = jax.jit(emb.embed_tokens)(table, tokens)
+out_ref = table[tokens]
+err = float(jnp.abs(out_sharded - out_ref).max())
+print(json.dumps({"err": err}))
+""")
+    assert r["err"] < 1e-5
+
+
+def test_moe_ep_matches_local():
+    """Expert-parallel a2a MoE == single-device MoE (same params/tokens)."""
+    r = run_with_devices("""
+from repro.configs.base import MoEConfig
+from repro.models import moe
+from repro.models.params import Builder, split
+from repro.distributed.sharding import use_mesh
+mcfg = MoEConfig(n_experts=8, top_k=2, expert_ff=32, capacity_factor=4.0)
+params, _ = split(moe.init_moe(Builder(jax.random.PRNGKey(0),
+                                       dtype=jnp.float32), mcfg, 16))
+rng = np.random.RandomState(0)
+x = jnp.asarray(rng.randn(2, 16, 16), jnp.float32)   # 32 tokens / 8 shards
+y_local, aux_local = moe.apply_moe(params, mcfg, x)
+mesh = make_mesh((2, 4), ('data', 'model'))
+with use_mesh(mesh):
+    y_ep, aux_ep = jax.jit(lambda p, x: moe.apply_moe(p, mcfg, x))(params, x)
+err = float(jnp.abs(y_ep - y_local).max())
+print(json.dumps({"err": err, "aux_local": float(aux_local),
+                  "aux_ep": float(aux_ep)}))
+""")
+    # capacity differs per shard (T_loc), so tiny drop differences are
+    # possible; with cf=4.0 nothing drops and results must match closely
+    assert r["err"] < 1e-4
+    # aux: EP averages per-shard (frac*imp) products; the local path computes
+    # the global product of means — mathematically different estimators of
+    # the same load-balance signal, so only sanity-check the range.
+    assert 0.5 < r["aux_ep"] / r["aux_local"] < 2.0
+
+
+def test_dlrm_sharded_lookup_matches_replicated():
+    r = run_with_devices("""
+from repro.core import sparse_engine as se
+mesh = make_mesh((2, 4), ('data', 'model'))
+spec = se.ArenaSpec(3, 64, 8)
+arena = se.init_arena(jax.random.PRNGKey(0), spec, shards=4)
+rng = np.random.RandomState(0)
+idx = jnp.asarray(rng.randint(0, 64, (8, 3, 5)), jnp.int32)
+out_rep = se.lookup(arena, spec, idx)
+out_sh = jax.jit(lambda a, i: se.lookup_auto(a, spec, i, mesh))(arena, idx)
+print(json.dumps({"err": float(jnp.abs(out_rep - out_sh).max())}))
+""")
+    assert r["err"] < 1e-5
+
+
+def test_train_step_lowering_small_mesh():
+    """End-to-end mini dry-run: lower+compile a smoke train step on a
+    (2,4) mesh and check the roofline pipeline produces sane numbers."""
+    r = run_with_devices("""
+from repro.configs.registry import SMOKE_ARCHS
+from repro.models import api
+from repro.launch import hlo_analysis
+cfg = SMOKE_ARCHS['qwen1.5-4b']
+mesh = make_mesh((2, 4), ('data', 'model'))
+opt_name, opt, step = api.make_train_step(cfg, mesh=mesh)
+params_sds, opt_sds, _ = api.train_state_specs(cfg, opt_name, opt, mesh)
+import repro.configs.base as base
+shape = base.ShapeConfig('mini', 64, 8, 'train')
+batch_sds = api.input_specs(cfg, shape, mesh)
+with mesh:
+    co = jax.jit(step, donate_argnums=(0, 1)).lower(
+        params_sds, opt_sds, batch_sds).compile()
+h = hlo_analysis.analyze(co.as_text())
+ma = co.memory_analysis()
+print(json.dumps({"flops": h['flops'], "bytes": h['bytes'],
+                  "coll": h['collectives'].get('total', 0.0),
+                  "temp": ma.temp_size_in_bytes}))
+""")
+    assert r["flops"] > 1e6
+    assert r["bytes"] > 1e5
+    assert r["coll"] > 0        # grad all-reduce must exist on a DP mesh
+
+
+def test_elastic_reshard_across_meshes(tmp_path):
+    """Checkpoint on a (4,2) mesh, restore onto (2,4) — elastic rescale."""
+    r = run_with_devices(f"""
+from repro.checkpoint import CheckpointManager
+from repro.distributed.sharding import resolve
+mesh_a = make_mesh((4, 2), ('data', 'model'))
+mesh_b = make_mesh((2, 4), ('data', 'model'))
+state = {{"w": jax.device_put(jnp.arange(64.).reshape(8, 8),
+          NamedSharding(mesh_a, P(None, 'model')))}}
+mgr = CheckpointManager(r"{tmp_path}")
+mgr.save(3, state)
+shardings = {{"w": NamedSharding(mesh_b, P(None, 'model'))}}
+restored, _ = mgr.restore(state, shardings=shardings)
+ok = bool((np.asarray(restored['w']) == np.arange(64.).reshape(8, 8)).all())
+nshards = len(restored['w'].sharding.device_set)
+print(json.dumps({{"ok": ok, "nshards": nshards}}))
+""")
+    assert r["ok"] and r["nshards"] == 8

@@ -1,0 +1,202 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes and dtypes, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import embedding_gather, feature_interaction, gemm, ops, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _close(a, b, tol=2e-2):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    np.testing.assert_allclose(a, b, rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# GEMM (dense engine)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (128, 128, 128),
+                                   (130, 70, 150), (256, 33, 64),
+                                   (1, 512, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_matches_oracle(rng, m, k, n, dtype):
+    x = jnp.asarray(rng.randn(m, k), dtype)
+    w = jnp.asarray(rng.randn(k, n), dtype)
+    got = gemm.gemm(x, w, interpret=True)
+    want = ref.gemm(x, w)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    _close(got, want, tol)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(32, 32, 32), (128, 128, 64)])
+def test_gemm_block_shapes(rng, bm, bn, bk):
+    x = jnp.asarray(rng.randn(96, 80), jnp.float32)
+    w = jnp.asarray(rng.randn(80, 112), jnp.float32)
+    got = gemm.gemm(x, w, bm=bm, bn=bn, bk=bk, interpret=True)
+    _close(got, ref.gemm(x, w), 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Embedding gather-reduce (sparse engine)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("v,d,b,l", [(100, 32, 4, 1), (1000, 32, 16, 20),
+                                     (512, 128, 8, 80), (64, 48, 3, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag_matches_oracle(rng, v, d, b, l, dtype):
+    table = jnp.asarray(rng.randn(v, d), dtype)
+    idx = jnp.asarray(rng.randint(0, v, (b, l)), jnp.int32)
+    got = embedding_gather.embedding_bag(table, idx, interpret=True)
+    want = ref.embedding_bag(table, idx)
+    _close(got, want, 1e-5 if dtype == jnp.float32 else 5e-2)
+
+
+def test_embedding_bag_d_blocking(rng):
+    table = jnp.asarray(rng.randn(256, 96), jnp.float32)
+    idx = jnp.asarray(rng.randint(0, 256, (4, 7)), jnp.int32)
+    got = embedding_gather.embedding_bag(table, idx, bd=32, interpret=True)
+    _close(got, ref.embedding_bag(table, idx), 1e-5)
+
+
+def test_gather_rows(rng):
+    table = jnp.asarray(rng.randn(128, 16), jnp.float32)
+    idx = jnp.asarray(rng.randint(0, 128, (9,)), jnp.int32)
+    got = embedding_gather.gather_rows(table, idx, interpret=True)
+    _close(got, table[idx], 1e-6)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(2, 50), st.integers(1, 16), st.integers(1, 12),
+       st.integers(0, 2**31 - 1))
+def test_embedding_bag_property(v, b, l, seed):
+    """Property: gather-reduce is linear in the table and permutation-
+    invariant in the lookup order."""
+    r = np.random.RandomState(seed % (2**32 - 1))
+    table = jnp.asarray(r.randn(v, 8), jnp.float32)
+    idx = r.randint(0, v, (b, l)).astype(np.int32)
+    out1 = ops.embedding_bag(table, jnp.asarray(idx))
+    # permutation invariance
+    perm = np.stack([r.permutation(row) for row in idx.reshape(b, l)])
+    out2 = ops.embedding_bag(table, jnp.asarray(perm))
+    _close(out1, out2, 1e-4)
+    # linearity: bag(2*table) == 2*bag(table)
+    out3 = ops.embedding_bag(2.0 * table, jnp.asarray(idx))
+    _close(out3, 2.0 * np.asarray(out1), 1e-4)
+
+
+def test_sparse_lengths_sum_ragged(rng):
+    """Paper Fig. 2 semantics with ragged offsets."""
+    table = jnp.asarray(rng.randn(50, 8), jnp.float32)
+    indices = jnp.asarray(rng.randint(0, 50, (10,)), jnp.int32)
+    offsets = jnp.asarray([0, 3, 3, 7, 10], jnp.int32)
+    out = ref.sparse_lengths_sum(table, indices, offsets)
+    for b in range(4):
+        lo, hi = int(offsets[b]), int(offsets[b + 1])
+        want = np.asarray(table)[np.asarray(indices[lo:hi])].sum(0) \
+            if hi > lo else np.zeros(8)
+        _close(out[b], want, 1e-5)
+
+
+def test_embedding_bag_grad_is_scatter_add(rng):
+    table = jnp.asarray(rng.randn(64, 8), jnp.float32)
+    idx = jnp.asarray(rng.randint(0, 64, (5, 3)), jnp.int32)
+    g = jax.grad(lambda t: ops.embedding_bag(t, idx).sum())(table)
+    counts = np.zeros(64)
+    for i in np.asarray(idx).reshape(-1):
+        counts[i] += 1
+    _close(np.asarray(g)[:, 0], counts, 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Feature interaction (dense engine)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,f,d", [(4, 6, 32), (9, 27, 16), (64, 6, 32),
+                                   (1, 51, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_interaction_matches_oracle(rng, b, f, d, dtype):
+    x = jnp.asarray(rng.randn(b, f, d), dtype)
+    got = feature_interaction.interaction(x, interpret=True)
+    want = ref.interaction(x)
+    _close(got, want, 1e-4 if dtype == jnp.float32 else 1e-1)
+
+
+def test_interaction_tril_shape_and_symmetry(rng):
+    x = jnp.asarray(rng.randn(3, 6, 8), jnp.float32)
+    z = ref.interaction(x)
+    # symmetry
+    _close(z, np.swapaxes(np.asarray(z), 1, 2), 1e-5)
+    tril = ops.interaction_tril(x)
+    assert tril.shape == (3, 15)
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(1, 8), st.integers(2, 10), st.integers(1, 16),
+       st.integers(0, 2**31 - 1))
+def test_interaction_property_diag_is_norm(b, f, d, seed):
+    """Property: diagonal of X X^T equals squared row norms."""
+    r = np.random.RandomState(seed % (2**32 - 1))
+    x = jnp.asarray(r.randn(b, f, d), jnp.float32)
+    z = np.asarray(ref.interaction(x))
+    norms = (np.asarray(x) ** 2).sum(-1)
+    _close(np.diagonal(z, axis1=1, axis2=2), norms, 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (memory-term kernel)
+# ---------------------------------------------------------------------------
+
+def _ref_attn(q, k, v, causal, window):
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) \
+        * (q.shape[-1] ** -0.5)
+    S = q.shape[1]
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v)
+
+
+@pytest.mark.parametrize("s,d,causal,window,bq,bk",
+                         [(128, 64, True, None, 64, 64),
+                          (96, 32, False, None, 32, 32),
+                          (128, 64, True, 32, 64, 32),
+                          (100, 16, True, None, 64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_oracle(rng, s, d, causal, window, bq, bk,
+                                        dtype):
+    from repro.kernels.flash_attention import flash_attention
+    q = jnp.asarray(rng.randn(2, s, d), dtype)
+    k = jnp.asarray(rng.randn(2, s, d), dtype)
+    v = jnp.asarray(rng.randn(2, s, d), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window, bq=bq,
+                          bk=bk, interpret=True)
+    want = _ref_attn(q, k, v, causal, window)
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    _close(got, want, tol)
+
+
+def test_flash_attention_gqa_matches_repeat(rng):
+    from repro.kernels.flash_attention import flash_attention_gqa
+    q = jnp.asarray(rng.randn(2, 64, 8, 32), jnp.float32)
+    k = jnp.asarray(rng.randn(2, 64, 2, 32), jnp.float32)
+    v = jnp.asarray(rng.randn(2, 64, 2, 32), jnp.float32)
+    got = flash_attention_gqa(q, k, v, interpret=True)
+    # reference: repeat kv to full heads, per-head attention
+    kk = jnp.repeat(k, 4, axis=2)
+    vv = jnp.repeat(v, 4, axis=2)
+    for h in range(8):
+        want = _ref_attn(q[:, :, h], kk[:, :, h], vv[:, :, h], True, None)
+        _close(got[:, :, h], want, 1e-4)
