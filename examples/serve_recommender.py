@@ -1,58 +1,85 @@
-"""End-to-end driver: serve a personalized-recommendation model with batched
-requests — the paper's deployment scenario (Section IV-A: user-facing
-inference with firm SLAs).
+"""End-to-end driver: serve personalized-recommendation traffic — the
+paper's deployment scenario (Section IV-A: user-facing inference with firm
+SLAs) over the ragged production sparse path.
 
-Request stream -> admission batcher -> hybrid sparse-dense engine
-(microbatch-pipelined) -> CTR predictions + SLA latency report.
+Request stream (variable bag lengths, Zipfian row skew)
+    -> RecBatcher admission (SLA micro-batching)
+    -> RecEngine bucket-padded DLRM inference
+       (--path fixed | ragged | cached; cached pins the top-K hottest rows)
+    -> CTR predictions + per-request latency percentiles.
 
-    PYTHONPATH=src python examples/serve_recommender.py [--requests 4096]
+    PYTHONPATH=src python examples/serve_recommender.py \
+        [--requests 4096] [--path cached] [--cache-k 4096]
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.dlrm import DLRM_CONFIGS
 from repro.core import dlrm
-from repro.core.hybrid import make_pipelined_serve_step
+from repro.core import sparse_engine as se
 from repro.data import DLRMSynthetic
+from repro.serving import RecEngine, requests_from_ragged_batch
 
 parser = argparse.ArgumentParser()
 parser.add_argument("--requests", type=int, default=4096)
-parser.add_argument("--batch-size", type=int, default=64)
-parser.add_argument("--microbatches", type=int, default=4)
+parser.add_argument("--max-batch", type=int, default=64)
+parser.add_argument("--max-wait-ms", type=float, default=2.0)
+parser.add_argument("--path", choices=RecEngine.PATHS, default="ragged")
+parser.add_argument("--dist", choices=("fixed", "uniform", "poisson"),
+                    default="poisson")
+parser.add_argument("--cache-k", type=int, default=4096)
+parser.add_argument("--quantize-cold", action="store_true")
 parser.add_argument("--sla-ms", type=float, default=10.0)
 args = parser.parse_args()
 
 cfg = DLRM_CONFIGS["dlrm1"]
 params = dlrm.init(jax.random.PRNGKey(0), cfg)
-serve = jax.jit(make_pipelined_serve_step(cfg, args.microbatches))
 data = DLRMSynthetic(cfg, seed=7)
+dist = "fixed" if args.path == "fixed" else args.dist
+max_l = cfg.lookups_per_table if dist == "fixed" \
+    else 2 * cfg.lookups_per_table
 
-# warmup / compile
-warm = data.batch(args.batch_size)
-serve(params, {"dense": jnp.asarray(warm["dense"]),
-               "indices": jnp.asarray(warm["indices"])}).block_until_ready()
+# The cached path profiles a warmup trace first (top-K by frequency).
+cache_trace = None
+if args.path == "cached":
+    warm = data.ragged_batch(4096, dist=dist, max_l=max_l)
+    cache_trace = se.trace_row_counts(dlrm.arena_spec(cfg), warm["indices"],
+                                      warm["offsets"])
 
-lat, clicks = [], 0
-n_batches = args.requests // args.batch_size
-for i in range(n_batches):
-    b = data.batch(args.batch_size)
-    t0 = time.perf_counter()
-    probs = serve(params, {"dense": jnp.asarray(b["dense"]),
-                           "indices": jnp.asarray(b["indices"])})
-    probs.block_until_ready()
-    lat.append(time.perf_counter() - t0)
-    clicks += int((np.asarray(probs) > 0.5).sum())
+engine = RecEngine(cfg, params, path=args.path, max_l=max_l,
+                   max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+                   cache_k=args.cache_k if args.path == "cached" else 0,
+                   cache_trace=cache_trace,
+                   quantize_cold=args.quantize_cold)
 
-arr = np.array(lat) * 1e3
-print(f"served {args.requests} requests in {n_batches} batches "
-      f"(batch={args.batch_size}, {args.microbatches} pipeline stages)")
-print(f"latency per batch: p50 {np.percentile(arr, 50):.2f} ms  "
-      f"p95 {np.percentile(arr, 95):.2f} ms  "
-      f"p99 {np.percentile(arr, 99):.2f} ms")
+# Compile every bucket shape off the clock.
+engine.warmup()
+
+t0 = time.perf_counter()
+rid = 0
+while rid < args.requests:
+    n = min(args.max_batch, args.requests - rid)
+    for r in requests_from_ragged_batch(
+            data.ragged_batch(n, dist=dist, max_l=max_l),
+            cfg.n_tables, rid0=rid):
+        engine.submit(r)
+    rid += n
+    engine.step()
+engine.drain()
+wall = time.perf_counter() - t0
+
+s = engine.stats()
+arr = np.asarray(engine.latencies) * 1e3
+print(f"served {s['n']} requests on the '{args.path}' path "
+      f"(bag lengths: {dist}, max_l={max_l})")
+print(f"latency per request: p50 {s['p50_ms']:.2f} ms  "
+      f"p95 {s['p95_ms']:.2f} ms  p99 {s['p99_ms']:.2f} ms")
+print(f"throughput: {s['n'] / wall:.0f} req/s")
 print(f"SLA ({args.sla_ms:.0f} ms): "
-      f"{100.0 * (arr <= args.sla_ms).mean():.1f}% of batches within budget")
-print(f"predicted clicks: {clicks}/{args.requests}")
+      f"{100.0 * (arr <= args.sla_ms).mean():.1f}% of requests in budget")
+if "cache_hit_rate" in s:
+    print(f"hot-row cache: K={args.cache_k}, "
+          f"hit rate {100.0 * s['cache_hit_rate']:.1f}%")

@@ -1,0 +1,50 @@
+"""jax version-compatibility shims (single import point).
+
+The codebase targets current jax naming; older runtimes (e.g. 0.4.x, the
+CPU container image) keep the same semantics under earlier names:
+
+* ``pltpu.CompilerParams``            -> ``pltpu.TPUCompilerParams``
+* ``jax.shard_map(..., check_vma=)``  -> ``jax.experimental.shard_map.shard_map(..., check_rep=)``
+* ``jax.make_mesh(..., axis_types=)`` -> ``jax.make_mesh(...)`` (no axis_types kwarg)
+
+Every kernel / mesh / shard_map call site imports from here so the rest of
+the tree reads as if only the modern API existed.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+from jax.experimental.pallas import tpu as _pltpu
+
+# Pallas TPU compiler-params dataclass (renamed from TPUCompilerParams).
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or _pltpu.TPUCompilerParams
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """Per-shard mapping with replication checking off by default."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)
+
+
+def axis_size(name: str):
+    """Size of a named mapped axis (jax.lax.axis_size is a recent addition;
+    psum of the literal 1 is the classic equivalent and constant-folds)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str],
+              devices: Optional[Sequence] = None) -> jax.sharding.Mesh:
+    kwargs = {}
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(tuple(shape), tuple(axes), devices=devices,
+                         **kwargs)

@@ -60,6 +60,38 @@ def forward(params: Dict, cfg: DLRMConfig, dense: jax.Array,
     return logit[:, 0]
 
 
+def forward_ragged(params: Dict, cfg: DLRMConfig, dense: jax.Array,
+                   indices: jax.Array, offsets: jax.Array, *, max_l: int,
+                   mesh: Optional[jax.sharding.Mesh] = None,
+                   cache: Optional[se.HotRowCache] = None,
+                   quantized=None) -> jax.Array:
+    """Ragged-bag forward: the production SparseLengthsSum path.
+
+    dense: (B, dense_features); indices: flat per-table row-id stream (N,),
+    possibly padded; offsets: (B*T+1,) ragged bag boundaries in (sample,
+    table) row-major order; max_l: static per-bag length bound.
+
+    Embedding source selection (serving-time path selection, MP-Rec-style):
+      * cache=None, quantized=None — sharded/replicated fp arena;
+      * cache set                  — hot-row cache + fp cold arena (exact);
+      * cache + quantized=(q, s)   — hot rows fp, cold rows int8.
+    """
+    spec = arena_spec(cfg)
+    if cache is not None and quantized is not None:
+        emb = se.lookup_ragged_cached_q(cache, quantized[0], quantized[1],
+                                        spec, indices, offsets, max_l=max_l)
+    elif cache is not None:
+        emb = se.lookup_ragged_cached(cache, params["arena"], spec, indices,
+                                      offsets, max_l=max_l)
+    else:
+        emb = se.lookup_ragged_auto(params["arena"], spec, indices, offsets,
+                                    max_l=max_l, mesh=mesh)
+    bot = de.mlp_apply(params["bottom"], dense)
+    x, _ = de.feature_interaction(bot, emb.astype(bot.dtype))
+    logit = de.mlp_apply(params["top"], x)
+    return logit[:, 0]
+
+
 def loss_fn(params: Dict, cfg: DLRMConfig, dense: jax.Array,
             indices: jax.Array, labels: jax.Array,
             mesh: Optional[jax.sharding.Mesh] = None) -> jax.Array:
@@ -93,4 +125,17 @@ def make_serve_step(cfg: DLRMConfig,
     def serve_step(params, batch):
         return jax.nn.sigmoid(
             forward(params, cfg, batch["dense"], batch["indices"], mesh))
+    return serve_step
+
+
+def make_ragged_serve_step(cfg: DLRMConfig, *, max_l: int,
+                           mesh: Optional[jax.sharding.Mesh] = None,
+                           cache: Optional[se.HotRowCache] = None,
+                           quantized=None):
+    """Serve step over ragged batches ({dense, indices, offsets} -> CTR)."""
+    def serve_step(params, batch):
+        return jax.nn.sigmoid(forward_ragged(
+            params, cfg, batch["dense"], batch["indices"],
+            batch["offsets"], max_l=max_l, mesh=mesh, cache=cache,
+            quantized=quantized))
     return serve_step

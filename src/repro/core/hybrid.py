@@ -71,8 +71,13 @@ def pipelined_forward(params: Dict, cfg: DLRMConfig, dense: jax.Array,
 
     # Prologue: gather microbatch 0's embeddings.
     emb0 = se.lookup_auto(params["arena"], spec, idx_s[0], mesh)
-    # Next-microbatch index stream (last one wraps; its gather is discarded).
-    idx_next = jnp.concatenate([idx_s[1:], idx_s[:1]], axis=0)
+    # Next-microbatch index stream. The last microbatch has no successor:
+    # its "next" gather used to wrap around to microbatch 0 and be
+    # discarded — a full wasted EB-Streamer pass. Feed all-null-row
+    # indices instead: the gather degenerates to reducing one always-zero
+    # (hence cache-resident) row, costing no real row traffic.
+    dummy = se.null_indices(spec, (1,) + idx_s.shape[1:])
+    idx_next = jnp.concatenate([idx_s[1:], dummy], axis=0)
 
     def body(emb_i, xs):
         dense_i, idx_n = xs
@@ -94,3 +99,73 @@ def make_pipelined_serve_step(cfg: DLRMConfig, n_micro: int = 4,
         return jax.nn.sigmoid(pipelined_forward(
             params, cfg, batch["dense"], batch["indices"], n_micro, mesh))
     return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Ragged microbatch pipeline (per-microbatch offsets)
+# ---------------------------------------------------------------------------
+
+def split_ragged_microbatches(indices: jax.Array, offsets: jax.Array,
+                              n_micro: int, max_l: int):
+    """Slice one ragged batch into n_micro static-shape ragged streams.
+
+    indices (N,) flat per-table ids (padding allowed); offsets (B*T+1,)
+    with B*T divisible by n_micro. Each microbatch i gets its bag range
+    re-based to local offsets and its index slice padded to the static cap
+    bags_per_micro * max_l (pad positions sit past the local offsets[-1],
+    so every ragged consumer ignores them). Pure static slices + gathers —
+    jit/scan-safe even though bag boundaries are data-dependent.
+    """
+    n_bags = offsets.shape[0] - 1
+    assert n_bags % n_micro == 0, (n_bags, n_micro)
+    per = n_bags // n_micro
+    cap = per * max_l
+    ar = jnp.arange(cap)
+    idx_list, off_list = [], []
+    for i in range(n_micro):
+        base = offsets[i * per]
+        off_list.append(offsets[i * per:(i + 1) * per + 1] - base)
+        pos = jnp.minimum(base + ar, indices.shape[0] - 1)
+        idx_list.append(jnp.take(indices, pos))
+    return jnp.stack(idx_list), jnp.stack(off_list)
+
+
+def pipelined_forward_ragged(params: Dict, cfg: DLRMConfig,
+                             dense: jax.Array, indices: jax.Array,
+                             offsets: jax.Array, *, max_l: int,
+                             n_micro: int = 4,
+                             mesh: Optional[jax.sharding.Mesh] = None
+                             ) -> jax.Array:
+    """Stage-skewed pipeline over ragged microbatches.
+
+    Same overlap structure as `pipelined_forward`, but the sparse stage is
+    the ragged production path: each scan step reduces microbatch i's
+    dense math while streaming microbatch i+1's ragged gathers. The tail
+    dummy is a stream of all-empty bags (offsets all zero) — the cheapest
+    possible no-op pass.
+    """
+    spec = dlrm_mod.arena_spec(cfg)
+    b = dense.shape[0]
+    assert b % n_micro == 0, (b, n_micro)
+    mb = b // n_micro
+    assert offsets.shape[0] - 1 == b * spec.n_tables
+    dense_s = dense.reshape(n_micro, mb, -1)
+    idx_s, off_s = split_ragged_microbatches(indices, offsets, n_micro,
+                                             max_l)
+
+    emb0 = se.lookup_ragged_auto(params["arena"], spec, idx_s[0], off_s[0],
+                                 max_l=max_l, mesh=mesh)
+    idx_next = jnp.concatenate([idx_s[1:], jnp.zeros_like(idx_s[:1])], 0)
+    off_next = jnp.concatenate([off_s[1:], jnp.zeros_like(off_s[:1])], 0)
+
+    def body(emb_i, xs):
+        dense_i, idx_n, off_n = xs
+        bot = de.mlp_apply(params["bottom"], dense_i)
+        x, _ = de.feature_interaction(bot, emb_i.astype(bot.dtype))
+        logit = de.mlp_apply(params["top"], x)[:, 0]
+        emb_n = se.lookup_ragged_auto(params["arena"], spec, idx_n, off_n,
+                                      max_l=max_l, mesh=mesh)
+        return emb_n, logit
+
+    _, logits = jax.lax.scan(body, emb0, (dense_s, idx_next, off_next))
+    return logits.reshape(b)

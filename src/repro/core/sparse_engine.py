@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.kernels import ops
 
 
@@ -91,7 +92,7 @@ def lookup_sharded(arena_shard: jax.Array, spec: ArenaSpec,
     the reduction — implemented by gathering and masking before the local
     reduce, then psum over `axis` combines partial bags.
     """
-    n_shards = jax.lax.axis_size(axis)
+    n_shards = compat.axis_size(axis)
     my = jax.lax.axis_index(axis)
     vlocal = arena_shard.shape[0]
     lo = my * vlocal
@@ -122,12 +123,11 @@ def lookup_auto(arena: jax.Array, spec: ArenaSpec, indices: jax.Array,
     from jax.sharding import PartitionSpec as P
     other = tuple(a for a in mesh.axis_names if a != axis)
     batch_spec = P(other if other else None)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         lambda a, i: lookup_sharded(a, spec, i, axis),
         mesh=mesh,
         in_specs=(P(axis, None), batch_spec),
         out_specs=batch_spec,
-        check_vma=False,
     )
     return fn(arena, indices)
 
@@ -159,6 +159,248 @@ def lookup_quantized(q: jax.Array, scales: jax.Array, spec: ArenaSpec,
     s = jnp.take(scales, flat, axis=0)               # (B*T, L, 1)
     out = (rows * s).sum(axis=1)
     return out.reshape(b, t, spec.dim)
+
+
+# ---------------------------------------------------------------------------
+# Ragged production path (paper Fig. 2: SparseLengthsSum over ragged bags)
+#
+# Batch layout: bags are ordered (sample, table) row-major — bag k holds
+# sample k // n_tables, table k % n_tables. `indices` is the flat stream of
+# per-table row ids for all bags concatenated, possibly padded past
+# offsets[-1] (padding is inert); `offsets` has B*T+1 entries.
+# ---------------------------------------------------------------------------
+
+def ragged_segment_ids(offsets: jax.Array, n: int) -> jax.Array:
+    """Bag id per index position; positions >= offsets[-1] get n_bags."""
+    return jnp.searchsorted(offsets[1:], jnp.arange(n, dtype=offsets.dtype),
+                            side="right")
+
+
+def flatten_ragged_indices(spec: ArenaSpec, indices: jax.Array,
+                           offsets: jax.Array) -> jax.Array:
+    """Per-table row ids (N,) -> arena row ids (N,) (base + offset).
+
+    The owning table of each position follows from its bag id; padded tail
+    positions are routed to the always-zero null row so every downstream
+    consumer (kernel, cache, quantized reduce) stays mask-free.
+    """
+    n = indices.shape[0]
+    n_bags = offsets.shape[0] - 1
+    seg = ragged_segment_ids(offsets, n)
+    table = jnp.minimum(seg, n_bags - 1) % spec.n_tables
+    flat = indices + table.astype(indices.dtype) * spec.rows_per_table
+    return jnp.where(seg < n_bags, flat,
+                     jnp.asarray(spec.null_row, indices.dtype))
+
+
+def lookup_ragged(arena: jax.Array, spec: ArenaSpec, indices: jax.Array,
+                  offsets: jax.Array, *, max_l: int) -> jax.Array:
+    """Ragged gather+reduce: flat per-table ids + offsets -> (B, T, D).
+
+    One fused sparse_lengths_sum kernel pass across all tables — the
+    production replacement for fixed-L `lookup`.
+    """
+    n_bags = offsets.shape[0] - 1
+    b = n_bags // spec.n_tables
+    flat = flatten_ragged_indices(spec, indices, offsets)
+    out = ops.sparse_lengths_sum(arena, flat, offsets, max_l=max_l)
+    return out.reshape(b, spec.n_tables, spec.dim)
+
+
+def lookup_ragged_sharded(arena_shard: jax.Array, spec: ArenaSpec,
+                          indices: jax.Array, offsets: jax.Array,
+                          axis: str) -> jax.Array:
+    """Row-sharded ragged gather+reduce for use inside shard_map.
+
+    Same ownership protocol as `lookup_sharded`: foreign rows are gathered
+    as local row 0 and zero-masked, partial bags are segment-reduced
+    locally, one psum combines them — only reduced (B,T,D) partials cross
+    chips.
+    """
+    my = jax.lax.axis_index(axis)
+    vlocal = arena_shard.shape[0]
+    lo = my * vlocal
+
+    n = indices.shape[0]
+    n_bags = offsets.shape[0] - 1
+    flat = flatten_ragged_indices(spec, indices, offsets)
+    seg = ragged_segment_ids(offsets, n)
+    rel = flat - lo
+    mine = (rel >= 0) & (rel < vlocal) & (seg < n_bags)
+    safe = jnp.where(mine, rel, 0)
+    rows = jnp.take(arena_shard, safe, axis=0)          # (N, D)
+    rows = jnp.where(mine[..., None], rows, 0).astype(jnp.float32)
+    part = jax.ops.segment_sum(rows, jnp.minimum(seg, n_bags - 1),
+                               num_segments=n_bags)
+    out = jax.lax.psum(part, axis)
+    return out.reshape(n_bags // spec.n_tables, spec.n_tables,
+                       spec.dim).astype(arena_shard.dtype)
+
+
+def lookup_ragged_auto(arena: jax.Array, spec: ArenaSpec,
+                       indices: jax.Array, offsets: jax.Array, *,
+                       max_l: int,
+                       mesh: Optional[jax.sharding.Mesh] = None,
+                       axis: str = "model") -> jax.Array:
+    """pjit-level ragged entry: row-shard the arena over `axis` on a mesh."""
+    if mesh is None or axis not in mesh.axis_names or mesh.shape[axis] == 1:
+        return lookup_ragged(arena, spec, indices, offsets, max_l=max_l)
+    from jax.sharding import PartitionSpec as P
+    fn = compat.shard_map(
+        lambda a, i, o: lookup_ragged_sharded(a, spec, i, o, axis),
+        mesh=mesh,
+        in_specs=(P(axis, None), P(None), P(None)),
+        out_specs=P(None, None, None),
+    )
+    return fn(arena, indices, offsets)
+
+
+def lookup_ragged_quantized(q: jax.Array, scales: jax.Array,
+                            spec: ArenaSpec, indices: jax.Array,
+                            offsets: jax.Array) -> jax.Array:
+    """Ragged gather+reduce over the int8 arena (dequantize per row)."""
+    n_bags = offsets.shape[0] - 1
+    flat = flatten_ragged_indices(spec, indices, offsets)
+    out = _ragged_reduce_q(q, scales, flat, offsets, n_bags)
+    return out.reshape(n_bags // spec.n_tables, spec.n_tables, spec.dim)
+
+
+def _ragged_reduce_q(q: jax.Array, scales: jax.Array, flat: jax.Array,
+                     offsets: jax.Array, n_bags: int) -> jax.Array:
+    seg = ragged_segment_ids(offsets, flat.shape[0])
+    rows = jnp.take(q, flat, axis=0).astype(jnp.float32) \
+        * jnp.take(scales, flat, axis=0)
+    return jax.ops.segment_sum(rows, seg, num_segments=n_bags)
+
+
+def null_indices(spec: ArenaSpec, shape) -> jax.Array:
+    """Per-table ids of given (..., T, L) shape that all flatten to the
+    null (always-zero) arena row: id (T - t)*rows_per_table for table t.
+
+    Gathering them is a zero-contribution reduction over one hot-in-cache
+    row — the zero-cost dummy stream for pipeline tails.
+    """
+    assert shape[-2] == spec.n_tables, (shape, spec.n_tables)
+    ids = (spec.n_tables - jnp.arange(spec.n_tables, dtype=jnp.int32)) \
+        * spec.rows_per_table
+    return jnp.broadcast_to(ids[:, None], shape)
+
+
+# ---------------------------------------------------------------------------
+# Hot-row cache (beyond-paper: RecNMP-style exploitation of Zipfian skew)
+#
+# Production embedding traces are heavily skewed: a few thousand rows absorb
+# most lookups. The top-K rows by trace frequency are pinned in a small
+# replicated "hot" arena (K+1 rows, slot K the zero null slot); cold rows
+# stay in the big sharded / quantized arena. A lookup splits into two
+# mask-free fused passes — hot slots (misses -> null slot) + cold rows
+# (hits -> null row) — and their sum is exactly the uncached result.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HotRowCache:
+    hot_rows: jax.Array      # (K+1, D), slot K always zero
+    slot_of: jax.Array       # (arena_rows,) int32: slot, or K when cold
+    hot_ids: jax.Array       # (K,) int32 pinned arena rows (stats/debug)
+
+    @property
+    def k(self) -> int:
+        return self.hot_rows.shape[0] - 1
+
+
+jax.tree_util.register_dataclass(
+    HotRowCache, data_fields=("hot_rows", "slot_of", "hot_ids"),
+    meta_fields=())
+
+
+def trace_row_counts(spec: ArenaSpec, indices, offsets=None,
+                     rows: Optional[int] = None) -> np.ndarray:
+    """Arena-row touch histogram from an access trace (host-side).
+
+    indices: fixed-shape (B, T, L) per-table ids, or — with `offsets` —
+    the flat ragged stream (padded tail ignored).
+    """
+    rows = rows or spec.total_rows
+    if offsets is None:
+        flat = np.asarray(flatten_indices(spec, jnp.asarray(indices)))
+        flat = flat.ravel()
+    else:
+        idx = np.asarray(indices)
+        off = np.asarray(offsets)
+        n_valid = int(off[-1])
+        seg = np.searchsorted(off[1:], np.arange(n_valid), side="right")
+        flat = idx[:n_valid] + (seg % spec.n_tables) * spec.rows_per_table
+    return np.bincount(flat, minlength=rows)
+
+
+def build_hot_cache(arena: jax.Array, spec: ArenaSpec, counts,
+                    k: int) -> HotRowCache:
+    """Pin the top-k arena rows by trace frequency (host-side build)."""
+    counts = np.asarray(counts)[:spec.null_row]     # real rows only
+    k = int(min(k, counts.size))
+    hot_ids = np.argsort(counts, kind="stable")[::-1][:k].astype(np.int32)
+    slot_of = np.full((arena.shape[0],), k, np.int32)
+    slot_of[hot_ids] = np.arange(k, dtype=np.int32)
+    hot_rows = jnp.concatenate(
+        [jnp.take(arena, jnp.asarray(hot_ids), axis=0),
+         jnp.zeros((1, arena.shape[1]), arena.dtype)], axis=0)
+    return HotRowCache(hot_rows=hot_rows, slot_of=jnp.asarray(slot_of),
+                       hot_ids=jnp.asarray(hot_ids))
+
+
+def _cache_split(cache: HotRowCache, spec: ArenaSpec, indices: jax.Array,
+                 offsets: jax.Array, max_l: int):
+    """Shared hot/cold protocol: the hot pass reduces cache slots (misses
+    hit the zero null slot), and cold_idx redirects cached rows to the
+    arena null row so any cold reduction over it is exactly the complement.
+    Returns (hot_sum (n_bags, D) f32, cold_idx (N,), n_bags)."""
+    n_bags = offsets.shape[0] - 1
+    k = cache.hot_rows.shape[0] - 1
+    flat = flatten_ragged_indices(spec, indices, offsets)
+    slots = jnp.take(cache.slot_of, flat)
+    hot = ops.sparse_lengths_sum(cache.hot_rows, slots, offsets,
+                                 max_l=max_l).astype(jnp.float32)
+    cold_idx = jnp.where(slots < k,
+                         jnp.asarray(spec.null_row, flat.dtype), flat)
+    return hot, cold_idx, n_bags
+
+
+def lookup_ragged_cached(cache: HotRowCache, arena: jax.Array,
+                         spec: ArenaSpec, indices: jax.Array,
+                         offsets: jax.Array, *, max_l: int) -> jax.Array:
+    """Hot-row-cached ragged lookup, exact vs `lookup_ragged`."""
+    hot, cold_idx, n_bags = _cache_split(cache, spec, indices, offsets,
+                                         max_l)
+    cold = ops.sparse_lengths_sum(arena, cold_idx, offsets, max_l=max_l)
+    out = hot + cold.astype(jnp.float32)
+    return out.reshape(n_bags // spec.n_tables, spec.n_tables,
+                       spec.dim).astype(arena.dtype)
+
+
+def lookup_ragged_cached_q(cache: HotRowCache, q: jax.Array,
+                           scales: jax.Array, spec: ArenaSpec,
+                           indices: jax.Array, offsets: jax.Array, *,
+                           max_l: int) -> jax.Array:
+    """Hot rows exact (fp replicated arena), cold rows from the int8 arena
+    — the capacity configuration: hot working set at full precision, the
+    long tail at 3.9x density."""
+    hot, cold_idx, n_bags = _cache_split(cache, spec, indices, offsets,
+                                         max_l)
+    cold = _ragged_reduce_q(q, scales, cold_idx, offsets, n_bags)
+    return (hot + cold).reshape(n_bags // spec.n_tables, spec.n_tables,
+                                spec.dim)
+
+
+def cache_hit_rate(cache: HotRowCache, spec: ArenaSpec, indices: jax.Array,
+                   offsets: jax.Array) -> jax.Array:
+    """Fraction of (valid) lookups served from the hot arena."""
+    k = cache.hot_rows.shape[0] - 1
+    flat = flatten_ragged_indices(spec, indices, offsets)
+    slots = jnp.take(cache.slot_of, flat)
+    n = indices.shape[0]
+    valid = jnp.arange(n) < offsets[-1]
+    hits = jnp.sum(jnp.where(valid & (slots < k), 1, 0))
+    return hits / jnp.maximum(offsets[-1], 1)
 
 
 def make_zipf_indices(rng: np.random.RandomState, spec: ArenaSpec,

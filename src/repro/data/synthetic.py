@@ -40,6 +40,71 @@ class DLRMSynthetic:
         while True:
             yield self.batch(batch_size)
 
+    def ragged_batch(self, batch_size: int, dist: str = "poisson",
+                     mean_l: Optional[int] = None,
+                     max_l: Optional[int] = None,
+                     pad_to: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """Variable bag-length batch — the ragged production format.
+
+        Per-(sample, table) bag lengths are drawn from `dist`:
+          * 'fixed'   — every bag has mean_l lookups (ragged encoding of
+                        the fixed path; used for equivalence tests);
+          * 'uniform' — lengths uniform on [0, max_l] (empty bags happen,
+                        as in production when a user has no history for a
+                        feature);
+          * 'poisson' — lengths ~ Poisson(mean_l) clipped to [0, max_l].
+
+        Returns {dense, indices (flat per-table ids), offsets (B*T+1,),
+        lengths, labels, max_l}. `pad_to` pads the flat index stream with
+        zeros past offsets[-1] to a static size (serving bucket shapes);
+        padded positions are inert in every ragged consumer.
+        """
+        c = self.cfg
+        mean_l = mean_l if mean_l is not None else c.lookups_per_table
+        n_bags = batch_size * c.n_tables
+        if dist == "fixed":
+            max_l = max_l if max_l is not None else mean_l
+            lens = np.full(n_bags, mean_l, np.int32)
+        elif dist == "uniform":
+            max_l = max_l if max_l is not None else 2 * mean_l
+            lens = self.rng.randint(0, max_l + 1, n_bags).astype(np.int32)
+        elif dist == "poisson":
+            max_l = max_l if max_l is not None else 2 * mean_l
+            lens = np.clip(self.rng.poisson(mean_l, n_bags),
+                           0, max_l).astype(np.int32)
+        else:
+            raise ValueError(f"unknown length distribution: {dist}")
+        assert mean_l <= max_l, (mean_l, max_l)
+
+        offsets = np.zeros(n_bags + 1, np.int32)
+        np.cumsum(lens, out=offsets[1:])
+        n = int(offsets[-1])
+        raw = self.rng.zipf(self.alpha, size=n)
+        indices = ((raw - 1) % c.rows_per_table).astype(np.int32)
+        if pad_to is not None:
+            assert pad_to >= n, (pad_to, n)
+            indices = np.concatenate(
+                [indices, np.zeros(pad_to - n, np.int32)])
+
+        dense = self.rng.randn(batch_size,
+                               c.dense_features).astype(np.float32)
+        logit = dense @ self._w * 0.5
+        labels = (self.rng.rand(batch_size)
+                  < 1.0 / (1.0 + np.exp(-logit))).astype(np.float32)
+        return {"dense": dense, "indices": indices, "offsets": offsets,
+                "lengths": lens, "labels": labels, "max_l": max_l}
+
+    @staticmethod
+    def ragged_to_fixed(batch: Dict[str, np.ndarray],
+                        n_tables: int) -> np.ndarray:
+        """Equal-length ragged batch -> (B, T, L) fixed indices."""
+        lens = np.diff(batch["offsets"])
+        l = int(lens[0])
+        assert (lens == l).all(), "ragged_to_fixed needs equal-length bags"
+        n = int(batch["offsets"][-1])
+        b = len(lens) // n_tables
+        return batch["indices"][:n].reshape(b, n_tables, l)
+
 
 class LMSynthetic:
     def __init__(self, cfg: ModelConfig, seed: int = 0):

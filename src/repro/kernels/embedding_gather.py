@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _bag_kernel(idx_ref, table_ref, o_ref, acc_ref, *, n_l: int):
     l = pl.program_id(2)
@@ -72,7 +74,7 @@ def embedding_bag(table: jax.Array, indices: jax.Array, *, bd: int = 2048,
         functools.partial(_bag_kernel, n_l=l),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
         interpret=interpret,
     )
@@ -144,7 +146,7 @@ def sparse_lengths_sum(table: jax.Array, indices: jax.Array,
         functools.partial(_ragged_kernel, max_l=max_l),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
         interpret=interpret,
     )

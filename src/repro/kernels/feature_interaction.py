@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _interact_kernel(x_ref, o_ref):
     x = x_ref[...]
@@ -37,7 +39,7 @@ def interaction(x: jax.Array, *, bb: int = 64,
         in_specs=[pl.BlockSpec((bb, f, d), lambda i: (i, 0, 0))],
         out_specs=pl.BlockSpec((bb, f, f), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, f, f), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x)

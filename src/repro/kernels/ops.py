@@ -94,6 +94,23 @@ def gather_rows(table: jax.Array, indices: jax.Array) -> jax.Array:
     return embedding_bag(table, indices[:, None])
 
 
+def sparse_lengths_sum(table: jax.Array, indices: jax.Array,
+                       offsets: jax.Array, *, max_l: int) -> jax.Array:
+    """Ragged SparseLengthsSum (the paper's Fig. 2 production API).
+
+    out[b] = sum over table[indices[offsets[b]:offsets[b+1]]]; indices may
+    be padded past offsets[-1] (padded positions are ignored). `max_l` is
+    the static per-bag length bound the kernel grid is sized for. The XLA
+    path is differentiable (take + segment-sum); the Pallas path serves
+    inference.
+    """
+    impl = get_impl()
+    if impl == "xla":
+        return _ref.sparse_lengths_sum(table, indices, offsets)
+    return _eg.sparse_lengths_sum(table, indices, offsets, max_l=max_l,
+                                  interpret=(impl == "interpret"))
+
+
 # ---------------------------------------------------------------------------
 # Feature interaction (dense engine, batched GEMM)
 # ---------------------------------------------------------------------------

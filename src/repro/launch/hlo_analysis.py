@@ -50,8 +50,55 @@ _WHILE_RE = re.compile(
 _CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
 _TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
 _CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
-_OPERANDS_RE = re.compile(r"\(%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\)")
 _LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _split_top(s: str) -> List[str]:
+    """Split on commas at bracket depth 0 (commas inside [],{},() stay)."""
+    out: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def _operand_names(ls: str, op: str) -> List[str]:
+    """Operand variable names of ``op(...)`` on a definition line.
+
+    Tolerates both HLO text flavors: bare names (``dot(%x, %y)`` /
+    ``dot(x, y)``) and operand types printed inline
+    (``dot(f32[8,8]{1,0} %x, ...)``, older XLA) — the name is always the
+    last whitespace token of each top-level comma chunk.
+    """
+    paren = ls.find(op + "(")
+    if paren < 0:
+        return []
+    i = paren + len(op) + 1
+    start = i
+    depth = 1
+    while i < len(ls) and depth:
+        if ls[i] == "(":
+            depth += 1
+        elif ls[i] == ")":
+            depth -= 1
+        i += 1
+    names = []
+    for chunk in _split_top(ls[start:i - 1]):
+        toks = chunk.strip().split()
+        if toks:
+            names.append(toks[-1].lstrip("%"))
+    return names
 
 
 def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
@@ -134,8 +181,15 @@ def analyze(hlo_text: str) -> Dict[str, object]:
             if wm:
                 c.edges.append(("while", wm.group(2) + "|" + wm.group(1)))
             else:
+                # A fusion accounts its own traffic at the fusion op, so its
+                # sub-computation contributes flops only; a plain call (e.g.
+                # XLA:CPU's parallel_* wrappers via to_apply) is transparent
+                # and must propagate bytes too.
+                kind = "fusion" if op == "fusion" else "call"
                 for cm in _CALLS_RE.findall(ls):
-                    c.edges.append(("call", cm))
+                    c.edges.append((kind, cm))
+                for cm in _TO_APPLY_RE.findall(ls):
+                    c.edges.append((kind, cm))
 
             # --- collectives ---
             base_op = re.sub(r"-(start|done)$", "", op)
@@ -150,10 +204,9 @@ def analyze(hlo_text: str) -> Dict[str, object]:
             if op == "dot":
                 contract = 1
                 lm = _LHS_CONTRACT_RE.search(ls)
-                om = _OPERANDS_RE.search(ls[ls.index("dot("):])
-                if lm and om:
-                    lhs_name = om.group(1).split(",")[0].strip().lstrip("%")
-                    lhs_type = symbols.get(lhs_name)
+                operands = _operand_names(ls, "dot")
+                if lm and operands:
+                    lhs_type = symbols.get(operands[0])
                     ldims = _dims(lhs_type) if lhs_type else None
                     if ldims:
                         for i in lm.group(1).split(","):
@@ -163,12 +216,10 @@ def analyze(hlo_text: str) -> Dict[str, object]:
                                     contract *= ldims[idx]
                 c.flops += 2.0 * relems * contract
                 c.bytes += rbytes
-                om2 = _OPERANDS_RE.search(ls[ls.index("dot("):])
-                if om2:
-                    for nm in om2.group(1).split(","):
-                        t = symbols.get(nm.strip().lstrip("%"))
-                        if t:
-                            c.bytes += _shape_elems_bytes(t)[1]
+                for nm in operands:
+                    t = symbols.get(nm)
+                    if t:
+                        c.bytes += _shape_elems_bytes(t)[1]
                 continue
 
             # --- bytes: memory-touching ops ---
@@ -176,17 +227,9 @@ def analyze(hlo_text: str) -> Dict[str, object]:
                 continue
 
             def _operand_bytes() -> List[int]:
-                paren = ls.find(op + "(")
-                if paren < 0:
-                    return []
-                om = _OPERANDS_RE.search(ls[paren:])
-                if not om:
-                    return []
-                out = []
-                for nm in om.group(1).split(","):
-                    t = symbols.get(nm.strip().lstrip("%"))
-                    out.append(_shape_elems_bytes(t)[1] if t else 0)
-                return out
+                return [_shape_elems_bytes(symbols[nm])[1]
+                        if nm in symbols else 0
+                        for nm in _operand_names(ls, op)]
 
             if op in ("dynamic-slice", "slice", "gather"):
                 # reads only the sliced region (~= result), writes result
@@ -240,6 +283,8 @@ def analyze(hlo_text: str) -> Dict[str, object]:
             else:
                 sf, sb, sc = totals(ref, stack | {name})
                 f += sf
+                if kind == "call":
+                    b += sb
                 # fusion-internal bytes already accounted at the fusion op
                 for k, v in sc.items():
                     coll[k] = coll.get(k, 0.0) + v

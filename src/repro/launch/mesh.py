@@ -9,6 +9,7 @@ from __future__ import annotations
 
 from typing import Optional, Sequence
 
+from repro import compat
 import jax
 
 
@@ -25,10 +26,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
             f"{len(devices)} — run under "
             f"XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             f"for the dry-run")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-        devices=devices)
+    return compat.make_mesh(shape, axes, devices=devices)
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str],
@@ -38,7 +36,4 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str],
     for s in shape:
         n *= s
     devices = (devices or jax.devices())[:n]
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-        devices=devices)
+    return compat.make_mesh(shape, axes, devices=devices)

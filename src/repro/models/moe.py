@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import MoEConfig
 from repro.distributed.sharding import active_mesh
 from repro.models.params import Builder
@@ -95,7 +96,7 @@ def _moe_shard(xl, wr, wg, wu, wd, *, mcfg: MoEConfig, ep_axis: str,
     rematerialization (measured: 3x 30 GB all-gathers of the GLOBAL
     activation per layer on the multi-pod kimi cell). A local reshape is
     free."""
-    ep = jax.lax.axis_size(ep_axis)
+    ep = compat.axis_size(ep_axis)
     e_loc = mcfg.n_experts // ep
     b_loc, s_loc, d = xl.shape
     xl = xl.reshape(b_loc * s_loc, d)
@@ -184,14 +185,13 @@ def apply_moe(p, mcfg: MoEConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
             fsdp = (dp_axes if dp_axes and d % n_dp == 0
                     and mcfg.expert_ff % n_dp == 0 else ())
             wspec = P("model", fsdp if fsdp else None, None)
-            fn = jax.shard_map(
+            fn = compat.shard_map(
                 functools.partial(_moe_shard, mcfg=mcfg, ep_axis="model",
                                   all_axes=axes, fsdp_axis=fsdp),
                 mesh=mesh,
                 in_specs=(P(bspec, "model", None), P(None, None),
                           wspec, wspec, wspec),
-                out_specs=(P(bspec, "model", None), P()),
-                check_vma=False)
+                out_specs=(P(bspec, "model", None), P()))
             return fn(x, p["wr"], p["wg"], p["wu"], p["wd"])
     y, aux = _moe_local(x.reshape(b * s, d), p, mcfg)
     return y.reshape(b, s, d), aux

@@ -1,3 +1,6 @@
 from repro.serving.engine import Batcher, DecodeEngine, Request
+from repro.serving.rec_engine import (RecBatcher, RecEngine, RecRequest,
+                                      requests_from_ragged_batch)
 
-__all__ = ["Batcher", "DecodeEngine", "Request"]
+__all__ = ["Batcher", "DecodeEngine", "Request", "RecBatcher", "RecEngine",
+           "RecRequest", "requests_from_ragged_batch"]

@@ -1,0 +1,256 @@
+"""Recommendation serving engine — the paper's actual deployment target.
+
+The LM engine (``engine.py``) serves token streams; this engine serves
+CTR-prediction traffic (paper Section IV-A: user-facing inference with firm
+SLAs) over the ragged production sparse path:
+
+* ``RecRequest`` — one user impression: dense features + per-table ragged
+  sparse id lists (the SparseLengthsSum format of paper Fig. 2);
+* ``RecBatcher`` — admission queue with (max_batch, max_wait_ms)
+  micro-batching, the standard SLA/throughput knob;
+* ``RecEngine`` — drains the batcher, pads each micro-batch to a static
+  *bucket* shape (batch rounded up to a bucket size with empty-bag dummy
+  rows, flat index stream padded to bucket*T*max_l) so every bucket
+  compiles exactly once, then runs one of three embedding paths:
+
+    - ``fixed``  — the legacy fixed-L engine (requires every bag to have
+                   exactly cfg.lookups_per_table ids; kept as the
+                   regression baseline);
+    - ``ragged`` — `dlrm.forward_ragged` over the sharded/replicated arena;
+    - ``cached`` — ragged + hot-row cache: top-K rows by trace frequency
+                   pinned in a small replicated arena (RecNMP's observation
+                   that Zipfian skew concentrates traffic), cold rows from
+                   the fp32 or int8 arena.
+
+  Per-request latency percentiles (p50/p95/p99) and, on the cached path,
+  the measured hot hit rate are exported by ``stats()``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DLRMConfig
+from repro.core import dlrm
+from repro.core import sparse_engine as se
+
+
+@dataclass
+class RecRequest:
+    rid: int
+    dense: np.ndarray                   # (dense_features,) float32
+    sparse_ids: List[np.ndarray]        # per table: (l_t,) int32, l_t<=max_l
+    submitted_at: float = field(default_factory=time.time)
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    prob: Optional[float] = None        # predicted CTR, set when served
+
+
+class RecBatcher:
+    """Admission queue: release a micro-batch when it is full or when the
+    oldest request has waited max_wait_ms (the SLA knob)."""
+
+    def __init__(self, max_batch: int = 32, max_wait_ms: float = 2.0):
+        self.max_batch = max_batch
+        self.max_wait_ms = max_wait_ms
+        self._queue: List[RecRequest] = []
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def submit(self, req: RecRequest):
+        self._queue.append(req)
+
+    def take(self, force: bool = False) -> List[RecRequest]:
+        if not self._queue:
+            return []
+        oldest = time.time() - self._queue[0].submitted_at
+        if force or len(self._queue) >= self.max_batch \
+                or oldest * 1e3 >= self.max_wait_ms:
+            batch = self._queue[:self.max_batch]
+            self._queue = self._queue[self.max_batch:]
+            return batch
+        return []
+
+
+def _bucket(n: int, buckets: Sequence[int]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class RecEngine:
+    """Batcher-fed DLRM inference over the ragged sparse path."""
+
+    PATHS = ("fixed", "ragged", "cached")
+
+    def __init__(self, cfg: DLRMConfig, params: Dict, *,
+                 path: str = "ragged", max_l: Optional[int] = None,
+                 max_batch: int = 32, max_wait_ms: float = 2.0,
+                 buckets: Sequence[int] = (1, 2, 4, 8, 16, 32),
+                 cache_k: int = 0, cache_trace=None,
+                 quantize_cold: bool = False,
+                 mesh: Optional[jax.sharding.Mesh] = None):
+        assert path in self.PATHS, path
+        self.cfg = cfg
+        self.params = params
+        self.path = path
+        self.spec = dlrm.arena_spec(cfg)
+        self.max_l = max_l if max_l is not None else cfg.lookups_per_table
+        self.mesh = mesh
+        self.batcher = RecBatcher(max_batch, max_wait_ms)
+        self.buckets = tuple(sorted(set(buckets) | {max_batch}))
+        self.latencies: List[float] = []
+        self.served = 0
+        self._hits = 0.0
+        self._lookups = 0
+
+        self.cache: Optional[se.HotRowCache] = None
+        quantized = None
+        if path == "cached":
+            assert cache_k > 0, "cached path needs cache_k > 0"
+            counts = (cache_trace if cache_trace is not None
+                      else np.ones(self.spec.total_rows))
+            self.cache = se.build_hot_cache(params["arena"], self.spec,
+                                            counts, cache_k)
+            if quantize_cold:
+                quantized = se.quantize_arena(params["arena"])
+        self._quantized = quantized
+
+        if path == "fixed":
+            step = dlrm.make_serve_step(cfg, mesh)
+        else:
+            step = dlrm.make_ragged_serve_step(
+                cfg, max_l=self.max_l, mesh=mesh, cache=self.cache,
+                quantized=quantized)
+        self._serve = jax.jit(step)
+        if self.cache is not None:
+            self._hit_rate = jax.jit(
+                lambda i, o: se.cache_hit_rate(self.cache, self.spec, i, o))
+
+    def warmup(self):
+        """Compile every bucket shape off the SLA clock.
+
+        Without this the first live request landing in each bucket pays
+        that bucket's jit compile (hundreds of ms) — a p99 spike that
+        would show up as an SLA violation in production.
+        """
+        t = self.cfg.n_tables
+        l = self.cfg.lookups_per_table if self.path == "fixed" else 0
+        dummy = [RecRequest(
+            rid=-1, dense=np.zeros(self.cfg.dense_features, np.float32),
+            sparse_ids=[np.zeros(l, np.int32)] * t)]
+        for bucket in self.buckets:
+            batch = self._assemble(dummy, bucket)
+            np.asarray(self._serve(self.params, batch))
+            if self.cache is not None:
+                self._hit_rate(batch["indices"],
+                               batch["offsets"]).block_until_ready()
+
+    # -- request plumbing ---------------------------------------------------
+
+    def submit(self, req: RecRequest):
+        assert len(req.sparse_ids) == self.cfg.n_tables, \
+            (len(req.sparse_ids), self.cfg.n_tables)
+        self.batcher.submit(req)
+
+    def _assemble(self, reqs: List[RecRequest], bucket: int) -> Dict:
+        """Pad a micro-batch to its bucket's static shapes."""
+        t = self.cfg.n_tables
+        dense = np.zeros((bucket, self.cfg.dense_features), np.float32)
+        for i, r in enumerate(reqs):
+            dense[i] = r.dense
+        if self.path == "fixed":
+            l = self.cfg.lookups_per_table
+            idx = np.zeros((bucket, t, l), np.int32)
+            for i, r in enumerate(reqs):
+                for j, ids in enumerate(r.sparse_ids):
+                    assert len(ids) == l, \
+                        "fixed path requires exact-length bags"
+                    idx[i, j] = ids
+            # dummy rows gather row 0 — harmless, their outputs are dropped
+            return {"dense": jnp.asarray(dense), "indices": jnp.asarray(idx)}
+        lens = np.zeros(bucket * t, np.int32)
+        for i, r in enumerate(reqs):
+            for j, ids in enumerate(r.sparse_ids):
+                assert len(ids) <= self.max_l, (len(ids), self.max_l)
+                lens[i * t + j] = len(ids)
+        offsets = np.zeros(bucket * t + 1, np.int32)
+        np.cumsum(lens, out=offsets[1:])
+        flat = np.zeros(bucket * t * self.max_l, np.int32)  # static cap
+        for i, r in enumerate(reqs):
+            for j, ids in enumerate(r.sparse_ids):
+                o = offsets[i * t + j]
+                flat[o:o + len(ids)] = ids
+        return {"dense": jnp.asarray(dense), "indices": jnp.asarray(flat),
+                "offsets": jnp.asarray(offsets)}
+
+    def step(self, force: bool = False) -> int:
+        """Drain one micro-batch through the engine; returns #served."""
+        reqs = self.batcher.take(force=force)
+        if not reqs:
+            return 0
+        now = time.time()
+        for r in reqs:
+            r.started_at = now
+        bucket = _bucket(len(reqs), self.buckets)
+        batch = self._assemble(reqs, bucket)
+        probs = np.asarray(self._serve(self.params, batch))
+        if self.cache is not None:
+            n = int(batch["offsets"][-1])
+            if n:
+                hr = float(self._hit_rate(batch["indices"],
+                                          batch["offsets"]))
+                self._hits += hr * n
+                self._lookups += n
+        done = time.time()
+        for i, r in enumerate(reqs):
+            r.prob = float(probs[i])
+            r.finished_at = done
+            self.latencies.append(done - r.submitted_at)
+        self.served += len(reqs)
+        return len(reqs)
+
+    def drain(self) -> int:
+        """Serve everything still queued (end-of-stream flush)."""
+        n = 0
+        while len(self.batcher):
+            n += self.step(force=True)
+        return n
+
+    # -- reporting ----------------------------------------------------------
+
+    def stats(self) -> Dict[str, float]:
+        if not self.latencies:
+            return {"n": 0}
+        arr = np.asarray(self.latencies)
+        out = {"n": len(arr),
+               "path": self.path,
+               "p50_ms": float(np.percentile(arr, 50) * 1e3),
+               "p95_ms": float(np.percentile(arr, 95) * 1e3),
+               "p99_ms": float(np.percentile(arr, 99) * 1e3),
+               "mean_ms": float(arr.mean() * 1e3)}
+        if self._lookups:
+            out["cache_hit_rate"] = self._hits / self._lookups
+        return out
+
+
+def requests_from_ragged_batch(batch: Dict[str, np.ndarray], n_tables: int,
+                               rid0: int = 0) -> List[RecRequest]:
+    """Explode a DLRMSynthetic.ragged_batch into individual requests."""
+    off = batch["offsets"]
+    b = (len(off) - 1) // n_tables
+    out = []
+    for i in range(b):
+        ids = [batch["indices"][off[i * n_tables + j]:
+                                off[i * n_tables + j + 1]]
+               for j in range(n_tables)]
+        out.append(RecRequest(rid=rid0 + i, dense=batch["dense"][i],
+                              sparse_ids=ids))
+    return out

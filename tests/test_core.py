@@ -132,6 +132,25 @@ def test_dlrm_pipelined_equivalence_property(n_micro_pow, seed):
     np.testing.assert_allclose(f, p, rtol=1e-3, atol=1e-3)
 
 
+def test_pipelined_tail_dummy_is_null_and_equivalent(dlrm_setup):
+    """The last microbatch's prefetch stream is all-null-row indices (a
+    zero-cost dummy, not a wasted wrap-around gather of microbatch 0), and
+    the pipeline output still equals single-shot execution exactly."""
+    cfg, params, batch = dlrm_setup
+    spec = dlrm.arena_spec(cfg)
+    dummy = se.null_indices(spec, (4, spec.n_tables, 3))
+    flat = np.asarray(se.flatten_indices(spec, dummy))
+    assert (flat == spec.null_row).all()
+    # the null row gathers to exactly zero
+    out = se.lookup(params["arena"], spec, dummy)
+    assert float(jnp.abs(out).max()) == 0.0
+    f = dlrm.forward(params, cfg, batch["dense"], batch["indices"])
+    for n_micro in (1, 2, 4, 8):
+        p = hybrid.pipelined_forward(params, cfg, batch["dense"],
+                                     batch["indices"], n_micro=n_micro)
+        np.testing.assert_allclose(f, p, rtol=1e-4, atol=1e-4)
+
+
 def test_quantized_arena_lookup_error_bound(rng):
     """int8 arena: 3.9x capacity, bounded dequantization error."""
     spec = se.ArenaSpec(2, 50, 16)

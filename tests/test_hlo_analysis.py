@@ -27,7 +27,10 @@ def test_flops_scan_multiplies_trip_count():
     r = hlo_analysis.analyze(co.as_text())
     assert r["flops"] == pytest.approx(2 * 128 ** 3 * 10, rel=0.01)
     # XLA's own counter misses the loop — documents why we parse ourselves
-    assert co.cost_analysis()["flops"] < r["flops"] / 5
+    ca = co.cost_analysis()
+    if isinstance(ca, list):     # older jax returns one dict per program
+        ca = ca[0]
+    assert ca["flops"] < r["flops"] / 5
 
 
 def test_flops_nested_scan():

@@ -1,0 +1,195 @@
+"""Ragged DLRM forward, pipelined ragged execution, and the rec serving
+engine end-to-end (submit -> batch -> predict -> latency stats)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.dlrm import DLRM_SMOKE
+from repro.core import dlrm, hybrid
+from repro.core import sparse_engine as se
+from repro.data import DLRMSynthetic
+from repro.serving import (RecBatcher, RecEngine, RecRequest,
+                           requests_from_ragged_batch)
+
+
+@pytest.fixture
+def setup():
+    cfg = DLRM_SMOKE
+    params = dlrm.init(jax.random.PRNGKey(0), cfg)
+    data = DLRMSynthetic(cfg, seed=9)
+    return cfg, params, data
+
+
+# ---------------------------------------------------------------------------
+# ragged DLRM forward
+# ---------------------------------------------------------------------------
+
+def test_ragged_forward_matches_fixed_on_equal_lengths(setup):
+    cfg, params, data = setup
+    rb = data.ragged_batch(8, dist="fixed")
+    fx = jnp.asarray(DLRMSynthetic.ragged_to_fixed(rb, cfg.n_tables))
+    f_fixed = dlrm.forward(params, cfg, jnp.asarray(rb["dense"]), fx)
+    f_ragged = dlrm.forward_ragged(
+        params, cfg, jnp.asarray(rb["dense"]), jnp.asarray(rb["indices"]),
+        jnp.asarray(rb["offsets"]), max_l=int(rb["max_l"]))
+    np.testing.assert_allclose(np.asarray(f_fixed), np.asarray(f_ragged),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(deadline=None, max_examples=6)
+@given(st.sampled_from(["uniform", "poisson"]), st.integers(0, 2**31 - 1))
+def test_pipelined_ragged_matches_single_shot(dist, seed):
+    """Property: the ragged microbatch pipeline (per-microbatch offsets)
+    computes the same logits as single-shot forward_ragged."""
+    cfg = DLRM_SMOKE
+    params = dlrm.init(jax.random.PRNGKey(seed % 1000), cfg)
+    data = DLRMSynthetic(cfg, seed=seed % (2**32 - 1))
+    b, max_l = 8, 6
+    rb = data.ragged_batch(b, dist=dist, mean_l=3, max_l=max_l,
+                           pad_to=b * cfg.n_tables * max_l)
+    args = (jnp.asarray(rb["dense"]), jnp.asarray(rb["indices"]),
+            jnp.asarray(rb["offsets"]))
+    f = dlrm.forward_ragged(params, cfg, *args, max_l=max_l)
+    for n_micro in (1, 2, 4):
+        p = hybrid.pipelined_forward_ragged(params, cfg, *args,
+                                            max_l=max_l, n_micro=n_micro)
+        np.testing.assert_allclose(np.asarray(f), np.asarray(p),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_cached_forward_matches_uncached(setup):
+    cfg, params, data = setup
+    rb = data.ragged_batch(8, dist="poisson", mean_l=3, max_l=6)
+    spec = dlrm.arena_spec(cfg)
+    counts = se.trace_row_counts(spec, rb["indices"], rb["offsets"])
+    cache = se.build_hot_cache(params["arena"], spec, counts, k=32)
+    args = (jnp.asarray(rb["dense"]), jnp.asarray(rb["indices"]),
+            jnp.asarray(rb["offsets"]))
+    f = dlrm.forward_ragged(params, cfg, *args, max_l=6)
+    c = dlrm.forward_ragged(params, cfg, *args, max_l=6, cache=cache)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(c), rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# batcher
+# ---------------------------------------------------------------------------
+
+def _req(rid, cfg, data, n_ids=3):
+    rb = data.ragged_batch(1, dist="uniform", mean_l=n_ids, max_l=n_ids)
+    return requests_from_ragged_batch(rb, cfg.n_tables, rid0=rid)[0]
+
+
+def test_batcher_releases_on_full_batch(setup):
+    cfg, _, data = setup
+    b = RecBatcher(max_batch=4, max_wait_ms=1e9)
+    for i in range(3):
+        b.submit(_req(i, cfg, data))
+    assert b.take() == []                    # not full, not old
+    b.submit(_req(3, cfg, data))
+    out = b.take()
+    assert [r.rid for r in out] == [0, 1, 2, 3]
+    assert len(b) == 0
+
+
+def test_batcher_releases_on_timeout(setup):
+    cfg, _, data = setup
+    b = RecBatcher(max_batch=64, max_wait_ms=5.0)
+    b.submit(_req(0, cfg, data))
+    assert b.take() == []
+    time.sleep(0.01)
+    assert len(b.take()) == 1
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end
+# ---------------------------------------------------------------------------
+
+def _run_requests(engine, reqs):
+    for r in reqs:
+        engine.submit(r)
+        engine.step()
+    engine.drain()
+
+
+def test_rec_engine_end_to_end_ragged(setup):
+    cfg, params, data = setup
+    engine = RecEngine(cfg, params, path="ragged", max_l=6,
+                       max_batch=8, max_wait_ms=0.0, buckets=(2, 4, 8))
+    rb = data.ragged_batch(13, dist="poisson", mean_l=3, max_l=6)
+    reqs = requests_from_ragged_batch(rb, cfg.n_tables)
+    _run_requests(engine, reqs)
+    assert engine.served == 13
+    for r in reqs:
+        assert r.prob is not None and 0.0 < r.prob < 1.0
+        assert r.finished_at >= r.submitted_at
+    s = engine.stats()
+    assert s["n"] == 13
+    assert 0 < s["p50_ms"] <= s["p95_ms"] <= s["p99_ms"]
+
+
+def test_rec_engine_paths_agree(setup):
+    """fixed, ragged and cached engines produce identical predictions for
+    the same fixed-length request stream."""
+    cfg, params, data = setup
+    l = cfg.lookups_per_table
+    rb = data.ragged_batch(6, dist="fixed")
+    spec = dlrm.arena_spec(cfg)
+    counts = se.trace_row_counts(spec, rb["indices"], rb["offsets"])
+
+    probs = {}
+    for path in RecEngine.PATHS:
+        engine = RecEngine(cfg, params, path=path, max_l=l, max_batch=8,
+                           max_wait_ms=0.0,
+                           cache_k=16 if path == "cached" else 0,
+                           cache_trace=counts)
+        reqs = requests_from_ragged_batch(rb, cfg.n_tables)
+        _run_requests(engine, reqs)
+        probs[path] = [r.prob for r in reqs]
+        if path == "cached":
+            assert engine.stats()["cache_hit_rate"] > 0
+    np.testing.assert_allclose(probs["fixed"], probs["ragged"], rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(probs["ragged"], probs["cached"], rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_rec_engine_bucket_padding_is_inert(setup):
+    """A lone request must predict the same CTR whatever bucket it pads
+    to (dummy rows with empty bags cannot perturb real rows)."""
+    cfg, params, data = setup
+    rb = data.ragged_batch(1, dist="poisson", mean_l=3, max_l=6)
+    got = []
+    for buckets in ((1,), (4,), (16,)):
+        engine = RecEngine(cfg, params, path="ragged", max_l=6,
+                           max_batch=max(buckets), max_wait_ms=0.0,
+                           buckets=buckets)
+        reqs = requests_from_ragged_batch(rb, cfg.n_tables)
+        _run_requests(engine, reqs)
+        got.append(reqs[0].prob)
+    np.testing.assert_allclose(got[0], got[1], rtol=1e-5)
+    np.testing.assert_allclose(got[0], got[2], rtol=1e-5)
+
+
+def test_rec_engine_quantized_cold_close(setup):
+    cfg, params, data = setup
+    rb = data.ragged_batch(6, dist="poisson", mean_l=3, max_l=6)
+    spec = dlrm.arena_spec(cfg)
+    counts = se.trace_row_counts(spec, rb["indices"], rb["offsets"])
+    ref_engine = RecEngine(cfg, params, path="ragged", max_l=6,
+                           max_batch=8, max_wait_ms=0.0)
+    q_engine = RecEngine(cfg, params, path="cached", max_l=6, max_batch=8,
+                         max_wait_ms=0.0, cache_k=32, cache_trace=counts,
+                         quantize_cold=True)
+    reqs_a = requests_from_ragged_batch(rb, cfg.n_tables)
+    reqs_b = requests_from_ragged_batch(rb, cfg.n_tables)
+    _run_requests(ref_engine, reqs_a)
+    _run_requests(q_engine, reqs_b)
+    a = np.asarray([r.prob for r in reqs_a])
+    b = np.asarray([r.prob for r in reqs_b])
+    assert np.abs(a - b).max() < 0.05       # int8 tail, fp hot rows

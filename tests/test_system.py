@@ -1,4 +1,5 @@
 """End-to-end behaviour tests for the paper's system."""
+import os
 import subprocess
 import sys
 from pathlib import Path
@@ -95,7 +96,10 @@ def test_train_launcher_end_to_end_with_resume(tmp_path):
     base = [sys.executable, "-m", "repro.launch.train", "--arch", "dlrm1",
             "--smoke", "--batch-size", "8", "--log-every", "5",
             "--ckpt-dir", str(tmp_path), "--ckpt-every", "5"]
-    env = {"PYTHONPATH": src, "PATH": "/usr/bin:/bin:/usr/local/bin"}
+    env = {"PYTHONPATH": src, "PATH": "/usr/bin:/bin:/usr/local/bin",
+           # inherit the platform pin (hermetic CPU runs on images that
+           # bundle libtpu would otherwise stall probing for TPU metadata)
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
     out1 = subprocess.run(base + ["--steps", "10"], capture_output=True,
                           text=True, env=env, timeout=300)
     assert out1.returncode == 0, out1.stderr[-2000:]
