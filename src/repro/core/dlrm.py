@@ -17,7 +17,8 @@ import jax.numpy as jnp
 from repro.configs.base import DLRMConfig
 from repro.core import dense_engine as de
 from repro.core import sparse_engine as se
-from repro.optim import adamw, partitioned, rowwise_adagrad
+from repro.kernels import ops
+from repro.optim import Optimizer, adamw, partitioned, rowwise_adagrad
 
 
 def arena_spec(cfg: DLRMConfig) -> se.ArenaSpec:
@@ -42,6 +43,16 @@ def init(key: jax.Array, cfg: DLRMConfig, shards: int = 1) -> Dict:
     }
 
 
+def head_logits(mlp_params: Dict, dense: jax.Array,
+                emb: jax.Array) -> jax.Array:
+    """The DLRM head shared by every forward AND training path: reduced
+    embeddings (B, T, D) + dense features -> logits (B,). One definition,
+    so the trained network and the served network cannot drift apart."""
+    bot = de.mlp_apply(mlp_params["bottom"], dense)
+    x, _ = de.feature_interaction(bot, emb.astype(bot.dtype))
+    return de.mlp_apply(mlp_params["top"], x)[:, 0]
+
+
 def forward(params: Dict, cfg: DLRMConfig, dense: jax.Array,
             indices: jax.Array,
             mesh: Optional[jax.sharding.Mesh] = None) -> jax.Array:
@@ -54,10 +65,7 @@ def forward(params: Dict, cfg: DLRMConfig, dense: jax.Array,
     """
     spec = arena_spec(cfg)
     emb = se.lookup_auto(params["arena"], spec, indices, mesh)  # sparse stage
-    bot = de.mlp_apply(params["bottom"], dense)                 # dense stage
-    x, _ = de.feature_interaction(bot, emb)
-    logit = de.mlp_apply(params["top"], x)
-    return logit[:, 0]
+    return head_logits(params, dense, emb)                      # dense stage
 
 
 def forward_ragged(params: Dict, cfg: DLRMConfig, dense: jax.Array,
@@ -86,20 +94,31 @@ def forward_ragged(params: Dict, cfg: DLRMConfig, dense: jax.Array,
     else:
         emb = se.lookup_ragged_auto(params["arena"], spec, indices, offsets,
                                     max_l=max_l, mesh=mesh)
-    bot = de.mlp_apply(params["bottom"], dense)
-    x, _ = de.feature_interaction(bot, emb.astype(bot.dtype))
-    logit = de.mlp_apply(params["top"], x)
-    return logit[:, 0]
+    return head_logits(params, dense, emb)
+
+
+def _bce(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_sigmoid(logits)
+    lognp = jax.nn.log_sigmoid(-logits)
+    return -(labels * logp + (1 - labels) * lognp).mean()
 
 
 def loss_fn(params: Dict, cfg: DLRMConfig, dense: jax.Array,
             indices: jax.Array, labels: jax.Array,
             mesh: Optional[jax.sharding.Mesh] = None) -> jax.Array:
     """Binary cross-entropy on click labels."""
-    logits = forward(params, cfg, dense, indices, mesh)
-    logp = jax.nn.log_sigmoid(logits)
-    lognp = jax.nn.log_sigmoid(-logits)
-    return -(labels * logp + (1 - labels) * lognp).mean()
+    return _bce(forward(params, cfg, dense, indices, mesh), labels)
+
+
+def loss_ragged(params: Dict, cfg: DLRMConfig, dense: jax.Array,
+                indices: jax.Array, offsets: jax.Array, labels: jax.Array,
+                *, max_l: int,
+                mesh: Optional[jax.sharding.Mesh] = None) -> jax.Array:
+    """BCE over the ragged production path — differentiable on every
+    kernel backend via the sparse_lengths_sum custom VJP."""
+    logits = forward_ragged(params, cfg, dense, indices, offsets,
+                            max_l=max_l, mesh=mesh)
+    return _bce(logits, labels)
 
 
 def make_optimizer(cfg: DLRMConfig, lr: float = 1e-3):
@@ -120,6 +139,91 @@ def make_train_step(cfg: DLRMConfig, optimizer=None,
     return opt, train_step
 
 
+def make_train_step_ragged(cfg: DLRMConfig, *, max_l: int, lr: float = 1e-3,
+                           sparse: bool = True,
+                           mesh: Optional[jax.sharding.Mesh] = None):
+    """Train step over ragged batches {dense, indices, offsets, labels}.
+
+    Returns (opt_like, step) where step(params, opt_state, batch) ->
+    (new_params, new_opt_state, loss, touched_rows); touched_rows (N,) are
+    the unique arena rows the batch updated (fill = null row), which the
+    online trainer feeds to the hot-cache write-through invalidation.
+
+    sparse=True composes the row-wise *sparse* optimizer on the arena
+    (update cost O(N) in the index-stream length, no densified (V, D)
+    gradient) with AdamW on the MLPs; sparse=False is the dense-gradient
+    baseline (jax.grad through the whole model + partitioned row-wise
+    Adagrad), kept for the bench comparison.
+    """
+    from repro.training import sparse_optim as so
+
+    spec = arena_spec(cfg)
+    if sparse and mesh is not None:
+        raise NotImplementedError(
+            "sharded ragged training (mesh + row-wise sparse optimizer) is "
+            "ROADMAP work — the sparse branch would silently train the "
+            "replicated arena; pass mesh=None, or sparse=False for the "
+            "dense-grad path which threads the mesh")
+    if not sparse:
+        opt = make_optimizer(cfg, lr)
+
+        def dense_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_ragged)(
+                params, cfg, batch["dense"], batch["indices"],
+                batch["offsets"], batch["labels"], max_l=max_l, mesh=mesh)
+            new_params, new_state = opt.update(grads, opt_state, params)
+            flat = se.flatten_ragged_indices(spec, batch["indices"],
+                                             batch["offsets"])
+            rows, _ = jnp.unique(flat, size=flat.shape[0],
+                                 fill_value=spec.null_row,
+                                 return_inverse=True)
+            return new_params, new_state, loss, rows.astype(jnp.int32)
+
+        return opt, dense_step
+
+    arena_opt = so.sparse_rowwise_adagrad(lr * 10)
+    mlp_opt = adamw(lr)
+
+    def init(params):
+        return {"arena": arena_opt.init(params["arena"]),
+                "mlp": mlp_opt.init({k: v for k, v in params.items()
+                                     if k != "arena"})}
+
+    def step(params, opt_state, batch):
+        flat = se.flatten_ragged_indices(spec, batch["indices"],
+                                         batch["offsets"])
+        n_bags = batch["offsets"].shape[0] - 1
+        b = n_bags // spec.n_tables
+        # Forward the sparse stage once; its VJP w.r.t. the arena is a pure
+        # scatter of the bag gradients, which the row-wise path applies
+        # directly — the arena never enters autodiff.
+        emb = ops.sparse_lengths_sum(
+            jax.lax.stop_gradient(params["arena"]), flat, batch["offsets"],
+            max_l=max_l).reshape(b, spec.n_tables, spec.dim)
+
+        def head(mlp_params, emb):
+            return _bce(head_logits(mlp_params, batch["dense"], emb),
+                        batch["labels"])
+
+        mlp_params = {k: v for k, v in params.items() if k != "arena"}
+        loss, (d_mlp, d_emb) = jax.value_and_grad(head, argnums=(0, 1))(
+            mlp_params, emb)
+
+        d_bags = d_emb.reshape(n_bags, spec.dim)
+        rows, row_g = so.ragged_row_grads(d_bags, flat, batch["offsets"],
+                                          fill_row=spec.null_row)
+        new_arena, arena_state = arena_opt.update(
+            params["arena"], opt_state["arena"], rows, row_g)
+        new_mlp, mlp_state = mlp_opt.update(d_mlp, opt_state["mlp"],
+                                            mlp_params)
+        new_params = dict(new_mlp)
+        new_params["arena"] = new_arena
+        return new_params, {"arena": arena_state, "mlp": mlp_state}, \
+            loss, rows
+
+    return Optimizer(init, None), step
+
+
 def make_serve_step(cfg: DLRMConfig,
                     mesh: Optional[jax.sharding.Mesh] = None):
     def serve_step(params, batch):
@@ -132,10 +236,19 @@ def make_ragged_serve_step(cfg: DLRMConfig, *, max_l: int,
                            mesh: Optional[jax.sharding.Mesh] = None,
                            cache: Optional[se.HotRowCache] = None,
                            quantized=None):
-    """Serve step over ragged batches ({dense, indices, offsets} -> CTR)."""
-    def serve_step(params, batch):
+    """Serve step over ragged batches ({dense, indices, offsets} -> CTR).
+
+    The hot cache may be fixed at build time (`cache=`) or passed per call
+    as a pytree argument — the latter is how the serving engine swaps in a
+    freshly rebuilt cache version without recompiling (shapes are identical
+    as long as K is unchanged).
+    """
+    default_cache = cache
+
+    def serve_step(params, batch, cache=None):
+        c = cache if cache is not None else default_cache
         return jax.nn.sigmoid(forward_ragged(
             params, cfg, batch["dense"], batch["indices"],
-            batch["offsets"], max_l=max_l, mesh=mesh, cache=cache,
+            batch["offsets"], max_l=max_l, mesh=mesh, cache=c,
             quantized=quantized))
     return serve_step

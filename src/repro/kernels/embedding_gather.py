@@ -16,6 +16,14 @@ Unlike the CPU baseline (jnp take -> materialize (B, L, D) -> sum), this
 kernel reads exactly L*D useful bytes per bag and writes D — the paper's
 "effective memory throughput" definition (Section III-C) counts exactly
 these bytes.
+
+Training runs the same engine in reverse: ``sls_grad_table`` is the fused
+segment *scatter-add* — the VJP of ``sparse_lengths_sum`` — streaming one
+upstream bag-gradient row per grid step into the destination table row.
+Positions are pre-sorted by destination so every output row is visited in
+exactly one contiguous run (accumulate in VMEM, flush once), which is both
+the output-stationary optimum and the only revisit pattern that is safe
+under the TPU output-pipeline's deferred write-back.
 """
 from __future__ import annotations
 
@@ -151,3 +159,80 @@ def sparse_lengths_sum(table: jax.Array, indices: jax.Array,
         interpret=interpret,
     )
     return fn(indices, offsets, table)
+
+
+def _grad_kernel(dst_ref, bag_ref, val_ref, g_ref, z_ref, o_ref, acc_ref, *,
+                 n: int):
+    p = pl.program_id(0)
+    prev = dst_ref[jnp.maximum(p - 1, 0)]
+    first = (p == 0) | (prev != dst_ref[p])
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # One upstream bag-gradient row arrives per step (streamed by the
+    # pipeline via the prefetched bag id); out-of-bag padding adds zero.
+    g = g_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.where(val_ref[p] > 0, g, 0.0)
+
+    nxt = dst_ref[jnp.minimum(p + 1, n - 1)]
+    last = (p == n - 1) | (nxt != dst_ref[p])
+
+    @pl.when(last)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "interpret"))
+def sls_grad_table(g: jax.Array, indices: jax.Array, offsets: jax.Array, *,
+                   n_rows: int, interpret: bool = False) -> jax.Array:
+    """Fused segment scatter-add: the VJP of ``sparse_lengths_sum``.
+
+    g (B, D) upstream bag gradients; indices (N,) destination rows (may be
+    padded past offsets[-1]); offsets (B+1,). Returns d_table (n_rows, D):
+    ``d_table[r] = sum over valid positions p with indices[p] == r of
+    g[bag(p)]``.
+
+    Positions are argsorted by destination row, so duplicate targets form
+    one contiguous run per row: the run accumulates in a VMEM register and
+    flushes exactly once. Untouched rows come from a zero table aliased
+    onto the output buffer (``input_output_aliases``) — the kernel writes
+    only the rows a run visits, everything else stays zero without a
+    separate (n_rows, D) clearing pass.
+    """
+    n = indices.shape[0]
+    n_bags = offsets.shape[0] - 1
+    d = g.shape[-1]
+    if n == 0:
+        return jnp.zeros((n_rows, d), g.dtype)
+    pos = jnp.arange(n, dtype=offsets.dtype)
+    seg = jnp.searchsorted(offsets[1:], pos, side="right")
+    valid = (pos < offsets[-1]).astype(jnp.int32)
+    order = jnp.argsort(indices)
+    dst = indices[order].astype(jnp.int32)
+    bag = jnp.minimum(seg, n_bags - 1)[order].astype(jnp.int32)
+    val = valid[order]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda p, dst, bag, val: (bag[p], 0)),
+            pl.BlockSpec((1, d), lambda p, dst, bag, val: (dst[p], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda p, dst, bag, val: (dst[p], 0)),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+    )
+    zeros = jnp.zeros((n_rows, d), g.dtype)
+    fn = pl.pallas_call(
+        functools.partial(_grad_kernel, n=n),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows, d), g.dtype),
+        # operand 4 = zeros (after 3 scalar-prefetch operands and g)
+        input_output_aliases={4: 0},
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )
+    return fn(dst, bag, val, g, zeros)

@@ -44,11 +44,28 @@ def get_impl() -> str:
 # GEMM (dense engine)
 # ---------------------------------------------------------------------------
 
+@jax.custom_vjp
 def gemm(x: jax.Array, w: jax.Array) -> jax.Array:
     impl = get_impl()
     if impl == "xla":
         return _ref.gemm(x, w)
     return _gm.gemm(x, w, interpret=(impl == "interpret"))
+
+
+def _gemm_fwd(x, w):
+    return gemm(x, w), (x, w)
+
+
+def _gemm_bwd(res, g):
+    # backward-of-GEMM = two GEMMs on the same engine (dx = g w^T,
+    # dw = x^T g), so training runs the dense engine end to end
+    x, w = res
+    dx = gemm(g, w.T).astype(x.dtype)
+    dw = gemm(x.T, g).astype(w.dtype)
+    return dx, dw
+
+
+gemm.defvjp(_gemm_fwd, _gemm_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -94,16 +111,9 @@ def gather_rows(table: jax.Array, indices: jax.Array) -> jax.Array:
     return embedding_bag(table, indices[:, None])
 
 
-def sparse_lengths_sum(table: jax.Array, indices: jax.Array,
-                       offsets: jax.Array, *, max_l: int) -> jax.Array:
-    """Ragged SparseLengthsSum (the paper's Fig. 2 production API).
-
-    out[b] = sum over table[indices[offsets[b]:offsets[b+1]]]; indices may
-    be padded past offsets[-1] (padded positions are ignored). `max_l` is
-    the static per-bag length bound the kernel grid is sized for. The XLA
-    path is differentiable (take + segment-sum); the Pallas path serves
-    inference.
-    """
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _sls(table: jax.Array, indices: jax.Array, offsets: jax.Array,
+         max_l: int, vocab: int, dtype_name: str) -> jax.Array:
     impl = get_impl()
     if impl == "xla":
         return _ref.sparse_lengths_sum(table, indices, offsets)
@@ -111,15 +121,68 @@ def sparse_lengths_sum(table: jax.Array, indices: jax.Array,
                                   interpret=(impl == "interpret"))
 
 
+def _sls_fwd(table, indices, offsets, max_l, vocab, dtype_name):
+    return _sls(table, indices, offsets, max_l, vocab, dtype_name), \
+        (indices, offsets)
+
+
+def _sls_bwd(max_l, vocab, dtype_name, res, g):
+    indices, offsets = res
+    impl = get_impl()
+    if impl == "xla":
+        d_table = _ref.sls_grad_table(g, indices, offsets, vocab)
+    else:
+        d_table = _eg.sls_grad_table(g, indices, offsets, n_rows=vocab,
+                                     interpret=(impl == "interpret"))
+    return d_table.astype(dtype_name), None, None
+
+
+_sls.defvjp(_sls_fwd, _sls_bwd)
+
+
+def sparse_lengths_sum(table: jax.Array, indices: jax.Array,
+                       offsets: jax.Array, *, max_l: int) -> jax.Array:
+    """Ragged SparseLengthsSum (the paper's Fig. 2 production API).
+
+    out[b] = sum over table[indices[offsets[b]:offsets[b+1]]]; indices may
+    be padded past offsets[-1] (padded positions are ignored). `max_l` is
+    the static per-bag length bound the kernel grid is sized for.
+
+    Differentiable on every backend: the custom VJP is the fused segment
+    scatter-add (the sparse engine run in reverse) — the Pallas
+    `sls_grad_table` kernel on pallas/interpret, the XLA segment-sum
+    reference on xla.
+    """
+    return _sls(table, indices, offsets, max_l, table.shape[0],
+                str(table.dtype))
+
+
 # ---------------------------------------------------------------------------
 # Feature interaction (dense engine, batched GEMM)
 # ---------------------------------------------------------------------------
 
+@jax.custom_vjp
 def interaction(x: jax.Array) -> jax.Array:
     impl = get_impl()
     if impl == "xla":
         return _ref.interaction(x)
     return _fi.interaction(x, interpret=(impl == "interpret"))
+
+
+def _interaction_fwd(x):
+    return interaction(x), x
+
+
+def _interaction_bwd(x, g):
+    # z = X X^T per sample => dX = (G + G^T) X
+    g32 = g.astype(jnp.float32)
+    sym = g32 + jnp.swapaxes(g32, -1, -2)
+    dx = jnp.einsum("bfg,bgd->bfd", sym, x.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+    return (dx.astype(x.dtype),)
+
+
+interaction.defvjp(_interaction_fwd, _interaction_bwd)
 
 
 def interaction_tril(x: jax.Array) -> jax.Array:

@@ -30,6 +30,24 @@ def sparse_lengths_sum(table: jax.Array, indices: jax.Array,
     return out.astype(table.dtype)
 
 
+def sls_grad_table(g: jax.Array, indices: jax.Array, offsets: jax.Array,
+                   n_rows: int) -> jax.Array:
+    """VJP of ragged SparseLengthsSum w.r.t. the table: segment scatter-add.
+
+    d_table[r] = sum over valid positions p with indices[p] == r of
+    g[bag(p)]; padded positions (>= offsets[-1]) contribute nothing.
+    """
+    n = indices.shape[0]
+    n_bags = offsets.shape[0] - 1
+    pos = jnp.arange(n, dtype=offsets.dtype)
+    seg = jnp.searchsorted(offsets[1:], pos, side="right")
+    rows = jnp.take(g.astype(jnp.float32), jnp.minimum(seg, n_bags - 1),
+                    axis=0)
+    rows = jnp.where((pos < offsets[-1])[:, None], rows, 0.0)
+    out = jax.ops.segment_sum(rows, indices, num_segments=n_rows)
+    return out.astype(g.dtype)
+
+
 def interaction(x: jax.Array) -> jax.Array:
     """Pairwise dot products: x (B, F, D) -> (B, F, F) = X X^T per sample."""
     out = jnp.einsum("bfd,bgd->bfg", x, x,

@@ -1,6 +1,8 @@
 """Training launcher: DLRM (the paper's workload) and any assigned LM arch.
 
     PYTHONPATH=src python -m repro.launch.train --arch dlrm1 --steps 200
+    PYTHONPATH=src python -m repro.launch.train --arch dlrm1 --steps 200 \
+        --ragged --online-cache          # online ragged training + live cache
     PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
         --smoke --steps 50 --ckpt-dir /tmp/ckpt --resume
 
@@ -27,7 +29,59 @@ from repro.launch.mesh import make_production_mesh
 from repro.models import api
 
 
+def train_dlrm_ragged(args) -> float:
+    """Online ragged training: row-wise sparse optimizer + (optionally) a
+    live hot-row cache that re-ranks itself from the decayed histogram."""
+    from repro.training import OnlineCacheConfig, OnlineTrainer
+
+    cfg = DLRM_SMOKE if args.smoke else DLRM_CONFIGS[args.arch]
+    mesh = _mesh(args)
+    key = jax.random.PRNGKey(args.seed)
+    shards = mesh.shape["model"] if mesh else 1
+    params = dlrm_mod.init(key, cfg, shards)
+    max_l = 2 * cfg.lookups_per_table
+    cache_cfg = None
+    if args.online_cache:
+        cache_cfg = OnlineCacheConfig(k=args.cache_k,
+                                      refresh_every=args.cache_refresh)
+    trainer = OnlineTrainer(cfg, params, max_l=max_l,
+                            sparse=not args.dense_grads,
+                            cache_cfg=cache_cfg, mesh=mesh)
+    data = DLRMSynthetic(cfg, seed=args.seed)
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    mon = StragglerMonitor()
+    start = 0
+    if ckpt and args.resume and ckpt.latest_step() is not None:
+        (trainer.params, trainer.opt_state), _ = ckpt.restore(
+            (trainer.params, trainer.opt_state))
+        start = ckpt.latest_step() + 1
+        print(f"resumed from step {start - 1}")
+
+    pad_to = args.batch_size * cfg.n_tables * max_l
+    loss = float("nan")
+    for step in range(start, args.steps):
+        t0 = time.time()
+        batch = data.ragged_batch(args.batch_size, max_l=max_l,
+                                  pad_to=pad_to)
+        loss = trainer.train_step(batch)
+        mon.record(step, time.time() - t0)
+        if step % args.log_every == 0:
+            extra = (f" cache v{trainer.version}" if args.online_cache
+                     else "")
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"({time.time() - t0:.3f}s){extra}")
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save_async(step, (trainer.params, trainer.opt_state))
+    if ckpt:
+        ckpt.wait()
+    print(f"final loss {loss:.4f} "
+          f"(straggler events: {len(mon.events)})")
+    return loss
+
+
 def train_dlrm(args) -> float:
+    if args.ragged:
+        return train_dlrm_ragged(args)
     cfg = DLRM_SMOKE if args.smoke else DLRM_CONFIGS[args.arch]
     mesh = _mesh(args)
     key = jax.random.PRNGKey(args.seed)
@@ -130,6 +184,17 @@ def main() -> None:
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--ckpt-every", type=int, default=50)
     p.add_argument("--resume", action="store_true")
+    p.add_argument("--ragged", action="store_true",
+                   help="DLRM: train on ragged SparseLengthsSum batches "
+                        "with the row-wise sparse optimizer")
+    p.add_argument("--online-cache", action="store_true",
+                   help="with --ragged: maintain a live versioned hot-row "
+                        "cache from the decayed trace histogram")
+    p.add_argument("--dense-grads", action="store_true",
+                   help="with --ragged: densified-gradient baseline "
+                        "instead of the row-wise sparse optimizer")
+    p.add_argument("--cache-k", type=int, default=2048)
+    p.add_argument("--cache-refresh", type=int, default=50)
     args = p.parse_args()
 
     if args.arch.startswith("dlrm"):

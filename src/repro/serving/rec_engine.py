@@ -85,6 +85,25 @@ def _bucket(n: int, buckets: Sequence[int]) -> int:
     return buckets[-1]
 
 
+def tune_buckets(sizes: Sequence[int], max_batch: int,
+                 n_buckets: int = 6) -> tuple:
+    """Pick pad-bucket boundaries from an observed micro-batch-size
+    histogram instead of fixed powers of two.
+
+    Boundaries are the ceil-quantiles of the observed sizes (equal traffic
+    mass per bucket), deduplicated, with max_batch always present as the
+    catch-all. Fewer distinct observed sizes than n_buckets simply yields
+    fewer buckets — each observed size then pads to itself (zero waste).
+    """
+    if len(sizes) == 0:
+        return tuple(sorted({1, max_batch}))
+    arr = np.sort(np.asarray(sizes, np.int64))
+    qs = [arr[min(len(arr) - 1, int(np.ceil((i + 1) / n_buckets * len(arr)))
+                 - 1)] for i in range(n_buckets)]
+    out = sorted({int(q) for q in qs if q >= 1} | {max_batch})
+    return tuple(out)
+
+
 class RecEngine:
     """Batcher-fed DLRM inference over the ragged sparse path."""
 
@@ -96,6 +115,7 @@ class RecEngine:
                  buckets: Sequence[int] = (1, 2, 4, 8, 16, 32),
                  cache_k: int = 0, cache_trace=None,
                  quantize_cold: bool = False,
+                 auto_tune_after: Optional[int] = None,
                  mesh: Optional[jax.sharding.Mesh] = None):
         assert path in self.PATHS, path
         self.cfg = cfg
@@ -105,13 +125,18 @@ class RecEngine:
         self.max_l = max_l if max_l is not None else cfg.lookups_per_table
         self.mesh = mesh
         self.batcher = RecBatcher(max_batch, max_wait_ms)
+        self.max_batch = max_batch
         self.buckets = tuple(sorted(set(buckets) | {max_batch}))
+        self.auto_tune_after = auto_tune_after
+        self._retuned = False
+        self.batch_sizes: List[int] = []     # observed micro-batch sizes
         self.latencies: List[float] = []
         self.served = 0
         self._hits = 0.0
         self._lookups = 0
 
         self.cache: Optional[se.HotRowCache] = None
+        self.cache_version = 0
         quantized = None
         if path == "cached":
             assert cache_k > 0, "cached path needs cache_k > 0"
@@ -125,14 +150,33 @@ class RecEngine:
 
         if path == "fixed":
             step = dlrm.make_serve_step(cfg, mesh)
+            self._serve = jax.jit(step)
         else:
+            # cache is a call-time pytree argument so that update_cache can
+            # swap in a new version without recompiling (same K = same
+            # shapes = cache hit in the jit lookup)
             step = dlrm.make_ragged_serve_step(
-                cfg, max_l=self.max_l, mesh=mesh, cache=self.cache,
-                quantized=quantized)
-        self._serve = jax.jit(step)
-        if self.cache is not None:
-            self._hit_rate = jax.jit(
-                lambda i, o: se.cache_hit_rate(self.cache, self.spec, i, o))
+                cfg, max_l=self.max_l, mesh=mesh, quantized=quantized)
+            self._serve = jax.jit(step)
+        self._hit_rate = jax.jit(
+            lambda c, i, o: se.cache_hit_rate(c, self.spec, i, o))
+
+    def update_cache(self, cache: se.HotRowCache,
+                     version: Optional[int] = None) -> None:
+        """Atomically swap in a rebuilt hot cache (online-training refresh).
+
+        The whole HotRowCache object is replaced at once — (hot_rows,
+        slot_of) are never observable in a torn state. Keeping K constant
+        across versions keeps the serve step's compiled shape unchanged.
+        """
+        assert self.path == "cached", "update_cache needs the cached path"
+        assert cache.hot_rows.shape == self.cache.hot_rows.shape, \
+            ("cache swap changed K/D — this forces a recompile on the "
+             "serving hot path; keep trainer and engine cache_k equal",
+             cache.hot_rows.shape, self.cache.hot_rows.shape)
+        self.cache = cache
+        self.cache_version = (version if version is not None
+                              else self.cache_version + 1)
 
     def warmup(self):
         """Compile every bucket shape off the SLA clock.
@@ -148,10 +192,25 @@ class RecEngine:
             sparse_ids=[np.zeros(l, np.int32)] * t)]
         for bucket in self.buckets:
             batch = self._assemble(dummy, bucket)
-            np.asarray(self._serve(self.params, batch))
+            np.asarray(self._run_serve(batch))
             if self.cache is not None:
-                self._hit_rate(batch["indices"],
+                self._hit_rate(self.cache, batch["indices"],
                                batch["offsets"]).block_until_ready()
+
+    def _run_serve(self, batch: Dict):
+        if self.path == "fixed":
+            return self._serve(self.params, batch)
+        return self._serve(self.params, batch, self.cache)
+
+    def retune_buckets(self, n_buckets: int = 6,
+                       warmup: bool = True) -> tuple:
+        """Re-pick bucket boundaries from the observed batch-size histogram
+        (ROADMAP: dynamic bucket tuning) and pre-compile the new shapes."""
+        self.buckets = tune_buckets(self.batch_sizes, self.max_batch,
+                                    n_buckets)
+        if warmup:
+            self.warmup()
+        return self.buckets
 
     # -- request plumbing ---------------------------------------------------
 
@@ -196,16 +255,23 @@ class RecEngine:
         reqs = self.batcher.take(force=force)
         if not reqs:
             return 0
+        # retune BEFORE the SLA clocks start: compiling the fresh bucket
+        # shapes must not land on this micro-batch's recorded latency
+        if self.auto_tune_after is not None and not self._retuned \
+                and len(self.batch_sizes) >= self.auto_tune_after:
+            self._retuned = True
+            self.retune_buckets()
         now = time.time()
         for r in reqs:
             r.started_at = now
+        self.batch_sizes.append(len(reqs))
         bucket = _bucket(len(reqs), self.buckets)
         batch = self._assemble(reqs, bucket)
-        probs = np.asarray(self._serve(self.params, batch))
+        probs = np.asarray(self._run_serve(batch))
         if self.cache is not None:
             n = int(batch["offsets"][-1])
             if n:
-                hr = float(self._hit_rate(batch["indices"],
+                hr = float(self._hit_rate(self.cache, batch["indices"],
                                           batch["offsets"]))
                 self._hits += hr * n
                 self._lookups += n
@@ -238,6 +304,9 @@ class RecEngine:
                "mean_ms": float(arr.mean() * 1e3)}
         if self._lookups:
             out["cache_hit_rate"] = self._hits / self._lookups
+        if self.path == "cached":
+            out["cache_version"] = self.cache_version
+        out["buckets"] = self.buckets
         return out
 
 

@@ -1,0 +1,55 @@
+"""Online ragged-training subsystem for DLRM.
+
+Production recommenders never stop training: the serving fleet and the
+trainer share one embedding state, and the Zipfian skew the hot-row cache
+exploits drifts as traffic shifts (RecNMP's trace analysis). This package
+closes the training half of the loop on top of the serving-side sparse
+engine:
+
+* ``sparse_optim`` — row-wise sparse optimizer: the embedding gradient of a
+  ragged batch touches at most N rows (N = index-stream length), so the
+  update gathers/updates/scatters exactly those rows instead of
+  materializing a dense (V, D) gradient. Bit-exact against dense row-wise
+  Adagrad (untouched rows receive a zero update there too).
+* ``online`` — ``OnlineTrainer``: consumes ragged batches, keeps a decayed
+  row-frequency histogram of the live index stream, and periodically
+  rebuilds the serving hot-row cache from it.
+
+README — versioned hot-arena swap protocol
+------------------------------------------
+
+The hot cache is a *copy* of the top-K arena rows, so online training makes
+it stale twice over: (1) every optimizer step rewrites arena rows whose hot
+copies then diverge, and (2) traffic drift changes *which* rows deserve
+pinning. The protocol keeps the serving path exact at all times:
+
+1. **Write-through invalidation (every step).** After the optimizer applies
+   a batch's row updates, the trainer rewrites the hot copies of every
+   *touched hot* row from the new arena (``slot_of`` maps rows to slots;
+   misses are routed to the null slot whose source is the always-zero null
+   arena row, so it can never be corrupted). This preserves the exactness
+   invariant — ``hot_pass(slots) + cold_pass(redirected) == uncached
+   lookup`` — because the identity only needs hot copies to equal their
+   arena rows; which rows are pinned is a pure performance choice.
+2. **Versioned rebuild (every ``refresh_every`` steps).** The decayed
+   histogram re-ranks rows; ``build_hot_cache`` produces a fresh arena copy
+   and the trainer bumps a monotonically increasing **version**. A serving
+   engine holding version v swaps atomically to v+1 via
+   ``RecEngine.update_cache`` (the cache is a jit *argument*, not a closure
+   constant, so a swap never recompiles as long as K is unchanged).
+   Between rebuilds the engine's cache is stale only in *ranking* — never
+   in *values* — so serving results equal the uncached lookup at every
+   version.
+
+Consumers that cannot tolerate torn reads across the (hot_rows, slot_of)
+pair must swap the whole ``HotRowCache`` object at once — both the trainer
+and the engine do; neither ever mutates a published cache in place.
+"""
+from repro.training.online import (OnlineCacheConfig, OnlineTrainer,
+                                   VersionedHotCache, make_drifting_zipf)
+from repro.training.sparse_optim import (SparseOptimizer, ragged_row_grads,
+                                         sparse_rowwise_adagrad)
+
+__all__ = ["OnlineCacheConfig", "OnlineTrainer", "SparseOptimizer",
+           "VersionedHotCache", "make_drifting_zipf", "ragged_row_grads",
+           "sparse_rowwise_adagrad"]

@@ -1,0 +1,190 @@
+"""Online trainer: ragged training loop + live hot-cache refresh.
+
+See the package docstring (repro.training) for the versioned swap protocol
+and its exactness invariant. The trainer owns three pieces of state:
+
+* model/optimizer state, advanced by ``dlrm.make_train_step_ragged``;
+* a host-side exponentially *decayed* row-frequency histogram of the live
+  index stream (``hist = decay * hist + batch_counts`` each step) — the
+  online replacement for the offline trace histogram, so the ranking
+  follows drift instead of averaging over all of history;
+* the current ``VersionedHotCache``, rebuilt every ``refresh_every`` steps
+  and write-through-patched after every optimizer step in between.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DLRMConfig
+from repro.core import dlrm
+from repro.core import sparse_engine as se
+
+
+@dataclass(frozen=True)
+class OnlineCacheConfig:
+    k: int                       # hot rows pinned per rebuild
+    refresh_every: int = 50      # steps between re-rank + rebuild
+    decay: float = 0.98          # per-step histogram decay
+
+
+@dataclass(frozen=True)
+class VersionedHotCache:
+    """A hot cache plus the monotone version of the rebuild that made it."""
+    cache: se.HotRowCache
+    version: int
+
+
+def _patch_hot_rows(cache: se.HotRowCache, arena: jax.Array,
+                    null_row: int, rows: jax.Array) -> se.HotRowCache:
+    """Write-through invalidation: refresh the hot copies of `rows`.
+
+    Rows that are not pinned map to the null slot, whose *source* is forced
+    to the always-zero null arena row — the null slot can only ever be
+    rewritten with zeros, so the mask-free hot pass stays exact.
+    """
+    k = cache.hot_rows.shape[0] - 1
+    slots = jnp.take(cache.slot_of, rows)
+    src = jnp.where(slots < k, rows, null_row)
+    fresh = jnp.take(arena, src, axis=0).astype(cache.hot_rows.dtype)
+    return se.HotRowCache(hot_rows=cache.hot_rows.at[slots].set(fresh),
+                          slot_of=cache.slot_of, hot_ids=cache.hot_ids)
+
+
+class OnlineTrainer:
+    """Consume ragged batches; keep the serving hot cache live and exact."""
+
+    def __init__(self, cfg: DLRMConfig, params: Dict, *, max_l: int,
+                 lr: float = 1e-3, sparse: bool = True,
+                 cache_cfg: Optional[OnlineCacheConfig] = None,
+                 mesh: Optional[jax.sharding.Mesh] = None):
+        self.cfg = cfg
+        self.spec = dlrm.arena_spec(cfg)
+        self.params = params
+        self.max_l = max_l
+        self.cache_cfg = cache_cfg
+        opt, step = dlrm.make_train_step_ragged(cfg, max_l=max_l, lr=lr,
+                                                sparse=sparse, mesh=mesh)
+        self.opt_state = opt.init(params)
+        # donate opt_state so its (V, 1) accumulator updates in place;
+        # params CANNOT be donated — sync_engine publishes the live arrays
+        # to serving engines by reference, and donation would free them
+        self._step = jax.jit(step, donate_argnums=(1,))
+        self._patch = jax.jit(_patch_hot_rows, static_argnums=(2,))
+        self.hist = np.zeros(self.spec.total_rows, np.float64)
+        self.steps = 0
+        self.version = 0
+        self.cache: Optional[se.HotRowCache] = None
+        self.losses: list = []
+
+    # -- histogram ---------------------------------------------------------
+
+    def observe(self, batch: Dict) -> None:
+        """Fold one batch's index stream into the decayed histogram."""
+        decay = self.cache_cfg.decay if self.cache_cfg else 1.0
+        counts = se.trace_row_counts(self.spec, np.asarray(batch["indices"]),
+                                     np.asarray(batch["offsets"]))
+        self.hist = decay * self.hist + counts
+
+    # -- training ----------------------------------------------------------
+
+    def train_step(self, batch: Dict) -> float:
+        """One optimizer step; maintains the cache protocol as a side effect."""
+        if self.cache_cfg is not None:   # the histogram only feeds rebuilds
+            self.observe(batch)
+        batch_dev = {k: jnp.asarray(v) for k, v in batch.items()
+                     if k in ("dense", "indices", "offsets", "labels")}
+        self.params, self.opt_state, loss, rows = self._step(
+            self.params, self.opt_state, batch_dev)
+        self.steps += 1
+        if self.cache is not None:
+            # step 1 of the protocol: values must never go stale
+            self.cache = self._patch(self.cache, self.params["arena"],
+                                     self.spec.null_row, rows)
+        if self.cache_cfg is not None \
+                and self.steps % self.cache_cfg.refresh_every == 0:
+            self.rebuild_cache()
+        loss = float(loss)
+        self.losses.append(loss)
+        return loss
+
+    def train(self, batches: Iterable[Dict]) -> list:
+        for batch in batches:
+            self.train_step(batch)
+        return self.losses
+
+    # -- cache publication -------------------------------------------------
+
+    def rebuild_cache(self) -> VersionedHotCache:
+        """Step 2 of the protocol: re-rank from the decayed histogram and
+        publish a fresh cache under a bumped version."""
+        assert self.cache_cfg is not None, "no cache_cfg configured"
+        self.cache = se.build_hot_cache(self.params["arena"], self.spec,
+                                        self.hist, self.cache_cfg.k)
+        self.version += 1
+        return self.snapshot()
+
+    def snapshot(self) -> Optional[VersionedHotCache]:
+        if self.cache is None:
+            return None
+        return VersionedHotCache(cache=self.cache, version=self.version)
+
+    def sync_engine(self, engine) -> bool:
+        """Publish the trained state into a RecEngine if it is behind;
+        returns True when a swap happened.
+
+        Params and cache swap *together*: hot-row copies are snapshots of
+        arena rows, so publishing one without the other would serve a
+        hybrid of two arena versions — exactness requires the pair. The
+        gate is the trainer *step*, not just the rebuild version: between
+        rebuilds every optimizer step advances (params, patched cache) as
+        a consistent pair, and serving should track it.
+        """
+        snap = self.snapshot()
+        if snap is None:
+            return False
+        if getattr(engine, "_trainer_step", -1) >= self.steps \
+                and getattr(engine, "cache_version", -1) >= snap.version:
+            return False
+        engine.params = self.params
+        engine.update_cache(snap.cache, version=snap.version)
+        engine._trainer_step = self.steps
+        return True
+
+
+def make_drifting_zipf(cfg: DLRMConfig, *, batch_size: int, mean_l: int,
+                       max_l: int, drift_per_batch: int = 0,
+                       alpha: float = 1.05, seed: int = 0):
+    """Ragged-batch generator whose hot set rotates over time.
+
+    Zipf rank r maps to row (r + t * drift_per_batch) % rows at batch t, so
+    the most popular rows shift by `drift_per_batch` every batch — the
+    RecNMP drift scenario an offline-built cache cannot follow. Yields
+    batches shaped exactly like DLRMSynthetic.ragged_batch, padded to a
+    static stream length so every batch hits one compiled shape.
+    """
+    rng = np.random.RandomState(seed)
+    w = rng.randn(cfg.dense_features).astype(np.float32)
+    n_bags = batch_size * cfg.n_tables
+    pad_to = n_bags * max_l
+    t = 0
+    while True:
+        lens = np.clip(rng.poisson(mean_l, n_bags), 0, max_l).astype(np.int32)
+        offsets = np.zeros(n_bags + 1, np.int32)
+        np.cumsum(lens, out=offsets[1:])
+        n = int(offsets[-1])
+        raw = rng.zipf(alpha, size=n)
+        indices = (((raw - 1) + t * drift_per_batch)
+                   % cfg.rows_per_table).astype(np.int32)
+        indices = np.concatenate([indices, np.zeros(pad_to - n, np.int32)])
+        dense = rng.randn(batch_size, cfg.dense_features).astype(np.float32)
+        logit = dense @ w * 0.5
+        labels = (rng.rand(batch_size)
+                  < 1.0 / (1.0 + np.exp(-logit))).astype(np.float32)
+        yield {"dense": dense, "indices": indices, "offsets": offsets,
+               "lengths": lens, "labels": labels, "max_l": max_l}
+        t += 1

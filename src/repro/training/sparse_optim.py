@@ -1,0 +1,90 @@
+"""Row-wise sparse optimizer for the embedding arena.
+
+A ragged batch with an N-position index stream touches at most N of the
+arena's V rows (V is 10^5..10^7; N is 10^3). The dense training path
+nevertheless materializes a (V, D) gradient — Tensor Casting's observation
+that the training bottleneck is exactly the gather/scatter pair. This
+module keeps the update O(N): gather the touched rows' optimizer state,
+apply the row-wise Adagrad rule to those rows only, scatter back.
+
+The sparse update is *exact* vs dense ``optim.rowwise_adagrad``: untouched
+rows there see g = 0, which adds 0 to the accumulator and 0 to the row —
+the same as not visiting them at all.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_engine as se
+
+
+class SparseOptimizer(NamedTuple):
+    """Like optim.Optimizer but updates (rows, row_grads) slices.
+
+    init(arena) -> state
+    update(arena, state, rows, row_grads) -> (new_arena, new_state)
+    """
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, Any], Any]
+
+
+def ragged_row_grads(d_bags: jax.Array, indices: jax.Array,
+                     offsets: jax.Array, *,
+                     fill_row: int) -> Tuple[jax.Array, jax.Array]:
+    """Upstream bag gradients -> (touched rows, per-row gradients).
+
+    d_bags (B, D): d loss / d bag-sum; indices (N,) destination rows
+    (padded tail allowed); offsets (B+1,). Returns rows (N,) int32 and
+    grads (N, D) f32 where grads[i] is the summed gradient of row rows[i];
+    unused slots are filled with `fill_row` and a zero gradient (static
+    shapes, so the consumer stays jittable). Pass the arena null row as
+    `fill_row`: a zero gradient there is a no-op update and the null row's
+    always-zero invariant survives.
+
+    Duplicate indices within and across bags are summed (the VJP of a
+    gather is a scatter-*add*), which is what makes the later unique-row
+    scatter exact.
+    """
+    n = indices.shape[0]
+    n_bags = offsets.shape[0] - 1
+    seg = se.ragged_segment_ids(offsets, n)
+    valid = jnp.arange(n, dtype=offsets.dtype) < offsets[-1]
+    per_pos = jnp.take(d_bags.astype(jnp.float32),
+                       jnp.minimum(seg, n_bags - 1), axis=0)
+    per_pos = jnp.where(valid[:, None], per_pos, 0.0)
+    rows, inv = jnp.unique(jnp.where(valid, indices, fill_row), size=n,
+                           fill_value=fill_row, return_inverse=True)
+    grads = jax.ops.segment_sum(per_pos, inv.reshape(-1), num_segments=n)
+    return rows.astype(jnp.int32), grads
+
+
+def sparse_rowwise_adagrad(lr, eps: float = 1e-8) -> SparseOptimizer:
+    """Row-wise Adagrad over touched rows only (state: one scalar per row).
+
+    Matches optim.rowwise_adagrad exactly on the touched rows and leaves
+    the rest of the arena and accumulator untouched.
+    """
+    sched = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(arena):
+        return {"acc": jnp.zeros(arena.shape[:-1] + (1,), jnp.float32),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(arena, state, rows, row_grads):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        g32 = row_grads.astype(jnp.float32)            # (N, D)
+        g2 = jnp.mean(jnp.square(g32), axis=-1, keepdims=True)
+        # `rows` are unique apart from fill duplicates whose grads are
+        # zero, so scatter-add == set for every real row and a no-op for
+        # the fill row.
+        acc = state["acc"].at[rows].add(g2)
+        a_new = jnp.take(acc, rows, axis=0)            # (N, 1)
+        delta = -lr_t * g32 / (jnp.sqrt(a_new) + eps)
+        new_arena = arena.astype(jnp.float32).at[rows].add(delta)
+        return new_arena.astype(arena.dtype), {"acc": acc, "step": step}
+
+    return SparseOptimizer(init, update)

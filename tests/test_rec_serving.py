@@ -193,3 +193,75 @@ def test_rec_engine_quantized_cold_close(setup):
     a = np.asarray([r.prob for r in reqs_a])
     b = np.asarray([r.prob for r in reqs_b])
     assert np.abs(a - b).max() < 0.05       # int8 tail, fp hot rows
+
+
+# ---------------------------------------------------------------------------
+# dynamic bucket tuning + live cache swap (online-training integration)
+# ---------------------------------------------------------------------------
+
+def test_tune_buckets_from_histogram():
+    from repro.serving.rec_engine import tune_buckets
+    # skewed traffic: nearly everything arrives in micro-batches of 3 or 7
+    sizes = [3] * 40 + [7] * 40 + [12] * 3
+    buckets = tune_buckets(sizes, max_batch=32, n_buckets=4)
+    assert 3 in buckets and 7 in buckets       # observed modes become exact
+    assert buckets[-1] == 32                   # catch-all always present
+    assert buckets == tuple(sorted(buckets))
+    # no observations -> sane default
+    assert tune_buckets([], max_batch=16) == (1, 16)
+
+
+def test_rec_engine_retune_preserves_predictions(setup):
+    """Auto-retuned buckets change padding only — never predictions."""
+    cfg, params, data = setup
+    rb = data.ragged_batch(24, dist="poisson", mean_l=3, max_l=6)
+
+    ref = RecEngine(cfg, params, path="ragged", max_l=6, max_batch=8,
+                    max_wait_ms=0.0)
+    tuned = RecEngine(cfg, params, path="ragged", max_l=6, max_batch=8,
+                      max_wait_ms=0.0, auto_tune_after=4)
+    probs = []
+    for engine in (ref, tuned):
+        reqs = requests_from_ragged_batch(rb, cfg.n_tables)
+        # submit in bursts of 3 so every micro-batch has size 3
+        for j in range(0, len(reqs), 3):
+            for r in reqs[j:j + 3]:
+                engine.submit(r)
+            engine.step(force=True)
+        assert all(r.prob is not None for r in reqs)
+        probs.append(np.asarray([r.prob for r in reqs]))
+    assert 3 in tuned.buckets                  # tuned to the burst size
+    assert tuned.buckets != ref.buckets        # retune actually fired
+    np.testing.assert_allclose(probs[0], probs[1], rtol=1e-5, atol=1e-6)
+
+
+def test_rec_engine_update_cache_swaps_without_staleness(setup):
+    """Serving results track arena updates through a versioned cache swap
+    — the online-training refresh protocol at the engine boundary."""
+    cfg, params, data = setup
+    spec = dlrm.arena_spec(cfg)
+    rb = data.ragged_batch(6, dist="poisson", mean_l=3, max_l=6)
+    counts = se.trace_row_counts(spec, rb["indices"], rb["offsets"])
+    engine = RecEngine(cfg, params, path="cached", max_l=6, max_batch=8,
+                       max_wait_ms=0.0, cache_k=16, cache_trace=counts)
+    assert engine.cache_version == 0
+
+    # "online training" rewrites the arena; rebuild + swap a new version
+    new_params = dict(params)
+    # perturb real rows only — the null row's always-zero invariant is
+    # load-bearing for the cached path's hot/cold redirect
+    new_params["arena"] = (params["arena"] + 0.25) \
+        .at[spec.null_row:].set(0.0)
+    new_cache = se.build_hot_cache(new_params["arena"], spec, counts, 16)
+    engine.params = new_params
+    engine.update_cache(new_cache, version=7)
+    assert engine.cache_version == 7
+
+    reqs = requests_from_ragged_batch(rb, cfg.n_tables)
+    _run_requests(engine, reqs)
+    got = np.asarray([r.prob for r in reqs])
+
+    want = np.asarray(jax.nn.sigmoid(dlrm.forward_ragged(
+        new_params, cfg, jnp.asarray(rb["dense"]),
+        jnp.asarray(rb["indices"]), jnp.asarray(rb["offsets"]), max_l=6)))
+    np.testing.assert_allclose(got, want[:len(got)], rtol=1e-4, atol=1e-5)
