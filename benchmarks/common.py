@@ -28,8 +28,9 @@ def scaled_configs(scale: int = SCALE):
     return {k: scaled(v, scale) for k, v in DLRM_CONFIGS.items()}
 
 
-def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
-    """Median wall-time (seconds) of fn(*args) with block_until_ready."""
+def time_samples(fn: Callable, *args, warmup: int = 2,
+                 iters: int = 10) -> np.ndarray:
+    """Per-call wall-times (seconds) of fn(*args) with block_until_ready."""
     import jax
     for _ in range(warmup):
         out = fn(*args)
@@ -44,8 +45,40 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
             lambda x: x.block_until_ready() if hasattr(
                 x, "block_until_ready") else x, out)
         times.append(time.perf_counter() - t0)
-    return float(np.median(times))
+    return np.asarray(times)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-time (seconds) of fn(*args)."""
+    return float(np.median(time_samples(fn, *args, warmup=warmup,
+                                        iters=iters)))
+
+
+def time_percentiles(fn: Callable, *args, warmup: int = 2,
+                     iters: int = 20) -> dict:
+    """{'p50_us', 'p95_us'} of fn(*args) — the serving-style summary."""
+    s = time_samples(fn, *args, warmup=warmup, iters=iters) * 1e6
+    return {"p50_us": float(np.percentile(s, 50)),
+            "p95_us": float(np.percentile(s, 95))}
 
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def parse_csv_rows(rows) -> dict:
+    """'name,us,k=v;k=v' rows -> {name: {p50_us, derived:{...}}} — the
+    machine-readable mirror of the printed CSV (numbers parsed where they
+    parse; '3.10x' style ratios kept as strings)."""
+    out = {}
+    for row in rows:
+        name, us, derived = row.split(",", 2)
+        rec = {"p50_us": float(us), "derived": {}}
+        for kv in filter(None, derived.split(";")):
+            k, _, v = kv.partition("=")
+            try:
+                rec["derived"][k] = float(v)
+            except ValueError:
+                rec["derived"][k] = v
+        out[name] = rec
+    return out

@@ -1,7 +1,9 @@
 """Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``.
 
 One function per paper table/figure (bench_paper) plus the roofline table
-(bench_roofline). Prints ``name,us_per_call,derived`` CSV.
+(bench_roofline). Prints ``name,us_per_call,derived`` CSV and writes the
+machine-readable ``BENCH_paper.json`` (scenario -> p50/p95 + derived) for
+the paper benches.
 """
 from __future__ import annotations
 
@@ -11,11 +13,15 @@ import sys
 def main() -> None:
     from benchmarks import bench_paper, bench_roofline
     print("name,us_per_call,derived")
+    paper_rows = []
     for row in bench_paper.run_all():
+        paper_rows.append(row)
         print(row)
         sys.stdout.flush()
     for row in bench_roofline.run_all():
         print(row)
+    path = bench_paper.write_json(paper_rows)
+    print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -10,76 +10,181 @@ Request stream (variable bag lengths, Zipfian row skew)
 
     PYTHONPATH=src python examples/serve_recommender.py \
         [--requests 4096] [--path cached] [--cache-k 4096]
+
+With ``--replicas N`` (N >= 2) the driver instead demonstrates the
+multi-host cache-coherence protocol: one online trainer keeps learning and
+periodically publishes its versioned hot arena as ONE serialized broadcast
+artifact; N serving replicas deserialize and adopt it atomically (stale
+re-deliveries are rejected at the engine boundary), and every replica's
+predictions stay exactly equal to the uncached forward on the live params.
+
+    PYTHONPATH=src python examples/serve_recommender.py \
+        --replicas 2 --online-steps 60 --cache-k 512
 """
 import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.dlrm import DLRM_CONFIGS
+from repro.configs.dlrm import DLRM_CONFIGS, DLRM_SMOKE
 from repro.core import dlrm
 from repro.core import sparse_engine as se
 from repro.data import DLRMSynthetic
 from repro.serving import RecEngine, requests_from_ragged_batch
 
-parser = argparse.ArgumentParser()
-parser.add_argument("--requests", type=int, default=4096)
-parser.add_argument("--max-batch", type=int, default=64)
-parser.add_argument("--max-wait-ms", type=float, default=2.0)
-parser.add_argument("--path", choices=RecEngine.PATHS, default="ragged")
-parser.add_argument("--dist", choices=("fixed", "uniform", "poisson"),
-                    default="poisson")
-parser.add_argument("--cache-k", type=int, default=4096)
-parser.add_argument("--quantize-cold", action="store_true")
-parser.add_argument("--sla-ms", type=float, default=10.0)
-args = parser.parse_args()
 
-cfg = DLRM_CONFIGS["dlrm1"]
-params = dlrm.init(jax.random.PRNGKey(0), cfg)
-data = DLRMSynthetic(cfg, seed=7)
-dist = "fixed" if args.path == "fixed" else args.dist
-max_l = cfg.lookups_per_table if dist == "fixed" \
-    else 2 * cfg.lookups_per_table
+def serve_once(args) -> None:
+    """Single-engine SLA serving run (the original driver)."""
+    cfg = DLRM_CONFIGS["dlrm1"]
+    params = dlrm.init(jax.random.PRNGKey(0), cfg)
+    data = DLRMSynthetic(cfg, seed=7)
+    dist = "fixed" if args.path == "fixed" else args.dist
+    max_l = cfg.lookups_per_table if dist == "fixed" \
+        else 2 * cfg.lookups_per_table
 
-# The cached path profiles a warmup trace first (top-K by frequency).
-cache_trace = None
-if args.path == "cached":
-    warm = data.ragged_batch(4096, dist=dist, max_l=max_l)
-    cache_trace = se.trace_row_counts(dlrm.arena_spec(cfg), warm["indices"],
-                                      warm["offsets"])
+    # The cached path profiles a warmup trace first (top-K by frequency).
+    cache_trace = None
+    if args.path == "cached":
+        warm = data.ragged_batch(4096, dist=dist, max_l=max_l)
+        cache_trace = se.trace_row_counts(dlrm.arena_spec(cfg),
+                                          warm["indices"], warm["offsets"])
 
-engine = RecEngine(cfg, params, path=args.path, max_l=max_l,
-                   max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
-                   cache_k=args.cache_k if args.path == "cached" else 0,
-                   cache_trace=cache_trace,
-                   quantize_cold=args.quantize_cold)
+    engine = RecEngine(cfg, params, path=args.path, max_l=max_l,
+                       max_batch=args.max_batch,
+                       max_wait_ms=args.max_wait_ms,
+                       cache_k=args.cache_k if args.path == "cached" else 0,
+                       cache_trace=cache_trace,
+                       quantize_cold=args.quantize_cold)
 
-# Compile every bucket shape off the clock.
-engine.warmup()
+    # Compile every bucket shape off the clock.
+    engine.warmup()
 
-t0 = time.perf_counter()
-rid = 0
-while rid < args.requests:
-    n = min(args.max_batch, args.requests - rid)
-    for r in requests_from_ragged_batch(
-            data.ragged_batch(n, dist=dist, max_l=max_l),
-            cfg.n_tables, rid0=rid):
-        engine.submit(r)
-    rid += n
-    engine.step()
-engine.drain()
-wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rid = 0
+    while rid < args.requests:
+        n = min(args.max_batch, args.requests - rid)
+        for r in requests_from_ragged_batch(
+                data.ragged_batch(n, dist=dist, max_l=max_l),
+                cfg.n_tables, rid0=rid):
+            engine.submit(r)
+        rid += n
+        engine.step()
+    engine.drain()
+    wall = time.perf_counter() - t0
 
-s = engine.stats()
-arr = np.asarray(engine.latencies) * 1e3
-print(f"served {s['n']} requests on the '{args.path}' path "
-      f"(bag lengths: {dist}, max_l={max_l})")
-print(f"latency per request: p50 {s['p50_ms']:.2f} ms  "
-      f"p95 {s['p95_ms']:.2f} ms  p99 {s['p99_ms']:.2f} ms")
-print(f"throughput: {s['n'] / wall:.0f} req/s")
-print(f"SLA ({args.sla_ms:.0f} ms): "
-      f"{100.0 * (arr <= args.sla_ms).mean():.1f}% of requests in budget")
-if "cache_hit_rate" in s:
-    print(f"hot-row cache: K={args.cache_k}, "
-          f"hit rate {100.0 * s['cache_hit_rate']:.1f}%")
+    s = engine.stats()
+    arr = np.asarray(engine.latencies) * 1e3
+    print(f"served {s['n']} requests on the '{args.path}' path "
+          f"(bag lengths: {dist}, max_l={max_l})")
+    print(f"latency per request: p50 {s['p50_ms']:.2f} ms  "
+          f"p95 {s['p95_ms']:.2f} ms  p99 {s['p99_ms']:.2f} ms")
+    print(f"throughput: {s['n'] / wall:.0f} req/s")
+    print(f"SLA ({args.sla_ms:.0f} ms): "
+          f"{100.0 * (arr <= args.sla_ms).mean():.1f}% of requests in budget")
+    if "cache_hit_rate" in s:
+        print(f"hot-row cache: K={args.cache_k}, "
+              f"hit rate {100.0 * s['cache_hit_rate']:.1f}%")
+
+
+def serve_broadcast_fleet(args) -> None:
+    """Trainer + N serving replicas under the versioned-broadcast protocol."""
+    from repro.training import (OnlineCacheConfig, OnlineTrainer,
+                                VersionedHotCache, make_drifting_zipf)
+
+    cfg = DLRM_SMOKE
+    spec = dlrm.arena_spec(cfg)
+    params = dlrm.init(jax.random.PRNGKey(0), cfg)
+    max_l = 2 * cfg.lookups_per_table
+    k = min(args.cache_k, spec.null_row)
+
+    trainer = OnlineTrainer(
+        cfg, params, max_l=max_l,
+        cache_cfg=OnlineCacheConfig(k=k, refresh_every=args.cache_refresh))
+    gen = make_drifting_zipf(cfg, batch_size=16, mean_l=3, max_l=max_l,
+                             drift_per_batch=3)
+    trainer.train_step(next(gen))
+    trainer.rebuild_cache()                      # version 1 exists up front
+
+    data = DLRMSynthetic(cfg, seed=23)
+    replicas = []
+    for i in range(args.replicas):
+        eng = RecEngine(cfg, trainer.params, path="cached", max_l=max_l,
+                        max_batch=8, max_wait_ms=0.0, cache_k=k,
+                        cache_trace=trainer.hist)
+        blob = trainer.publish()
+        VersionedHotCache.deserialize(blob).apply(eng)
+        replicas.append(eng)
+
+    rounds = max(1, args.online_steps // args.cache_refresh)
+    print(f"fleet: 1 trainer -> {args.replicas} replicas, "
+          f"K={k}, refresh every {args.cache_refresh} steps")
+    for rnd in range(rounds):
+        for _ in range(args.cache_refresh):
+            trainer.train_step(next(gen))
+        blob = trainer.publish()                 # ONE artifact, N consumers
+        art = VersionedHotCache.deserialize(blob)
+        for eng in replicas:
+            eng.params = trainer.params          # param + cache pair swap
+            adopted = art.apply(eng)
+            assert adopted or eng.cache_version >= art.version
+
+        # replicas must agree with each other AND with the uncached
+        # forward over the live params — the protocol's whole point
+        rb = data.ragged_batch(6, mean_l=3, max_l=max_l)
+        probs = []
+        for eng in replicas:
+            reqs = requests_from_ragged_batch(rb, cfg.n_tables)
+            for r in reqs:
+                eng.submit(r)
+            eng.step(force=True)
+            probs.append(np.asarray([r.prob for r in reqs]))
+        want = np.asarray(jax.nn.sigmoid(dlrm.forward_ragged(
+            trainer.params, cfg, jnp.asarray(rb["dense"]),
+            jnp.asarray(rb["indices"]), jnp.asarray(rb["offsets"]),
+            max_l=max_l)))
+        spread = max(float(np.abs(p - want).max()) for p in probs)
+        print(f"round {rnd}: version {art.version} "
+              f"({len(blob) / 1e3:.0f} kB artifact) adopted by "
+              f"{args.replicas} replicas, loss {trainer.losses[-1]:.4f}, "
+              f"max |replica - uncached| = {spread:.2e}")
+        assert spread < 1e-4, "replica drifted from the live params"
+
+    # out-of-order redelivery of an old artifact must be absorbed
+    stale = VersionedHotCache(cache=replicas[0].cache, version=0)
+    assert not stale.apply(replicas[0])
+    hit = replicas[0].stats().get("cache_hit_rate", 0.0)
+    print(f"stale artifact (v0) rejected; replica hit rate "
+          f"{100.0 * hit:.1f}%")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--requests", type=int, default=4096)
+    parser.add_argument("--max-batch", type=int, default=64)
+    parser.add_argument("--max-wait-ms", type=float, default=2.0)
+    # 'sharded' is excluded: it requires a multi-device mesh this
+    # single-host example does not build (see tests/test_sharded_sparse.py
+    # and launch/train.py --shards for the sharded entry points)
+    parser.add_argument("--path", choices=("fixed", "ragged", "cached"),
+                        default="ragged")
+    parser.add_argument("--dist", choices=("fixed", "uniform", "poisson"),
+                        default="poisson")
+    parser.add_argument("--cache-k", type=int, default=4096)
+    parser.add_argument("--quantize-cold", action="store_true")
+    parser.add_argument("--sla-ms", type=float, default=10.0)
+    parser.add_argument("--replicas", type=int, default=1,
+                        help=">=2: run the trainer -> N-replica versioned "
+                             "hot-arena broadcast demo instead")
+    parser.add_argument("--online-steps", type=int, default=60)
+    parser.add_argument("--cache-refresh", type=int, default=20)
+    args = parser.parse_args()
+    if args.replicas > 1:
+        serve_broadcast_fleet(args)
+    else:
+        serve_once(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import DLRMConfig
 from repro.core import dense_engine as de
 from repro.core import sparse_engine as se
@@ -83,14 +84,20 @@ def forward_ragged(params: Dict, cfg: DLRMConfig, dense: jax.Array,
       * cache=None, quantized=None — sharded/replicated fp arena;
       * cache set                  — hot-row cache + fp cold arena (exact);
       * cache + quantized=(q, s)   — hot rows fp, cold rows int8.
+
+    Every source honors `mesh`: with one, the cold/uncached arena is
+    row-sharded over the 'model' axis inside shard_map (the hot arena
+    stays replicated) — the same bags, bit-for-bit decomposition, at
+    pod scale.
     """
     spec = arena_spec(cfg)
     if cache is not None and quantized is not None:
         emb = se.lookup_ragged_cached_q(cache, quantized[0], quantized[1],
-                                        spec, indices, offsets, max_l=max_l)
+                                        spec, indices, offsets, max_l=max_l,
+                                        mesh=mesh)
     elif cache is not None:
         emb = se.lookup_ragged_cached(cache, params["arena"], spec, indices,
-                                      offsets, max_l=max_l)
+                                      offsets, max_l=max_l, mesh=mesh)
     else:
         emb = se.lookup_ragged_auto(params["arena"], spec, indices, offsets,
                                     max_l=max_l, mesh=mesh)
@@ -141,7 +148,9 @@ def make_train_step(cfg: DLRMConfig, optimizer=None,
 
 def make_train_step_ragged(cfg: DLRMConfig, *, max_l: int, lr: float = 1e-3,
                            sparse: bool = True,
-                           mesh: Optional[jax.sharding.Mesh] = None):
+                           mesh: Optional[jax.sharding.Mesh] = None,
+                           sharded: Optional[bool] = None,
+                           axis: str = "model"):
     """Train step over ragged batches {dense, indices, offsets, labels}.
 
     Returns (opt_like, step) where step(params, opt_state, batch) ->
@@ -154,16 +163,36 @@ def make_train_step_ragged(cfg: DLRMConfig, *, max_l: int, lr: float = 1e-3,
     gradient) with AdamW on the MLPs; sparse=False is the dense-gradient
     baseline (jax.grad through the whole model + partitioned row-wise
     Adagrad), kept for the bench comparison.
+
+    sharded=True (the default whenever sparse=True and `mesh` has a >1
+    `axis`) runs the whole sparse step inside shard_map: the arena and its
+    Adagrad accumulator live row-sharded over `axis`, the forward reduces
+    shard-local partial bags (one psum of reduced D-vectors, never raw
+    rows), each shard applies exactly the row updates it owns (null row
+    excluded), and MLP grads are psum-combined so every replica steps in
+    lockstep. Exact vs the replicated sparse step and the dense-grad
+    baseline.
     """
     from repro.training import sparse_optim as so
 
     spec = arena_spec(cfg)
-    if sparse and mesh is not None:
-        raise NotImplementedError(
-            "sharded ragged training (mesh + row-wise sparse optimizer) is "
-            "ROADMAP work — the sparse branch would silently train the "
-            "replicated arena; pass mesh=None, or sparse=False for the "
-            "dense-grad path which threads the mesh")
+    if sharded is None:
+        sharded = sparse and se.mesh_shards(mesh, axis) > 1
+    if sharded:
+        if not sparse:
+            raise ValueError("sharded=True is the sparse-optimizer path; "
+                             "the dense-grad baseline threads the mesh "
+                             "through lookup_ragged_auto instead")
+        if mesh is None or axis not in mesh.axis_names:
+            raise ValueError(f"sharded=True needs a mesh with axis "
+                             f"{axis!r}")
+        return _make_train_step_ragged_sharded(cfg, spec, max_l=max_l,
+                                               lr=lr, mesh=mesh, axis=axis)
+    if sparse and mesh is not None and se.mesh_shards(mesh, axis) > 1:
+        raise ValueError(
+            "sparse ragged training on a mesh must be sharded — the "
+            "replicated sparse branch would silently train a per-device "
+            "arena copy; pass sharded=True (or leave sharded=None)")
     if not sparse:
         opt = make_optimizer(cfg, lr)
 
@@ -216,6 +245,86 @@ def make_train_step_ragged(cfg: DLRMConfig, *, max_l: int, lr: float = 1e-3,
             params["arena"], opt_state["arena"], rows, row_g)
         new_mlp, mlp_state = mlp_opt.update(d_mlp, opt_state["mlp"],
                                             mlp_params)
+        new_params = dict(new_mlp)
+        new_params["arena"] = new_arena
+        return new_params, {"arena": arena_state, "mlp": mlp_state}, \
+            loss, rows
+
+    return Optimizer(init, None), step
+
+
+def _make_train_step_ragged_sharded(cfg: DLRMConfig, spec: se.ArenaSpec, *,
+                                    max_l: int, lr: float,
+                                    mesh: jax.sharding.Mesh, axis: str):
+    """Row-sharded sparse train step (see make_train_step_ragged).
+
+    Everything runs per-shard inside one shard_map: the only cross-chip
+    traffic per step is the psum of reduced bag partials (forward) and the
+    psum of MLP grads (backward) — row gradients never leave the shard
+    that owns the rows, which is what keeps the update O(index stream)
+    at any shard count.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.training import sparse_optim as so
+
+    arena_opt = so.sparse_rowwise_adagrad(lr * 10)
+    mlp_opt = adamw(lr)
+    null = spec.null_row
+    arena_state_spec = {"acc": P(axis, None), "step": P()}
+
+    def init(params):
+        return {"arena": arena_opt.init(params["arena"]),
+                "mlp": mlp_opt.init({k: v for k, v in params.items()
+                                     if k != "arena"})}
+
+    def local_step(arena_shard, arena_state, mlp_params, mlp_state, batch):
+        lo, vlocal = se.shard_row_range(arena_shard, axis)
+        flat = se.flatten_ragged_indices(spec, batch["indices"],
+                                         batch["offsets"])
+        n_bags = batch["offsets"].shape[0] - 1
+        b = n_bags // spec.n_tables
+        emb = se.ragged_partial_reduce(jax.lax.stop_gradient(arena_shard),
+                                       flat, batch["offsets"], axis)
+        emb = emb.reshape(b, spec.n_tables, spec.dim) \
+            .astype(arena_shard.dtype)
+
+        def head(mlp_params, emb):
+            return _bce(head_logits(mlp_params, batch["dense"], emb),
+                        batch["labels"])
+
+        loss, (d_mlp, d_emb) = jax.value_and_grad(head, argnums=(0, 1))(
+            mlp_params, emb)
+        # the batch is replicated over the model axis, so per-shard MLP
+        # grads are already equal; the psum/N keeps replicas in lockstep
+        # under non-deterministic reductions and is where a data-parallel
+        # batch axis would combine partials
+        d_mlp = jax.tree_util.tree_map(
+            lambda g: jax.lax.pmean(g, axis), d_mlp)
+
+        d_bags = d_emb.reshape(n_bags, spec.dim)
+        rows, row_g = so.ragged_row_grads(d_bags, flat, batch["offsets"],
+                                          fill_row=null)
+        lrows, lg = so.shard_local_rows(rows, row_g, lo=lo, vlocal=vlocal,
+                                        null_row=null)
+        new_shard, new_arena_state = arena_opt.update(
+            arena_shard, arena_state, lrows, lg)
+        new_mlp, new_mlp_state = mlp_opt.update(d_mlp, mlp_state,
+                                                mlp_params)
+        return new_shard, new_arena_state, new_mlp, new_mlp_state, loss, \
+            rows
+
+    fn = compat.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(P(axis, None), arena_state_spec, P(), P(), P()),
+        out_specs=(P(axis, None), arena_state_spec, P(), P(), P(), P()),
+    )
+
+    def step(params, opt_state, batch):
+        mlp_params = {k: v for k, v in params.items() if k != "arena"}
+        new_arena, arena_state, new_mlp, mlp_state, loss, rows = fn(
+            params["arena"], opt_state["arena"], mlp_params,
+            opt_state["mlp"], batch)
         new_params = dict(new_mlp)
         new_params["arena"] = new_arena
         return new_params, {"arena": arena_state, "mlp": mlp_state}, \

@@ -207,6 +207,57 @@ def lookup_ragged(arena: jax.Array, spec: ArenaSpec, indices: jax.Array,
     return out.reshape(b, spec.n_tables, spec.dim)
 
 
+def shard_row_range(arena_shard: jax.Array, axis: str):
+    """(lo, vlocal) of the contiguous row block this shard owns."""
+    vlocal = arena_shard.shape[0]
+    return jax.lax.axis_index(axis) * vlocal, vlocal
+
+
+def _masked_partial_reduce(gather_f32, lo, vlocal: int, flat: jax.Array,
+                           offsets: jax.Array, axis: str) -> jax.Array:
+    """The ownership protocol every sharded sparse path shares: foreign
+    rows are gathered as local row 0 and zero-masked, partial bags are
+    segment-reduced locally, one psum combines them — only reduced
+    (n_bags, D) partials ever cross chips. `gather_f32(local_rows)` loads
+    shard rows as f32 (plain take, or dequantize-on-load). One body, so
+    the fp and int8 sharded paths can never diverge on the masking edge.
+    """
+    n = flat.shape[0]
+    n_bags = offsets.shape[0] - 1
+    seg = ragged_segment_ids(offsets, n)
+    rel = flat - lo
+    mine = (rel >= 0) & (rel < vlocal) & (seg < n_bags)
+    safe = jnp.where(mine, rel, 0)
+    rows = jnp.where(mine[..., None], gather_f32(safe), 0)   # (N, D)
+    part = jax.ops.segment_sum(rows, jnp.minimum(seg, n_bags - 1),
+                               num_segments=n_bags)
+    return jax.lax.psum(part, axis)
+
+
+def ragged_partial_reduce(arena_shard: jax.Array, flat: jax.Array,
+                          offsets: jax.Array, axis: str) -> jax.Array:
+    """Shard-local half of a ragged reduce over pre-flattened arena rows.
+    Must run inside shard_map (or a vmap with a named axis). Returns f32
+    (n_bags, D)."""
+    lo, vlocal = shard_row_range(arena_shard, axis)
+    return _masked_partial_reduce(
+        lambda safe: jnp.take(arena_shard, safe, axis=0)
+        .astype(jnp.float32), lo, vlocal, flat, offsets, axis)
+
+
+def ragged_partial_reduce_q(q_shard: jax.Array, scales_shard: jax.Array,
+                            flat: jax.Array, offsets: jax.Array,
+                            axis: str) -> jax.Array:
+    """`ragged_partial_reduce` over a row-sharded int8 arena: owned rows are
+    dequantized locally (rows * per-row scale) before the masked segment
+    reduce, so raw int8 rows never cross chips either."""
+    lo, vlocal = shard_row_range(q_shard, axis)
+    return _masked_partial_reduce(
+        lambda safe: jnp.take(q_shard, safe, axis=0).astype(jnp.float32)
+        * jnp.take(scales_shard, safe, axis=0),
+        lo, vlocal, flat, offsets, axis)
+
+
 def lookup_ragged_sharded(arena_shard: jax.Array, spec: ArenaSpec,
                           indices: jax.Array, offsets: jax.Array,
                           axis: str) -> jax.Array:
@@ -217,24 +268,19 @@ def lookup_ragged_sharded(arena_shard: jax.Array, spec: ArenaSpec,
     locally, one psum combines them — only reduced (B,T,D) partials cross
     chips.
     """
-    my = jax.lax.axis_index(axis)
-    vlocal = arena_shard.shape[0]
-    lo = my * vlocal
-
-    n = indices.shape[0]
     n_bags = offsets.shape[0] - 1
     flat = flatten_ragged_indices(spec, indices, offsets)
-    seg = ragged_segment_ids(offsets, n)
-    rel = flat - lo
-    mine = (rel >= 0) & (rel < vlocal) & (seg < n_bags)
-    safe = jnp.where(mine, rel, 0)
-    rows = jnp.take(arena_shard, safe, axis=0)          # (N, D)
-    rows = jnp.where(mine[..., None], rows, 0).astype(jnp.float32)
-    part = jax.ops.segment_sum(rows, jnp.minimum(seg, n_bags - 1),
-                               num_segments=n_bags)
-    out = jax.lax.psum(part, axis)
+    out = ragged_partial_reduce(arena_shard, flat, offsets, axis)
     return out.reshape(n_bags // spec.n_tables, spec.n_tables,
                        spec.dim).astype(arena_shard.dtype)
+
+
+def mesh_shards(mesh: Optional[jax.sharding.Mesh],
+                axis: str = "model") -> int:
+    """Number of row shards a (mesh, axis) pair implies (1 = replicated)."""
+    if mesh is None or axis not in mesh.axis_names:
+        return 1
+    return mesh.shape[axis]
 
 
 def lookup_ragged_auto(arena: jax.Array, spec: ArenaSpec,
@@ -243,7 +289,7 @@ def lookup_ragged_auto(arena: jax.Array, spec: ArenaSpec,
                        mesh: Optional[jax.sharding.Mesh] = None,
                        axis: str = "model") -> jax.Array:
     """pjit-level ragged entry: row-shard the arena over `axis` on a mesh."""
-    if mesh is None or axis not in mesh.axis_names or mesh.shape[axis] == 1:
+    if mesh_shards(mesh, axis) == 1:
         return lookup_ragged(arena, spec, indices, offsets, max_l=max_l)
     from jax.sharding import PartitionSpec as P
     fn = compat.shard_map(
@@ -348,12 +394,14 @@ def build_hot_cache(arena: jax.Array, spec: ArenaSpec, counts,
                        hot_ids=jnp.asarray(hot_ids))
 
 
-def _cache_split(cache: HotRowCache, spec: ArenaSpec, indices: jax.Array,
-                 offsets: jax.Array, max_l: int):
+def cache_split(cache: HotRowCache, spec: ArenaSpec, indices: jax.Array,
+                offsets: jax.Array, max_l: int):
     """Shared hot/cold protocol: the hot pass reduces cache slots (misses
     hit the zero null slot), and cold_idx redirects cached rows to the
     arena null row so any cold reduction over it is exactly the complement.
-    Returns (hot_sum (n_bags, D) f32, cold_idx (N,), n_bags)."""
+    Returns (hot_sum (n_bags, D) f32, cold_idx (N,), n_bags). Public:
+    benches and shard-emulation tests compose custom cold passes from it.
+    """
     n_bags = offsets.shape[0] - 1
     k = cache.hot_rows.shape[0] - 1
     flat = flatten_ragged_indices(spec, indices, offsets)
@@ -367,12 +415,36 @@ def _cache_split(cache: HotRowCache, spec: ArenaSpec, indices: jax.Array,
 
 def lookup_ragged_cached(cache: HotRowCache, arena: jax.Array,
                          spec: ArenaSpec, indices: jax.Array,
-                         offsets: jax.Array, *, max_l: int) -> jax.Array:
-    """Hot-row-cached ragged lookup, exact vs `lookup_ragged`."""
-    hot, cold_idx, n_bags = _cache_split(cache, spec, indices, offsets,
-                                         max_l)
-    cold = ops.sparse_lengths_sum(arena, cold_idx, offsets, max_l=max_l)
-    out = hot + cold.astype(jnp.float32)
+                         offsets: jax.Array, *, max_l: int,
+                         mesh: Optional[jax.sharding.Mesh] = None,
+                         axis: str = "model") -> jax.Array:
+    """Hot-row-cached ragged lookup, exact vs `lookup_ragged`.
+
+    With a mesh the cold pass runs through the row-sharded arena inside
+    shard_map — the Centaur composition: the hot arena stays replicated
+    (it is small and absorbs most traffic), cold rows stay shard-resident,
+    and only reduced cold partials cross chips. The hot+cold sum is the
+    same exact decomposition either way.
+    """
+    hot, cold_idx, n_bags = cache_split(cache, spec, indices, offsets,
+                                        max_l)
+    if mesh_shards(mesh, axis) == 1:
+        cold = ops.sparse_lengths_sum(arena, cold_idx, offsets,
+                                      max_l=max_l).astype(jnp.float32)
+    else:
+        from jax.sharding import PartitionSpec as P
+        fn = compat.shard_map(
+            lambda a, f, o: ragged_partial_reduce(a, f, o, axis),
+            mesh=mesh,
+            in_specs=(P(axis, None), P(None), P(None)),
+            out_specs=P(None, None),
+        )
+        # round through the arena dtype exactly like the replicated cold
+        # kernel does, so replicated and sharded stay bit-comparable on
+        # low-precision (e.g. bf16) arenas too
+        cold = fn(arena, cold_idx, offsets).astype(arena.dtype) \
+            .astype(jnp.float32)
+    out = hot + cold
     return out.reshape(n_bags // spec.n_tables, spec.n_tables,
                        spec.dim).astype(arena.dtype)
 
@@ -380,13 +452,27 @@ def lookup_ragged_cached(cache: HotRowCache, arena: jax.Array,
 def lookup_ragged_cached_q(cache: HotRowCache, q: jax.Array,
                            scales: jax.Array, spec: ArenaSpec,
                            indices: jax.Array, offsets: jax.Array, *,
-                           max_l: int) -> jax.Array:
+                           max_l: int,
+                           mesh: Optional[jax.sharding.Mesh] = None,
+                           axis: str = "model") -> jax.Array:
     """Hot rows exact (fp replicated arena), cold rows from the int8 arena
     — the capacity configuration: hot working set at full precision, the
-    long tail at 3.9x density."""
-    hot, cold_idx, n_bags = _cache_split(cache, spec, indices, offsets,
-                                         max_l)
-    cold = _ragged_reduce_q(q, scales, cold_idx, offsets, n_bags)
+    long tail at 3.9x density. With a mesh the int8 cold arena is
+    row-sharded like the fp one (scales shard with their rows)."""
+    hot, cold_idx, n_bags = cache_split(cache, spec, indices, offsets,
+                                        max_l)
+    if mesh_shards(mesh, axis) == 1:
+        cold = _ragged_reduce_q(q, scales, cold_idx, offsets, n_bags)
+    else:
+        from jax.sharding import PartitionSpec as P
+        fn = compat.shard_map(
+            lambda qq, ss, f, o: ragged_partial_reduce_q(qq, ss, f, o,
+                                                         axis),
+            mesh=mesh,
+            in_specs=(P(axis, None), P(axis, None), P(None), P(None)),
+            out_specs=P(None, None),
+        )
+        cold = fn(q, scales, cold_idx, offsets)
     return (hot + cold).reshape(n_bags // spec.n_tables, spec.n_tables,
                                 spec.dim)
 

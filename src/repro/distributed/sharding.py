@@ -81,6 +81,20 @@ def sharding_for(mesh: Optional[Mesh],
     return NamedSharding(mesh, resolve(mesh, logical))
 
 
+def place_row_sharded(x: jax.Array, mesh: Optional[Mesh],
+                      axis: str = "model") -> jax.Array:
+    """Materialize a (rows, D) array row-sharded over `axis` (the embedding
+    arena's resident layout for the sharded sparse paths). Identity when no
+    mesh / no axis — the same call site works on a laptop and a pod. The
+    row count must divide the axis (ArenaSpec.padded_rows guarantees it).
+    """
+    if mesh is None or axis not in mesh.axis_names:
+        return x
+    assert x.shape[0] % mesh.shape[axis] == 0, \
+        (x.shape, axis, mesh.shape[axis])
+    return jax.device_put(x, NamedSharding(mesh, P(axis, None)))
+
+
 def spec_tree_to_shardings(mesh: Optional[Mesh], spec_tree):
     """Map a pytree of logical tuples to NamedShardings (or None mesh-less)."""
     if mesh is None:

@@ -13,6 +13,7 @@ with --resume, straggler monitor logging.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -34,11 +35,16 @@ def train_dlrm_ragged(args) -> float:
     live hot-row cache that re-ranks itself from the decayed histogram."""
     from repro.training import OnlineCacheConfig, OnlineTrainer
 
+    from repro.distributed.sharding import place_row_sharded
+
     cfg = DLRM_SMOKE if args.smoke else DLRM_CONFIGS[args.arch]
     mesh = _mesh(args)
     key = jax.random.PRNGKey(args.seed)
     shards = mesh.shape["model"] if mesh else 1
     params = dlrm_mod.init(key, cfg, shards)
+    # the arena *lives* row-sharded: the sharded train step and the sharded
+    # serving cold pass both consume it in place, no per-step reshard
+    params["arena"] = place_row_sharded(params["arena"], mesh)
     max_l = 2 * cfg.lookups_per_table
     cache_cfg = None
     if args.online_cache:
@@ -163,6 +169,14 @@ def train_lm(args) -> float:
 
 
 def _mesh(args):
+    if getattr(args, "shards", 1) > 1:
+        if args.mesh != "none":
+            raise SystemExit(
+                "--shards builds its own N-way 'model' mesh and cannot be "
+                "combined with --mesh pod/multipod (the production meshes "
+                "fix their own model-axis width); pass one or the other")
+        from repro.launch.mesh import make_mesh
+        return make_mesh((args.shards,), ("model",))
     if args.mesh == "none":
         return None
     return make_production_mesh(multi_pod=(args.mesh == "multipod"))
@@ -195,7 +209,20 @@ def main() -> None:
                         "instead of the row-wise sparse optimizer")
     p.add_argument("--cache-k", type=int, default=2048)
     p.add_argument("--cache-refresh", type=int, default=50)
+    p.add_argument("--shards", type=int, default=1,
+                   help="row-shard the embedding arena over an N-way "
+                        "'model' mesh (DLRM; with --ragged the sparse "
+                        "optimizer applies shard-local row updates)")
     args = p.parse_args()
+
+    if args.shards > 1:
+        # must land before the first backend touch; on CPU this simulates
+        # the N chips the mesh needs (real TPU fleets already have them)
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.shards}").strip()
 
     if args.arch.startswith("dlrm"):
         train_dlrm(args)

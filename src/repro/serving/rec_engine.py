@@ -94,10 +94,13 @@ def tune_buckets(sizes: Sequence[int], max_batch: int,
     mass per bucket), deduplicated, with max_batch always present as the
     catch-all. Fewer distinct observed sizes than n_buckets simply yields
     fewer buckets — each observed size then pads to itself (zero waste).
+    Observed sizes above max_batch clip to it: the batcher never releases
+    more than max_batch, so a larger bucket would only be compiled, never
+    hit.
     """
     if len(sizes) == 0:
         return tuple(sorted({1, max_batch}))
-    arr = np.sort(np.asarray(sizes, np.int64))
+    arr = np.sort(np.minimum(np.asarray(sizes, np.int64), max_batch))
     qs = [arr[min(len(arr) - 1, int(np.ceil((i + 1) / n_buckets * len(arr)))
                  - 1)] for i in range(n_buckets)]
     out = sorted({int(q) for q in qs if q >= 1} | {max_batch})
@@ -105,9 +108,21 @@ def tune_buckets(sizes: Sequence[int], max_batch: int,
 
 
 class RecEngine:
-    """Batcher-fed DLRM inference over the ragged sparse path."""
+    """Batcher-fed DLRM inference over the ragged sparse path.
 
-    PATHS = ("fixed", "ragged", "cached")
+    Embedding sources (``path``):
+      * ``fixed``   — legacy fixed-L engine (regression baseline);
+      * ``ragged``  — `dlrm.forward_ragged`; the arena row-shards over the
+                      mesh's 'model' axis when a mesh is passed;
+      * ``sharded`` — ragged with the row-sharded arena made explicit: a
+                      mesh is *required*, so a misconfigured replica can
+                      never silently fall back to the replicated arena;
+      * ``cached``  — ragged + hot-row cache; with a mesh the cold pass
+                      runs through the row-sharded arena (the hot arena
+                      stays replicated on every chip).
+    """
+
+    PATHS = ("fixed", "ragged", "cached", "sharded")
 
     def __init__(self, cfg: DLRMConfig, params: Dict, *,
                  path: str = "ragged", max_l: Optional[int] = None,
@@ -118,6 +133,9 @@ class RecEngine:
                  auto_tune_after: Optional[int] = None,
                  mesh: Optional[jax.sharding.Mesh] = None):
         assert path in self.PATHS, path
+        if path == "sharded":
+            assert mesh is not None and se.mesh_shards(mesh) > 1, \
+                "path='sharded' needs a mesh with a >1 'model' axis"
         self.cfg = cfg
         self.params = params
         self.path = path
@@ -168,8 +186,19 @@ class RecEngine:
         The whole HotRowCache object is replaced at once — (hot_rows,
         slot_of) are never observable in a torn state. Keeping K constant
         across versions keeps the serve step's compiled shape unchanged.
+
+        Stale broadcasts are rejected: a versioned swap to anything below
+        the currently served version would re-serve rows the trainer has
+        since rewritten (broadcast artifacts arrive out of order across a
+        fleet). Equal versions are allowed — between rebuilds the trainer
+        republishes the same version with write-through-patched values.
         """
         assert self.path == "cached", "update_cache needs the cached path"
+        if version is not None and version < self.cache_version:
+            raise ValueError(
+                f"stale cache broadcast: version {version} < served "
+                f"version {self.cache_version} — reordered artifact, "
+                f"refusing to roll the hot arena back")
         assert cache.hot_rows.shape == self.cache.hot_rows.shape, \
             ("cache swap changed K/D — this forces a recompile on the "
              "serving hot path; keep trainer and engine cache_k equal",

@@ -44,6 +44,29 @@ pinning. The protocol keeps the serving path exact at all times:
 Consumers that cannot tolerate torn reads across the (hot_rows, slot_of)
 pair must swap the whole ``HotRowCache`` object at once — both the trainer
 and the engine do; neither ever mutates a published cache in place.
+
+3. **Versioned broadcast (trainer -> fleet).** Multi-host serving extends
+   the same protocol across processes: ``OnlineTrainer.publish()``
+   serializes the current ``VersionedHotCache`` into one self-describing
+   byte artifact (``serialize``/``deserialize`` round-trip, any
+   transport), and every serving replica adopts it with
+   ``VersionedHotCache.apply(engine)``. Adoption keeps all single-process
+   guarantees: the whole (hot_rows, slot_of, version) triple swaps
+   atomically, K is unchanged so no replica recompiles, and the version
+   gate makes delivery *order-free* — ``apply`` absorbs same-or-older
+   artifacts (idempotent re-delivery), while a direct
+   ``RecEngine.update_cache`` call with a lower version raises, so a
+   reordered transport can never roll a replica's hot arena back. Values
+   stay exact for the params the artifact was built from; replicas must
+   therefore swap params and cache as a pair, exactly like step 2's
+   single-process rule (``examples/serve_recommender.py --replicas N``
+   demonstrates the full trainer -> N-replica loop).
+
+Sharding note: all three steps are unchanged by the row-sharded arena —
+the hot cache is a *replicated* copy of top-K rows wherever the cold rows
+live, and the sharded train step returns the same global touched-row ids
+the write-through patch consumes (``make_train_step_ragged(sharded=True)``
+updates each arena shard locally; see ``sparse_optim.shard_local_rows``).
 """
 from repro.training.online import (OnlineCacheConfig, OnlineTrainer,
                                    VersionedHotCache, make_drifting_zipf)

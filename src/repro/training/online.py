@@ -34,9 +34,65 @@ class OnlineCacheConfig:
 
 @dataclass(frozen=True)
 class VersionedHotCache:
-    """A hot cache plus the monotone version of the rebuild that made it."""
+    """A hot cache plus the monotone version of the rebuild that made it.
+
+    Also the fleet *broadcast artifact*: ``serialize`` flattens the pair
+    into one self-describing byte blob the trainer can put on any
+    transport (object store, pub/sub, NFS), ``deserialize`` reconstructs
+    it on a serving host, and ``apply`` adopts it into a ``RecEngine``
+    atomically — the engine either serves its old version or the new one,
+    never a torn mix, and stale (lower-version) artifacts are rejected at
+    the engine boundary, so out-of-order delivery is safe.
+    """
     cache: se.HotRowCache
     version: int
+
+    MAGIC = b"CHC1"          # Centaur hot-cache artifact, format v1
+
+    def serialize(self) -> bytes:
+        """Flatten (cache, version) into a byte blob (npz container)."""
+        import io
+
+        buf = io.BytesIO()
+        np.savez(buf,
+                 magic=np.frombuffer(self.MAGIC, np.uint8),
+                 version=np.asarray(self.version, np.int64),
+                 hot_rows=np.asarray(self.cache.hot_rows),
+                 slot_of=np.asarray(self.cache.slot_of),
+                 hot_ids=np.asarray(self.cache.hot_ids))
+        return buf.getvalue()
+
+    @staticmethod
+    def deserialize(blob: bytes) -> "VersionedHotCache":
+        import io
+
+        try:
+            with np.load(io.BytesIO(blob)) as z:
+                if z["magic"].tobytes() != VersionedHotCache.MAGIC:
+                    raise ValueError("bad magic")
+                cache = se.HotRowCache(
+                    hot_rows=jnp.asarray(z["hot_rows"]),
+                    slot_of=jnp.asarray(z["slot_of"]),
+                    hot_ids=jnp.asarray(z["hot_ids"]))
+                return VersionedHotCache(cache=cache,
+                                         version=int(z["version"]))
+        except Exception as e:
+            raise ValueError(
+                f"not a hot-cache broadcast artifact: {e}") from e
+
+    def apply(self, engine) -> bool:
+        """Adopt this artifact into a RecEngine iff it is strictly newer.
+
+        Returns True when the engine swapped. Same-version re-delivery is
+        a no-op (idempotent broadcast); an older version raises inside
+        ``update_cache`` only on a direct call — here it is absorbed, so
+        replicas can consume a reordered stream without try/except at
+        every site.
+        """
+        if engine.cache_version >= self.version:
+            return False
+        engine.update_cache(self.cache, version=self.version)
+        return True
 
 
 def _patch_hot_rows(cache: se.HotRowCache, arena: jax.Array,
@@ -132,6 +188,15 @@ class OnlineTrainer:
         if self.cache is None:
             return None
         return VersionedHotCache(cache=self.cache, version=self.version)
+
+    def publish(self) -> Optional[bytes]:
+        """Serialize the current snapshot as a fleet broadcast artifact
+        (None before the first rebuild). One blob, N consumers: every
+        serving replica calls ``VersionedHotCache.deserialize(blob)
+        .apply(engine)`` and adopts version k atomically — no recompile
+        (K is unchanged), no per-replica rebuild."""
+        snap = self.snapshot()
+        return None if snap is None else snap.serialize()
 
     def sync_engine(self, engine) -> bool:
         """Publish the trained state into a RecEngine if it is behind;

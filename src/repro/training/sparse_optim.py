@@ -41,8 +41,12 @@ def ragged_row_grads(d_bags: jax.Array, indices: jax.Array,
     grads (N, D) f32 where grads[i] is the summed gradient of row rows[i];
     unused slots are filled with `fill_row` and a zero gradient (static
     shapes, so the consumer stays jittable). Pass the arena null row as
-    `fill_row`: a zero gradient there is a no-op update and the null row's
-    always-zero invariant survives.
+    `fill_row`: its gradient is forced to zero even when indices target it
+    *validly* (dummy bags, pipeline tail streams) — the null row is an
+    engine sentinel whose always-zero invariant every padded lookup and
+    the cache null slot depend on, never a trainable parameter. This is
+    also what keeps the replicated and shard-local updates identical: the
+    sharded path excludes the null row by construction.
 
     Duplicate indices within and across bags are summed (the VJP of a
     gather is a scatter-*add*), which is what makes the later unique-row
@@ -58,7 +62,29 @@ def ragged_row_grads(d_bags: jax.Array, indices: jax.Array,
     rows, inv = jnp.unique(jnp.where(valid, indices, fill_row), size=n,
                            fill_value=fill_row, return_inverse=True)
     grads = jax.ops.segment_sum(per_pos, inv.reshape(-1), num_segments=n)
+    grads = jnp.where(rows[:, None] == fill_row, 0.0, grads)
     return rows.astype(jnp.int32), grads
+
+
+def shard_local_rows(rows: jax.Array, row_grads: jax.Array, *, lo,
+                     vlocal: int, null_row: int
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Project a global (rows, row_grads) update onto one arena row-shard.
+
+    For use inside shard_map: `lo` is the first global row this shard owns,
+    `vlocal` its row count. Rows the shard does not own — and the null row,
+    whose always-zero invariant must survive training — are redirected to
+    local row 0 with a zero gradient: under `sparse_rowwise_adagrad` a zero
+    gradient is an exact no-op (zero accumulator add, zero delta), so the
+    redirect target is never perturbed. Each shard therefore applies
+    exactly the updates of the rows it owns and nothing else; the union
+    over shards is the replicated update.
+    """
+    rel = rows - lo
+    own = (rel >= 0) & (rel < vlocal) & (rows != null_row)
+    local = jnp.where(own, rel, 0).astype(jnp.int32)
+    grads = jnp.where(own[:, None], row_grads, 0.0)
+    return local, grads
 
 
 def sparse_rowwise_adagrad(lr, eps: float = 1e-8) -> SparseOptimizer:

@@ -143,7 +143,8 @@ def test_rec_engine_paths_agree(setup):
     counts = se.trace_row_counts(spec, rb["indices"], rb["offsets"])
 
     probs = {}
-    for path in RecEngine.PATHS:
+    for path in ("fixed", "ragged", "cached"):   # 'sharded' needs a mesh —
+        # covered in test_sharded_sparse.py under fake devices
         engine = RecEngine(cfg, params, path=path, max_l=l, max_batch=8,
                            max_wait_ms=0.0,
                            cache_k=16 if path == "cached" else 0,
@@ -211,6 +212,38 @@ def test_tune_buckets_from_histogram():
     assert tune_buckets([], max_batch=16) == (1, 16)
 
 
+def test_tune_buckets_degenerate_inputs():
+    from repro.serving.rec_engine import tune_buckets
+    # empty histogram: the sane default, whatever n_buckets asks for
+    assert tune_buckets([], max_batch=8, n_buckets=1) == (1, 8)
+    # a single observed size collapses to {size, catch-all} — that size
+    # then pads to itself (zero waste), everything else to max_batch
+    assert tune_buckets([5] * 100, max_batch=32) == (5, 32)
+    # single observed size == max_batch: one bucket, no duplicates
+    assert tune_buckets([16] * 10, max_batch=16) == (16,)
+    # observations above max_batch (replayed traces from a bigger engine)
+    # clip: the batcher never releases more than max_batch, so a larger
+    # bucket would be compiled but never hit
+    buckets = tune_buckets([40] * 50 + [64] * 50, max_batch=32)
+    assert buckets == (32,)
+    assert max(tune_buckets([2, 40, 70], max_batch=32)) == 32
+
+
+def test_rec_engine_retune_with_no_observations(setup):
+    """retune_buckets before any traffic must not crash and must keep the
+    engine serviceable (empty histogram -> default buckets)."""
+    cfg, params, data = setup
+    engine = RecEngine(cfg, params, path="ragged", max_l=6, max_batch=8,
+                       max_wait_ms=0.0)
+    buckets = engine.retune_buckets(warmup=False)
+    assert buckets == (1, 8)
+    reqs = requests_from_ragged_batch(
+        data.ragged_batch(3, dist="poisson", mean_l=3, max_l=6),
+        cfg.n_tables)
+    _run_requests(engine, reqs)
+    assert all(r.prob is not None for r in reqs)
+
+
 def test_rec_engine_retune_preserves_predictions(setup):
     """Auto-retuned buckets change padding only — never predictions."""
     cfg, params, data = setup
@@ -265,3 +298,77 @@ def test_rec_engine_update_cache_swaps_without_staleness(setup):
         new_params, cfg, jnp.asarray(rb["dense"]),
         jnp.asarray(rb["indices"]), jnp.asarray(rb["offsets"]), max_l=6)))
     np.testing.assert_allclose(got, want[:len(got)], rtol=1e-4, atol=1e-5)
+
+
+def test_rec_engine_rejects_stale_cache_version(setup):
+    """Regression: a lower-version swap (reordered broadcast artifact)
+    must be rejected, and the served cache must be left untouched."""
+    cfg, params, data = setup
+    spec = dlrm.arena_spec(cfg)
+    rb = data.ragged_batch(4, dist="poisson", mean_l=3, max_l=6)
+    counts = se.trace_row_counts(spec, rb["indices"], rb["offsets"])
+    engine = RecEngine(cfg, params, path="cached", max_l=6, max_batch=8,
+                       max_wait_ms=0.0, cache_k=16, cache_trace=counts)
+    fresh = se.build_hot_cache(params["arena"], spec, counts, 16)
+    engine.update_cache(fresh, version=5)
+    served = engine.cache
+    stale = se.build_hot_cache(jnp.zeros_like(params["arena"]), spec,
+                               counts, 16)
+    with pytest.raises(ValueError, match="stale"):
+        engine.update_cache(stale, version=3)
+    assert engine.cache is served and engine.cache_version == 5
+    # equal version is allowed: between rebuilds the trainer republishes
+    # the same version with write-through-patched hot values
+    engine.update_cache(fresh, version=5)
+    assert engine.cache_version == 5
+
+
+# ---------------------------------------------------------------------------
+# versioned hot-arena broadcast: trainer -> N replicas
+# ---------------------------------------------------------------------------
+
+def test_versioned_cache_broadcast_roundtrip_and_apply(setup):
+    """serialize -> deserialize is lossless; apply() adopts strictly-newer
+    artifacts only; two replicas fed the same blob serve identically."""
+    from repro.training import VersionedHotCache
+    cfg, params, data = setup
+    spec = dlrm.arena_spec(cfg)
+    rb = data.ragged_batch(6, dist="poisson", mean_l=3, max_l=6)
+    counts = se.trace_row_counts(spec, rb["indices"], rb["offsets"])
+    cache = se.build_hot_cache(params["arena"], spec, counts, 16)
+    art = VersionedHotCache(cache=cache, version=3)
+
+    blob = art.serialize()
+    back = VersionedHotCache.deserialize(blob)
+    assert back.version == 3
+    np.testing.assert_array_equal(np.asarray(back.cache.hot_rows),
+                                  np.asarray(cache.hot_rows))
+    np.testing.assert_array_equal(np.asarray(back.cache.slot_of),
+                                  np.asarray(cache.slot_of))
+    np.testing.assert_array_equal(np.asarray(back.cache.hot_ids),
+                                  np.asarray(cache.hot_ids))
+    with pytest.raises(ValueError, match="artifact"):
+        VersionedHotCache.deserialize(b"not an artifact")
+
+    replicas = [RecEngine(cfg, params, path="cached", max_l=6, max_batch=8,
+                          max_wait_ms=0.0, cache_k=16, cache_trace=counts)
+                for _ in range(2)]
+    for eng in replicas:
+        assert back.apply(eng)                  # 3 > 0: adopted
+        assert eng.cache_version == 3
+        assert not back.apply(eng)              # idempotent re-delivery
+        stale = VersionedHotCache(cache=cache, version=1)
+        assert not stale.apply(eng)             # reordered: absorbed
+        assert eng.cache_version == 3
+
+    probs = []
+    for eng in replicas:
+        reqs = requests_from_ragged_batch(rb, cfg.n_tables)
+        _run_requests(eng, reqs)
+        probs.append(np.asarray([r.prob for r in reqs]))
+    np.testing.assert_array_equal(probs[0], probs[1])
+    want = np.asarray(jax.nn.sigmoid(dlrm.forward_ragged(
+        params, cfg, jnp.asarray(rb["dense"]), jnp.asarray(rb["indices"]),
+        jnp.asarray(rb["offsets"]), max_l=6)))
+    np.testing.assert_allclose(probs[0], want[:len(probs[0])], rtol=1e-4,
+                               atol=1e-5)

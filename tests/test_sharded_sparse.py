@@ -1,0 +1,400 @@
+"""Sharded sparse subsystem, end to end — the multi-device lockdown suite.
+
+Three layers, matching how the subsystem composes:
+
+* **shard-local math, in-process** (hypothesis property tests): the
+  ownership protocol every sharded path shares is exercised by vmapping
+  over the shard axis with a named axis — `axis_index` / `psum` behave
+  exactly as under shard_map, so the masked-gather + segment-reduce +
+  psum composition and the shard-local optimizer projection run on a
+  1-device CPU. Edges forced into every random case: vocab sizes that do
+  NOT divide the shard count (padded-rows edge), empty bags, duplicate
+  indices, and all-null-index bags.
+* **shard_map on a real mesh** (subprocess with 8 fake host devices, the
+  test_distributed.py pattern): `lookup_ragged_cached(mesh=...)`,
+  `RecEngine(path='sharded'|'cached', mesh=...)`, and
+  `make_train_step_ragged(sharded=True)` — the exact production entry
+  points.
+* **exactness acceptance**: sharded-cold cached == replicated cached ==
+  plain `lookup_ragged`; 3 sharded optimizer steps == 3 dense-grad steps
+  within 1e-4.
+
+The same file is what CI's simulated-multi-device job runs under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import sparse_engine as se
+from repro.training import sparse_optim as so
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+SHARD_COUNTS = (1, 2, 4, 8)
+# rows_per_table choices whose total_rows (3*r + 1) never divide 8 — the
+# padded trailing rows are therefore always in play at shards > 1
+UNEVEN_ROWS = (29, 30, 37)
+
+
+def _ragged_case(rng, spec, b, max_l, pad=0):
+    """Random ragged batch with every hard edge forced in: an empty bag, a
+    full-length bag, a duplicated index, an all-null-index bag, and (via
+    `pad`) a padded tail."""
+    n_bags = b * spec.n_tables
+    lens = rng.randint(0, max_l + 1, n_bags).astype(np.int32)
+    lens[0] = 0                      # empty bag
+    lens[-1] = max_l                 # full bag
+    lens[1] = max(lens[1], 1)        # the all-null bag must have positions
+    off = np.zeros(n_bags + 1, np.int32)
+    np.cumsum(lens, out=off[1:])
+    n = int(off[-1])
+    idx = rng.randint(0, spec.rows_per_table, n + pad).astype(np.int32)
+    if n >= 2:
+        idx[off[-2]] = idx[0] if lens[0] else idx[n - 1]   # duplicate
+    # bag 1 belongs to table 1 % n_tables: per-table ids that flatten to
+    # the always-zero null arena row (the pipeline dummy-stream shape)
+    t1 = 1 % spec.n_tables
+    idx[off[1]:off[2]] = spec.null_row - t1 * spec.rows_per_table
+    return jnp.asarray(idx), jnp.asarray(off)
+
+
+def _shard_view(x, shards):
+    assert x.shape[0] % shards == 0, (x.shape, shards)
+    return x.reshape(shards, -1, *x.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# property: sharded-cold cached == replicated cached == plain lookup_ragged
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=12)
+@given(st.sampled_from(SHARD_COUNTS), st.sampled_from(UNEVEN_ROWS),
+       st.integers(0, 2**31 - 1))
+def test_sharded_cold_cached_matches_replicated_and_plain(shards, rpt,
+                                                          seed):
+    rng = np.random.RandomState(seed % (2**32 - 1))
+    spec = se.ArenaSpec(3, rpt, 8)
+    arena = se.init_arena(jax.random.PRNGKey(seed % 997), spec, shards)
+    max_l = 5
+    idx, off = _ragged_case(rng, spec, b=3, max_l=max_l, pad=4)
+    counts = se.trace_row_counts(spec, idx, off)
+    cache = se.build_hot_cache(arena, spec, counts, k=8)
+
+    plain = np.asarray(se.lookup_ragged(arena, spec, idx, off,
+                                        max_l=max_l))
+    repl = np.asarray(se.lookup_ragged_cached(cache, arena, spec, idx,
+                                              off, max_l=max_l))
+    np.testing.assert_allclose(repl, plain, rtol=1e-5, atol=1e-6)
+
+    # the exact shard-local composition shard_map runs: replicated hot
+    # pass + per-shard masked cold reduce, psum-combined
+    hot, cold_idx, n_bags = se.cache_split(cache, spec, idx, off, max_l)
+    colds = jax.vmap(
+        lambda a: se.ragged_partial_reduce(a, cold_idx, off, "x"),
+        axis_name="x")(_shard_view(arena, shards))
+    for s in range(shards):
+        got = np.asarray((hot + colds[s]).reshape(
+            n_bags // spec.n_tables, spec.n_tables,
+            spec.dim).astype(arena.dtype))
+        np.testing.assert_allclose(got, plain, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(got, repl, rtol=1e-5, atol=1e-6)
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.sampled_from(SHARD_COUNTS), st.integers(0, 2**31 - 1))
+def test_sharded_cold_cached_q_matches_replicated(shards, seed):
+    """int8 cold arena: the sharded dequantize-reduce equals the
+    replicated one (bitwise-same math, different partition)."""
+    rng = np.random.RandomState(seed % (2**32 - 1))
+    spec = se.ArenaSpec(3, 30, 8)
+    arena = se.init_arena(jax.random.PRNGKey(seed % 997), spec, shards,
+                          scale=1.0)
+    q, scales = se.quantize_arena(arena)
+    max_l = 4
+    idx, off = _ragged_case(rng, spec, b=2, max_l=max_l, pad=3)
+    counts = se.trace_row_counts(spec, idx, off)
+    cache = se.build_hot_cache(arena, spec, counts, k=8)
+
+    repl = np.asarray(se.lookup_ragged_cached_q(cache, q, scales, spec,
+                                                idx, off, max_l=max_l))
+    hot, cold_idx, n_bags = se.cache_split(cache, spec, idx, off, max_l)
+    colds = jax.vmap(
+        lambda qq, ss: se.ragged_partial_reduce_q(qq, ss, cold_idx, off,
+                                                  "x"),
+        axis_name="x")(_shard_view(q, shards), _shard_view(scales, shards))
+    for s in range(shards):
+        got = np.asarray((hot + colds[s]).reshape(
+            n_bags // spec.n_tables, spec.n_tables, spec.dim))
+        np.testing.assert_allclose(got, repl, rtol=1e-5, atol=1e-6)
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.sampled_from(SHARD_COUNTS), st.sampled_from(UNEVEN_ROWS),
+       st.integers(0, 2**31 - 1))
+def test_lookup_ragged_sharded_uneven_vocab(shards, rpt, seed):
+    """The uncached sharded path over non-dividing vocab sizes — the
+    padded zero rows at the arena tail must stay inert at every shard
+    count."""
+    rng = np.random.RandomState(seed % (2**32 - 1))
+    spec = se.ArenaSpec(3, rpt, 8)
+    arena = se.init_arena(jax.random.PRNGKey(seed % 997), spec, shards)
+    idx, off = _ragged_case(rng, spec, b=2, max_l=4, pad=2)
+    want = np.asarray(se.lookup_ragged(arena, spec, idx, off, max_l=4))
+    outs = jax.vmap(
+        lambda a: se.lookup_ragged_sharded(a, spec, idx, off, "x"),
+        axis_name="x")(_shard_view(arena, shards))
+    for s in range(shards):
+        np.testing.assert_allclose(np.asarray(outs[s]), want, rtol=1e-5,
+                                   atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# property: shard-local row updates == replicated sparse optimizer
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=10)
+@given(st.sampled_from(SHARD_COUNTS), st.integers(1, 3),
+       st.integers(0, 2**31 - 1))
+def test_shard_local_rowwise_update_matches_replicated(shards, steps,
+                                                       seed):
+    """Applying each shard's owned slice of (rows, row_grads) — null row
+    excluded, foreign rows projected to a zero-grad no-op — reassembles
+    to exactly the replicated sparse_rowwise_adagrad result, arena and
+    accumulator both, across multiple accumulating steps."""
+    rng = np.random.RandomState(seed % (2**32 - 1))
+    spec = se.ArenaSpec(2, 13, 4)        # 27 rows: pads at 2/4/8 shards
+    arena = se.init_arena(jax.random.PRNGKey(seed % 997), spec, shards)
+    opt = so.sparse_rowwise_adagrad(0.1)
+    vlocal = arena.shape[0] // shards
+
+    repl = arena
+    repl_state = opt.init(arena)
+    shard_arenas = [arena[s * vlocal:(s + 1) * vlocal]
+                    for s in range(shards)]
+    shard_states = [{"acc": repl_state["acc"][s * vlocal:(s + 1) * vlocal],
+                     "step": repl_state["step"]} for s in range(shards)]
+
+    for _ in range(steps):
+        idx, off = _ragged_case(rng, spec, b=2, max_l=4, pad=2)
+        flat = se.flatten_ragged_indices(spec, idx, off)
+        d_bags = jnp.asarray(rng.randn(off.shape[0] - 1, spec.dim),
+                             jnp.float32)
+        rows, row_g = so.ragged_row_grads(d_bags, flat, off,
+                                          fill_row=spec.null_row)
+        repl, repl_state = opt.update(repl, repl_state, rows, row_g)
+        for s in range(shards):
+            lrows, lg = so.shard_local_rows(rows, row_g, lo=s * vlocal,
+                                            vlocal=vlocal,
+                                            null_row=spec.null_row)
+            shard_arenas[s], shard_states[s] = opt.update(
+                shard_arenas[s], shard_states[s], lrows, lg)
+
+    got = np.concatenate([np.asarray(a) for a in shard_arenas])
+    np.testing.assert_allclose(got, np.asarray(repl), rtol=1e-6,
+                               atol=1e-7)
+    got_acc = np.concatenate([np.asarray(s["acc"]) for s in shard_states])
+    np.testing.assert_allclose(got_acc, np.asarray(repl_state["acc"]),
+                               rtol=1e-6, atol=1e-7)
+    # the null row's always-zero invariant survives sharded training
+    null_shard, null_rel = divmod(spec.null_row, vlocal)
+    assert float(np.abs(np.asarray(
+        shard_arenas[null_shard])[null_rel]).max()) == 0.0
+
+
+def test_shard_local_rows_projection():
+    """Unit anchor for the projection: ownership window, null exclusion,
+    zero-grad redirect."""
+    rows = jnp.asarray([3, 7, 10, 12, 26], jnp.int32)    # 26 = null row
+    g = jnp.ones((5, 2), jnp.float32)
+    lrows, lg = so.shard_local_rows(rows, g, lo=7, vlocal=7, null_row=26)
+    np.testing.assert_array_equal(np.asarray(lrows), [0, 0, 3, 5, 0])
+    np.testing.assert_array_equal(np.asarray(lg[:, 0]), [0, 1, 1, 1, 0])
+    # shard that owns the null row: still excluded
+    lrows, lg = so.shard_local_rows(rows, g, lo=21, vlocal=7, null_row=26)
+    np.testing.assert_array_equal(np.asarray(lrows), [0, 0, 0, 0, 0])
+    assert float(jnp.abs(lg).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# shard_map on a real mesh (subprocess, 8 fake host devices)
+# ---------------------------------------------------------------------------
+
+def run_with_devices(code: str, n: int = 8, timeout: int = 480) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = SRC
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    prelude = textwrap.dedent("""
+        import json, jax, jax.numpy as jnp, numpy as np
+        from repro.configs.dlrm import DLRM_SMOKE
+        from repro.core import dlrm
+        from repro.core import sparse_engine as se
+        from repro.launch.mesh import make_mesh
+    """)
+    out = subprocess.run([sys.executable, "-c", prelude + code],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_cached_lookup_sharded_cold_shard_map():
+    """lookup_ragged_cached(mesh=...) on 2/4/8-way meshes == replicated
+    cached == plain, through the real shard_map entry point."""
+    r = run_with_devices("""
+from repro.data import DLRMSynthetic
+cfg = DLRM_SMOKE
+spec = dlrm.arena_spec(cfg)
+errs = {}
+for shards in (2, 4, 8):
+    mesh = make_mesh((shards,), ("model",))
+    arena = se.init_arena(jax.random.PRNGKey(0), spec, shards)
+    data = DLRMSynthetic(cfg, seed=5)
+    rb = data.ragged_batch(8, mean_l=3, max_l=6)
+    idx, off = jnp.asarray(rb["indices"]), jnp.asarray(rb["offsets"])
+    counts = se.trace_row_counts(spec, rb["indices"], rb["offsets"])
+    cache = se.build_hot_cache(arena, spec, counts, k=64)
+    plain = se.lookup_ragged(arena, spec, idx, off, max_l=6)
+    repl = se.lookup_ragged_cached(cache, arena, spec, idx, off, max_l=6)
+    shrd = se.lookup_ragged_cached(cache, arena, spec, idx, off, max_l=6,
+                                   mesh=mesh)
+    q, scales = se.quantize_arena(arena)
+    q_repl = se.lookup_ragged_cached_q(cache, q, scales, spec, idx, off,
+                                       max_l=6)
+    q_shrd = se.lookup_ragged_cached_q(cache, q, scales, spec, idx, off,
+                                       max_l=6, mesh=mesh)
+    errs[shards] = [float(jnp.abs(shrd - plain).max()),
+                    float(jnp.abs(shrd - repl).max()),
+                    float(jnp.abs(q_shrd - q_repl).max())]
+print(json.dumps({"errs": {str(k): v for k, v in errs.items()}}))
+""")
+    for shards, (vs_plain, vs_repl, vs_q) in r["errs"].items():
+        assert vs_plain < 1e-5, (shards, vs_plain)
+        assert vs_repl < 1e-5, (shards, vs_repl)
+        assert vs_q < 1e-5, (shards, vs_q)
+
+
+def test_rec_engine_sharded_paths_shard_map():
+    """RecEngine path='sharded' and path='cached'+mesh on an 8-way mesh
+    serve the same CTRs as the 1-device ragged engine."""
+    r = run_with_devices("""
+from repro.data import DLRMSynthetic
+from repro.serving import RecEngine, requests_from_ragged_batch
+cfg = DLRM_SMOKE
+spec = dlrm.arena_spec(cfg)
+mesh = make_mesh((8,), ("model",))
+params = dlrm.init(jax.random.PRNGKey(0), cfg, 8)
+data = DLRMSynthetic(cfg, seed=13)
+rb = data.ragged_batch(6, mean_l=3, max_l=6)
+counts = se.trace_row_counts(spec, rb["indices"], rb["offsets"])
+probs = {}
+for name, kw in (
+    ("ragged", dict(path="ragged")),
+    ("sharded", dict(path="sharded", mesh=mesh)),
+    ("cached_sharded", dict(path="cached", mesh=mesh, cache_k=32,
+                            cache_trace=counts)),
+):
+    eng = RecEngine(cfg, params, max_l=6, max_batch=8, max_wait_ms=0.0,
+                    **kw)
+    reqs = requests_from_ragged_batch(rb, cfg.n_tables)
+    for req in reqs:
+        eng.submit(req)
+    eng.step(force=True)
+    eng.drain()
+    probs[name] = [r.prob for r in reqs]
+base = np.asarray(probs["ragged"])
+print(json.dumps({
+    "sharded_err": float(np.abs(np.asarray(probs["sharded"]) - base).max()),
+    "cached_err": float(np.abs(np.asarray(probs["cached_sharded"])
+                               - base).max())}))
+""")
+    assert r["sharded_err"] < 1e-5
+    assert r["cached_err"] < 1e-5
+
+
+def test_sharded_training_matches_dense_grad_3_steps():
+    """make_train_step_ragged(sharded=True) on 2- and 8-way meshes tracks
+    the dense-gradient reference within 1e-4 after 3 optimizer steps —
+    the acceptance sweep (sharded sparse == replicated sparse == dense)."""
+    r = run_with_devices("""
+from repro.data import DLRMSynthetic
+cfg = DLRM_SMOKE
+max_l = 6
+errs = {}
+for shards in (2, 8):
+    mesh = make_mesh((shards,), ("model",))
+    key = jax.random.PRNGKey(1)
+    p_dense = dlrm.init(key, cfg, shards)
+    p_shard = dlrm.init(key, cfg, shards)
+    opt_d, step_d = dlrm.make_train_step_ragged(cfg, max_l=max_l,
+                                                sparse=False)
+    opt_s, step_s = dlrm.make_train_step_ragged(cfg, max_l=max_l,
+                                                mesh=mesh, sharded=True)
+    st_d, st_s = opt_d.init(p_dense), opt_s.init(p_shard)
+    sd, ss = jax.jit(step_d), jax.jit(step_s)
+    data = DLRMSynthetic(cfg, seed=3)
+    losses = []
+    for _ in range(3):
+        b = data.ragged_batch(8, mean_l=3, max_l=max_l,
+                              pad_to=8 * cfg.n_tables * max_l)
+        bd = {k: jnp.asarray(b[k])
+              for k in ("dense", "indices", "offsets", "labels")}
+        p_dense, st_d, l_d, rows_d = sd(p_dense, st_d, bd)
+        p_shard, st_s, l_s, rows_s = ss(p_shard, st_s, bd)
+        losses.append([float(l_d), float(l_s)])
+        assert (np.asarray(rows_d) == np.asarray(rows_s)).all()
+    err = max(float(jnp.abs(a - b).max()) for a, b in
+              zip(jax.tree_util.tree_leaves(p_dense),
+                  jax.tree_util.tree_leaves(p_shard)))
+    errs[shards] = {"param_err": err, "losses": losses}
+print(json.dumps({str(k): v for k, v in errs.items()}))
+""")
+    for shards, res in r.items():
+        assert res["param_err"] < 1e-4, (shards, res)
+        for l_d, l_s in res["losses"]:
+            assert abs(l_d - l_s) < 1e-4, (shards, res["losses"])
+
+
+def test_sharded_training_feeds_live_cache_shard_map():
+    """OnlineTrainer on a 4-way mesh: the sharded sparse step trains, the
+    write-through patch keeps the cached serving path exact against the
+    uncached lookup over the sharded-trained arena."""
+    r = run_with_devices("""
+from repro.data import DLRMSynthetic
+from repro.training import OnlineCacheConfig, OnlineTrainer
+cfg = DLRM_SMOKE
+spec = dlrm.arena_spec(cfg)
+mesh = make_mesh((4,), ("model",))
+max_l = 6
+params = dlrm.init(jax.random.PRNGKey(0), cfg, 4)
+trainer = OnlineTrainer(cfg, params, max_l=max_l, mesh=mesh,
+                        cache_cfg=OnlineCacheConfig(k=64, refresh_every=4))
+data = DLRMSynthetic(cfg, seed=17)
+for _ in range(6):
+    b = data.ragged_batch(8, mean_l=3, max_l=max_l,
+                          pad_to=8 * cfg.n_tables * max_l)
+    trainer.train_step(b)
+rb = data.ragged_batch(4, mean_l=3, max_l=max_l)
+idx, off = jnp.asarray(rb["indices"]), jnp.asarray(rb["offsets"])
+plain = se.lookup_ragged(trainer.params["arena"], spec, idx, off,
+                         max_l=max_l)
+cached = se.lookup_ragged_cached(trainer.cache, trainer.params["arena"],
+                                 spec, idx, off, max_l=max_l, mesh=mesh)
+print(json.dumps({"err": float(jnp.abs(cached - plain).max()),
+                  "version": trainer.version,
+                  "loss0": trainer.losses[0],
+                  "lossN": trainer.losses[-1]}))
+""")
+    assert r["err"] < 1e-5
+    assert r["version"] >= 1
