@@ -24,10 +24,13 @@ import numpy as np
 
 from benchmarks.common import (csv_row, parse_csv_rows, scaled_configs,
                                time_fn, time_percentiles)
+from repro import compat
 from repro.configs.dlrm import DLRM_CONFIGS
 from repro.core import dlrm, hybrid
+from repro.core import embedding_source as es
 from repro.core import sparse_engine as se
 from repro.data import DLRMSynthetic
+from repro.kernels import ops
 
 E_FLOP_PJ = 1.0          # pJ per flop (CPU-class, order-of-magnitude)
 E_BYTE_PJ = 30.0         # pJ per DRAM byte
@@ -119,7 +122,7 @@ def bench_fig7_13(batches=(1, 8, 32, 128)) -> List[str]:
 
     @jax.jit
     def centaur(arena, idx):                # fused sparse engine
-        return se.lookup(arena, spec, idx)
+        return es.lookup_fixed(es.FpArena(arena), spec, idx)
 
     for bsz in batches:
         _, batch = _setup(cfg, bsz)
@@ -196,15 +199,15 @@ def bench_fig15(batch_size: int = 32) -> List[str]:
 # ---------------------------------------------------------------------------
 
 def bench_quantized_arena(batch_size: int = 32) -> List[str]:
-    from repro.core import sparse_engine as se
     rows = []
     cfg = scaled_configs()["dlrm4"]
     spec = dlrm.arena_spec(cfg)
     params, batch = _setup(cfg, batch_size)
     q, scales = se.quantize_arena(params["arena"])
 
-    fp = jax.jit(lambda a, i: se.lookup(a, spec, i))
-    qt = jax.jit(lambda qq, ss, i: se.lookup_quantized(qq, ss, spec, i))
+    fp = jax.jit(lambda a, i: es.lookup_fixed(es.FpArena(a), spec, i))
+    qt = jax.jit(lambda qq, ss, i: es.lookup_fixed(
+        es.QuantizedArena(qq, ss), spec, i))
     t_fp = time_fn(fp, params["arena"], batch["indices"])
     t_q = time_fn(qt, q, scales, batch["indices"])
     exact = fp(params["arena"], batch["indices"])
@@ -247,11 +250,11 @@ def bench_ragged_paths(batch_size: int = 32, cache_k: int = 2048
     counts = se.trace_row_counts(spec, rb["indices"], rb["offsets"])
     cache = se.build_hot_cache(params["arena"], spec, counts, cache_k)
 
-    fixed = jax.jit(lambda a, i: se.lookup(a, spec, i))
-    ragged = jax.jit(lambda a, i, o: se.lookup_ragged(a, spec, i, o,
-                                                      max_l=max_l))
-    cached = jax.jit(lambda c, a, i, o: se.lookup_ragged_cached(
-        c, a, spec, i, o, max_l=max_l))
+    fixed = jax.jit(lambda a, i: es.lookup_fixed(es.FpArena(a), spec, i))
+    ragged = jax.jit(lambda a, i, o: es.lookup_bags(
+        es.FpArena(a), spec, i, o, max_l=max_l))
+    cached = jax.jit(lambda c, a, i, o: es.lookup_bags(
+        es.CachedSource(c, es.FpArena(a)), spec, i, o, max_l=max_l))
 
     t_f = time_fn(fixed, params["arena"], idx_fixed)
     t_r = time_fn(ragged, params["arena"], idx_r, off_r)
@@ -332,7 +335,8 @@ def bench_sharded_cached(batch_size: int = 32, cache_k: int = 2048,
     hot arena replicates on every chip, cold rows stay shard-resident).
 
     On a multi-device host the sharded timing goes through the real
-    shard_map entry point of ``lookup_ragged_cached``; on one device the
+    shard_map entry point (``CachedSource`` over a ``ShardedArena`` cold
+    pass); on one device the
     shard axis is vmap-emulated (``emulated=yes``), which runs the shards
     *serially* — an upper bound on the arithmetic cost, with zero
     inter-chip traffic modeled. Both paths are exactness-checked against
@@ -355,13 +359,14 @@ def bench_sharded_cached(batch_size: int = 32, cache_k: int = 2048,
     cache = se.build_hot_cache(arena, spec, counts, cache_k)
     n_bags = off.shape[0] - 1
 
-    repl = jax.jit(lambda c, a, i, o: se.lookup_ragged_cached(
-        c, a, spec, i, o, max_l=max_l))
+    repl = jax.jit(lambda c, a, i, o: es.lookup_bags(
+        es.CachedSource(c, es.FpArena(a)), spec, i, o, max_l=max_l))
     if real_mesh:
         from repro.launch.mesh import make_mesh
         mesh = make_mesh((shards,), ("model",))
-        shrd = jax.jit(lambda c, a, i, o: se.lookup_ragged_cached(
-            c, a, spec, i, o, max_l=max_l, mesh=mesh))
+        shrd = jax.jit(lambda c, a, i, o: es.lookup_bags(
+            es.CachedSource(c, es.ShardedArena(es.FpArena(a), mesh)),
+            spec, i, o, max_l=max_l))
     else:
         def shrd(c, a, i, o):
             hot, cold_idx, _ = se.cache_split(c, spec, i, o, max_l)
@@ -373,7 +378,8 @@ def bench_sharded_cached(batch_size: int = 32, cache_k: int = 2048,
                 spec.dim).astype(a.dtype)
         shrd = jax.jit(shrd)
 
-    plain = np.asarray(se.lookup_ragged(arena, spec, idx, off, max_l=max_l))
+    plain = np.asarray(es.lookup_bags(es.FpArena(arena), spec, idx, off,
+                                      max_l=max_l))
     agree = (np.allclose(np.asarray(repl(cache, arena, idx, off)), plain,
                          atol=1e-4)
              and np.allclose(np.asarray(shrd(cache, arena, idx, off)),
@@ -392,6 +398,119 @@ def bench_sharded_cached(batch_size: int = 32, cache_k: int = 2048,
         f"p95_us={p_s['p95_us']:.1f};vs_replicated="
         f"{p_r['p50_us'] / p_s['p50_us']:.2f}x;emulated={emul};"
         f"agree={'yes' if agree else 'NO'}"))
+    return rows
+
+
+def bench_source_dispatch(batch_size: int = 32, cache_k: int = 2048
+                          ) -> List[str]:
+    """The unified `lookup_bags` entry point vs the direct composition it
+    replaced (PR-3's hand-specialized bodies), per source: fp, cached,
+    cached+int8 cold, and — on a multi-device host — sharded cold.
+
+    Sources are plain pytrees and the dispatch is Python-time (resolved
+    during tracing), so the jitted computation must be identical; the
+    emitted `overhead` ratio proves dispatch costs nothing measurable.
+    Every pair is also exactness-checked against the fp reference.
+    """
+    rows = []
+    cfg = scaled_configs()["dlrm4"]
+    spec = dlrm.arena_spec(cfg)
+    params = dlrm.init(jax.random.PRNGKey(0), cfg)
+    arena = params["arena"]
+    data = DLRMSynthetic(cfg, seed=11)
+    max_l = 2 * cfg.lookups_per_table
+    rb = data.ragged_batch(batch_size, dist="poisson",
+                           mean_l=cfg.lookups_per_table, max_l=max_l)
+    idx, off = jnp.asarray(rb["indices"]), jnp.asarray(rb["offsets"])
+    counts = se.trace_row_counts(spec, rb["indices"], rb["offsets"])
+    cache = se.build_hot_cache(arena, spec, counts, cache_k)
+    q, scales = se.quantize_arena(arena)
+    n_bags = off.shape[0] - 1
+    b, t, d = n_bags // spec.n_tables, spec.n_tables, spec.dim
+
+    # --- the direct (pre-API) compositions, kernel calls spelled out ----
+    def direct_fp(a, i, o):
+        flat = se.flatten_ragged_indices(spec, i, o)
+        return ops.sparse_lengths_sum(a, flat, o,
+                                      max_l=max_l).reshape(b, t, d)
+
+    def direct_cached(c, a, i, o):
+        hot, cold_idx, _ = se.cache_split(c, spec, i, o, max_l)
+        cold = ops.sparse_lengths_sum(a, cold_idx, o,
+                                      max_l=max_l).astype(jnp.float32)
+        return (hot + cold).reshape(b, t, d).astype(a.dtype)
+
+    def direct_cached_q(c, qq, ss, i, o):
+        hot, cold_idx, _ = se.cache_split(c, spec, i, o, max_l)
+        seg = se.ragged_segment_ids(o, cold_idx.shape[0])
+        dq = jnp.take(qq, cold_idx, axis=0).astype(jnp.float32) \
+            * jnp.take(ss, cold_idx, axis=0)
+        cold = jax.ops.segment_sum(dq, seg, num_segments=n_bags)
+        return (hot + cold).reshape(b, t, d)
+
+    ref_fp = np.asarray(direct_fp(arena, idx, off))
+    q_bound = max_l * float(np.asarray(scales).max()) + 1e-6
+    scenarios = [
+        ("fp",
+         jax.jit(lambda a, i, o: es.lookup_bags(es.FpArena(a), spec, i, o,
+                                                max_l=max_l)),
+         jax.jit(direct_fp), (arena, idx, off), ref_fp, 1e-4),
+        ("cached",
+         jax.jit(lambda c, a, i, o: es.lookup_bags(
+             es.CachedSource(c, es.FpArena(a)), spec, i, o, max_l=max_l)),
+         jax.jit(direct_cached), (cache, arena, idx, off), ref_fp, 1e-4),
+        ("cached_int8",
+         jax.jit(lambda c, qq, ss, i, o: es.lookup_bags(
+             es.CachedSource(c, es.QuantizedArena(qq, ss)), spec, i, o,
+             max_l=max_l)),
+         jax.jit(direct_cached_q), (cache, q, scales, idx, off),
+         ref_fp, q_bound),
+    ]
+    if len(jax.devices()) >= 2:
+        from repro.launch.mesh import make_mesh
+        shards = min(4, len(jax.devices()))
+        mesh = make_mesh((shards,), ("model",))
+        sh_params = dlrm.init(jax.random.PRNGKey(0), cfg, shards)
+        sh_cache = se.build_hot_cache(sh_params["arena"], spec, counts,
+                                      cache_k)
+
+        def direct_sharded(c, a, i, o):
+            from jax.sharding import PartitionSpec as P
+            hot, cold_idx, _ = se.cache_split(c, spec, i, o, max_l)
+            fn = compat.shard_map(
+                lambda aa, f, oo: se.ragged_partial_reduce(aa, f, oo,
+                                                           "model"),
+                mesh=mesh, in_specs=(P("model", None), P(None), P(None)),
+                out_specs=P(None, None))
+            cold = fn(a, cold_idx, o).astype(a.dtype).astype(jnp.float32)
+            return (hot + cold).reshape(b, t, d).astype(a.dtype)
+
+        # the sharded scenario's own arena is shard-padded (different
+        # shapes AND values than `arena`), so its exactness reference is
+        # the replicated fp lookup over that same arena
+        ref_sh = np.asarray(es.lookup_bags(
+            es.FpArena(sh_params["arena"]), spec, idx, off, max_l=max_l))
+        scenarios.append((
+            f"sharded{shards}_cached",
+            jax.jit(lambda c, a, i, o: es.lookup_bags(
+                es.CachedSource(c, es.ShardedArena(es.FpArena(a), mesh)),
+                spec, i, o, max_l=max_l)),
+            jax.jit(direct_sharded),
+            (sh_cache, sh_params["arena"], idx, off), ref_sh, 1e-4))
+
+    for name, unified, direct, args, ref, tol in scenarios:
+        got_u = np.asarray(unified(*args))
+        got_d = np.asarray(direct(*args))
+        agree = (np.array_equal(got_u, got_d)
+                 and float(np.abs(got_u - ref).max()) <= tol)
+        p_u = time_percentiles(unified, *args)
+        p_d = time_percentiles(direct, *args)
+        rows.append(csv_row(
+            f"source_dispatch_{name}_b{batch_size}", p_u["p50_us"],
+            f"p95_us={p_u['p95_us']:.1f};"
+            f"direct_us={p_d['p50_us']:.1f};"
+            f"overhead={p_u['p50_us'] / p_d['p50_us']:.2f}x;"
+            f"agree={'yes' if agree else 'NO'}"))
     return rows
 
 
@@ -423,6 +542,7 @@ def run_all() -> List[str]:
     rows += bench_ragged_paths()
     rows += bench_sparse_optimizer()
     rows += bench_sharded_cached()
+    rows += bench_source_dispatch()
     return rows
 
 

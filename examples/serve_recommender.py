@@ -51,12 +51,13 @@ def serve_once(args) -> None:
         cache_trace = se.trace_row_counts(dlrm.arena_spec(cfg),
                                           warm["indices"], warm["offsets"])
 
-    engine = RecEngine(cfg, params, path=args.path, max_l=max_l,
+    cached = args.path == "cached"
+    engine = RecEngine(cfg, params, source=args.path, max_l=max_l,
                        max_batch=args.max_batch,
                        max_wait_ms=args.max_wait_ms,
-                       cache_k=args.cache_k if args.path == "cached" else 0,
+                       cache_k=args.cache_k if cached else 0,
                        cache_trace=cache_trace,
-                       quantize_cold=args.quantize_cold)
+                       quantize_cold=args.quantize_cold and cached)
 
     # Compile every bucket shape off the clock.
     engine.warmup()
@@ -83,7 +84,7 @@ def serve_once(args) -> None:
     print(f"throughput: {s['n'] / wall:.0f} req/s")
     print(f"SLA ({args.sla_ms:.0f} ms): "
           f"{100.0 * (arr <= args.sla_ms).mean():.1f}% of requests in budget")
-    if "cache_hit_rate" in s:
+    if s.get("cache_hit_rate") is not None:   # None on non-cached sources
         print(f"hot-row cache: K={args.cache_k}, "
               f"hit rate {100.0 * s['cache_hit_rate']:.1f}%")
 
@@ -110,7 +111,7 @@ def serve_broadcast_fleet(args) -> None:
     data = DLRMSynthetic(cfg, seed=23)
     replicas = []
     for i in range(args.replicas):
-        eng = RecEngine(cfg, trainer.params, path="cached", max_l=max_l,
+        eng = RecEngine(cfg, trainer.params, source="cached", max_l=max_l,
                         max_batch=8, max_wait_ms=0.0, cache_k=k,
                         cache_trace=trainer.hist)
         blob = trainer.publish()
@@ -154,9 +155,37 @@ def serve_broadcast_fleet(args) -> None:
     # out-of-order redelivery of an old artifact must be absorbed
     stale = VersionedHotCache(cache=replicas[0].cache, version=0)
     assert not stale.apply(replicas[0])
-    hit = replicas[0].stats().get("cache_hit_rate", 0.0)
+    hit = replicas[0].stats().get("cache_hit_rate") or 0.0
     print(f"stale artifact (v0) rejected; replica hit rate "
           f"{100.0 * hit:.1f}%")
+
+    # full-source broadcast (VersionedSource): unlike the hot-only
+    # artifact, this blob carries EVERY sparse-stage parameter (hot rows
+    # + the whole cold arena), so a remote replica needs no by-reference
+    # param sharing for the embedding stage — the arena-broadcast item.
+    from repro.training import VersionedSource
+    full_blob = trainer.publish_source()
+    art = VersionedSource.deserialize(full_blob)
+    fresh = RecEngine(cfg, dlrm.init(jax.random.PRNGKey(99), cfg),
+                      source="cached", max_l=max_l, max_batch=8,
+                      max_wait_ms=0.0, cache_k=k, cache_trace=trainer.hist)
+    fresh.params = dict(fresh.params, **{
+        kk: vv for kk, vv in trainer.params.items() if kk != "arena"})
+    assert art.apply(fresh)
+    rb = data.ragged_batch(4, mean_l=3, max_l=max_l)
+    reqs = requests_from_ragged_batch(rb, cfg.n_tables)
+    for r in reqs:
+        fresh.submit(r)
+    fresh.step(force=True)
+    want = np.asarray(jax.nn.sigmoid(dlrm.forward_ragged(
+        trainer.params, cfg, jnp.asarray(rb["dense"]),
+        jnp.asarray(rb["indices"]), jnp.asarray(rb["offsets"]),
+        max_l=max_l)))
+    err = float(np.abs(np.asarray([r.prob for r in reqs]) - want).max())
+    print(f"full-source artifact ({len(full_blob) / 1e3:.0f} kB, "
+          f"v{art.version}) adopted by a cold replica: "
+          f"max |prob - live| = {err:.2e}")
+    assert err < 1e-4
 
 
 def main() -> None:

@@ -58,7 +58,7 @@ def train_ragged_online():
     gen = make_drifting_zipf(cfg, batch_size=args.batch_size, mean_l=mean_l,
                              max_l=max_l, drift_per_batch=2, alpha=1.2,
                              seed=0)
-    engine = RecEngine(cfg, trainer.params, path="cached", max_l=max_l,
+    engine = RecEngine(cfg, trainer.params, source="cached", max_l=max_l,
                        cache_k=args.cache_k,
                        cache_trace=np.ones(trainer.spec.total_rows))
     offline_cache = None          # frozen at the first rebuild

@@ -1,4 +1,9 @@
 # The paper's primary contribution: the hybrid sparse-dense engine.
-from repro.core import dense_engine, dlrm, hybrid, sparse_engine
+# `embedding_source` is the unified sparse-path API (one lookup entry
+# point over pytree-swappable sources); `sparse_engine` keeps the arena
+# layout, shard-local protocol, and hot-cache structures underneath it.
+from repro.core import (dense_engine, dlrm, embedding_source, hybrid,
+                        sparse_engine)
 
-__all__ = ["dense_engine", "dlrm", "hybrid", "sparse_engine"]
+__all__ = ["dense_engine", "dlrm", "embedding_source", "hybrid",
+           "sparse_engine"]

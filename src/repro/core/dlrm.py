@@ -9,6 +9,7 @@ and AdamW on the MLPs, matching production DLRM practice.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, Optional
 
 import jax
@@ -17,8 +18,8 @@ import jax.numpy as jnp
 from repro import compat
 from repro.configs.base import DLRMConfig
 from repro.core import dense_engine as de
+from repro.core import embedding_source as es
 from repro.core import sparse_engine as se
-from repro.kernels import ops
 from repro.optim import Optimizer, adamw, partitioned, rowwise_adagrad
 
 
@@ -54,23 +55,56 @@ def head_logits(mlp_params: Dict, dense: jax.Array,
     return de.mlp_apply(mlp_params["top"], x)[:, 0]
 
 
+def _legacy_source(params: Dict, mesh, cache, quantized,
+                   axis: str = "model") -> es.EmbeddingSource:
+    """Map the deprecated (mesh, cache, quantized) kwarg soup onto an
+    EmbeddingSource (cache/quantized warn; mesh alone is the default
+    sharded construction, not deprecated)."""
+    if cache is not None or quantized is not None:
+        warnings.warn(
+            "dlrm forward kwargs cache=/quantized= are deprecated; pass "
+            "source=<EmbeddingSource> instead (see the README migration "
+            "table)", DeprecationWarning, stacklevel=3)
+    return _compose_legacy(params, mesh, cache, quantized, axis)
+
+
+def _compose_legacy(params: Dict, mesh, cache, quantized,
+                    axis: str = "model") -> es.EmbeddingSource:
+    # legacy contract: quantized only ever applied to the CACHED cold
+    # pass; without a cache it was ignored (fp arena served)
+    if cache is not None and quantized is not None:
+        cold: es.EmbeddingSource = es.QuantizedArena(q=quantized[0],
+                                                     scales=quantized[1])
+        if se.mesh_shards(mesh, axis) > 1:
+            cold = es.ShardedArena(cold, mesh, axis)
+    else:
+        cold = es.resolve_source(params["arena"], mesh, axis)
+    return cold if cache is None else es.CachedSource(hot=cache, cold=cold)
+
+
 def forward(params: Dict, cfg: DLRMConfig, dense: jax.Array,
             indices: jax.Array,
-            mesh: Optional[jax.sharding.Mesh] = None) -> jax.Array:
+            mesh: Optional[jax.sharding.Mesh] = None, *,
+            source: Optional[es.EmbeddingSource] = None) -> jax.Array:
     """dense: (B, dense_features); indices: (B, T, L) -> logits (B,).
 
+    The sparse stage is ``embedding_source.lookup_fixed`` over `source`
+    (default: the fp arena in `params`, row-sharded when a mesh is given).
     The graph is deliberately structured so the sparse stage (gather+psum)
     and the bottom-MLP GEMMs have no data dependence: on TPU the async
     collective combine of embedding shards overlaps the dense compute —
     the Centaur sparse/dense concurrency, expressed at the XLA level.
     """
     spec = arena_spec(cfg)
-    emb = se.lookup_auto(params["arena"], spec, indices, mesh)  # sparse stage
-    return head_logits(params, dense, emb)                      # dense stage
+    if source is None:
+        source = es.resolve_source(params["arena"], mesh)
+    emb = es.lookup_fixed(source, spec, indices)      # sparse stage
+    return head_logits(params, dense, emb)            # dense stage
 
 
 def forward_ragged(params: Dict, cfg: DLRMConfig, dense: jax.Array,
                    indices: jax.Array, offsets: jax.Array, *, max_l: int,
+                   source: Optional[es.EmbeddingSource] = None,
                    mesh: Optional[jax.sharding.Mesh] = None,
                    cache: Optional[se.HotRowCache] = None,
                    quantized=None) -> jax.Array:
@@ -80,27 +114,23 @@ def forward_ragged(params: Dict, cfg: DLRMConfig, dense: jax.Array,
     possibly padded; offsets: (B*T+1,) ragged bag boundaries in (sample,
     table) row-major order; max_l: static per-bag length bound.
 
-    Embedding source selection (serving-time path selection, MP-Rec-style):
-      * cache=None, quantized=None — sharded/replicated fp arena;
-      * cache set                  — hot-row cache + fp cold arena (exact);
-      * cache + quantized=(q, s)   — hot rows fp, cold rows int8.
-
-    Every source honors `mesh`: with one, the cold/uncached arena is
-    row-sharded over the 'model' axis inside shard_map (the hot arena
-    stays replicated) — the same bags, bit-for-bit decomposition, at
-    pod scale.
+    The embedding stage is ``embedding_source.lookup_bags`` over `source`
+    — ANY composition (fp / int8 / sharded / hot-cached) through the one
+    entry point; serving-time path selection (MP-Rec-style) is the choice
+    of source *value*, not of function. source=None defaults to the fp
+    arena in `params`, row-sharded over the mesh's 'model' axis when a
+    mesh is given. The legacy cache=/quantized= kwargs are deprecated
+    shims onto the equivalent CachedSource/QuantizedArena.
     """
     spec = arena_spec(cfg)
-    if cache is not None and quantized is not None:
-        emb = se.lookup_ragged_cached_q(cache, quantized[0], quantized[1],
-                                        spec, indices, offsets, max_l=max_l,
-                                        mesh=mesh)
-    elif cache is not None:
-        emb = se.lookup_ragged_cached(cache, params["arena"], spec, indices,
-                                      offsets, max_l=max_l, mesh=mesh)
-    else:
-        emb = se.lookup_ragged_auto(params["arena"], spec, indices, offsets,
-                                    max_l=max_l, mesh=mesh)
+    if source is None:
+        source = _legacy_source(params, mesh, cache, quantized)
+    elif cache is not None or quantized is not None:
+        raise ValueError(
+            "forward_ragged got BOTH source= and the deprecated cache=/"
+            "quantized= kwargs — the legacy kwargs would be silently "
+            "ignored; compose them into the source instead")
+    emb = es.lookup_bags(source, spec, indices, offsets, max_l=max_l)
     return head_logits(params, dense, emb)
 
 
@@ -182,7 +212,7 @@ def make_train_step_ragged(cfg: DLRMConfig, *, max_l: int, lr: float = 1e-3,
         if not sparse:
             raise ValueError("sharded=True is the sparse-optimizer path; "
                              "the dense-grad baseline threads the mesh "
-                             "through lookup_ragged_auto instead")
+                             "through the default sharded source instead")
         if mesh is None or axis not in mesh.axis_names:
             raise ValueError(f"sharded=True needs a mesh with axis "
                              f"{axis!r}")
@@ -219,16 +249,14 @@ def make_train_step_ragged(cfg: DLRMConfig, *, max_l: int, lr: float = 1e-3,
                                      if k != "arena"})}
 
     def step(params, opt_state, batch):
-        flat = se.flatten_ragged_indices(spec, batch["indices"],
-                                         batch["offsets"])
         n_bags = batch["offsets"].shape[0] - 1
-        b = n_bags // spec.n_tables
-        # Forward the sparse stage once; its VJP w.r.t. the arena is a pure
-        # scatter of the bag gradients, which the row-wise path applies
-        # directly — the arena never enters autodiff.
-        emb = ops.sparse_lengths_sum(
-            jax.lax.stop_gradient(params["arena"]), flat, batch["offsets"],
-            max_l=max_l).reshape(b, spec.n_tables, spec.dim)
+        # Forward the sparse stage once through the unified entry point;
+        # its VJP w.r.t. the arena is a pure scatter of the bag gradients,
+        # which the row-wise path applies directly — the arena never
+        # enters autodiff (stop_gradient), so the update stays O(N).
+        emb = es.lookup_bags(
+            es.FpArena(jax.lax.stop_gradient(params["arena"])), spec,
+            batch["indices"], batch["offsets"], max_l=max_l)
 
         def head(mlp_params, emb):
             return _bce(head_logits(mlp_params, batch["dense"], emb),
@@ -239,8 +267,8 @@ def make_train_step_ragged(cfg: DLRMConfig, *, max_l: int, lr: float = 1e-3,
             mlp_params, emb)
 
         d_bags = d_emb.reshape(n_bags, spec.dim)
-        rows, row_g = so.ragged_row_grads(d_bags, flat, batch["offsets"],
-                                          fill_row=spec.null_row)
+        rows, row_g = so.source_row_grads(spec, d_bags, batch["indices"],
+                                          batch["offsets"])
         new_arena, arena_state = arena_opt.update(
             params["arena"], opt_state["arena"], rows, row_g)
         new_mlp, mlp_state = mlp_opt.update(d_mlp, opt_state["mlp"],
@@ -347,17 +375,38 @@ def make_ragged_serve_step(cfg: DLRMConfig, *, max_l: int,
                            quantized=None):
     """Serve step over ragged batches ({dense, indices, offsets} -> CTR).
 
-    The hot cache may be fixed at build time (`cache=`) or passed per call
-    as a pytree argument — the latter is how the serving engine swaps in a
-    freshly rebuilt cache version without recompiling (shapes are identical
-    as long as K is unchanged).
-    """
-    default_cache = cache
+    The embedding source is a call-time pytree argument — that is how the
+    serving engine swaps in a new version of ANY source component (hot
+    cache, quantized cold arena, the full fp arena) without recompiling:
+    same treedef + same leaf shapes = same compiled executable. With
+    source=None the fp arena in `params` serves (mesh-sharded when given).
 
-    def serve_step(params, batch, cache=None):
-        c = cache if cache is not None else default_cache
+    Back-compat shims (both warn): the legacy build-time cache=/quantized=
+    kwargs, and a bare HotRowCache passed as the per-call third argument
+    (the pre-API calling convention) — each is composed into the
+    equivalent CachedSource.
+    """
+    if cache is not None or quantized is not None:
+        warnings.warn(
+            "make_ragged_serve_step kwargs cache=/quantized= are "
+            "deprecated; pass source=<EmbeddingSource> per call instead",
+            DeprecationWarning, stacklevel=2)
+    default_cache, default_q = cache, quantized
+
+    def serve_step(params, batch, source=None):
+        if source is None and default_cache is not None:
+            source = _legacy_source(params, mesh, default_cache,
+                                    default_q)
+        elif isinstance(source, se.HotRowCache):
+            warnings.warn(
+                "passing a bare HotRowCache to the serve step is "
+                "deprecated; pass a CachedSource (or any "
+                "EmbeddingSource) instead", DeprecationWarning,
+                stacklevel=2)
+            # honor the build-time quantized= arena exactly like the
+            # legacy cached_q path did for per-call cache swaps
+            source = _compose_legacy(params, mesh, source, default_q)
         return jax.nn.sigmoid(forward_ragged(
             params, cfg, batch["dense"], batch["indices"],
-            batch["offsets"], max_l=max_l, mesh=mesh, cache=c,
-            quantized=quantized))
+            batch["offsets"], max_l=max_l, mesh=mesh, source=source))
     return serve_step

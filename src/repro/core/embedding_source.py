@@ -1,0 +1,617 @@
+"""First-class embedding sources: one lookup entry point, swappable backends.
+
+Centaur's core idea is ONE sparse stage with interchangeable
+implementations (sparse chiplet vs CPU gather); MP-Rec generalizes that to
+runtime selection among embedding-representation paths. This module is
+that idea as an API: every way of materializing a reduced embedding bag is
+an ``EmbeddingSource`` — a small pytree-registered dataclass — and every
+consumer calls exactly one of two entry points:
+
+* ``lookup_bags(source, spec, indices, offsets, *, max_l)`` — the ragged
+  production path (paper Fig. 2 SparseLengthsSum), (N,) flat per-table
+  ids + (B*T+1,) offsets -> (B, T, D);
+* ``lookup_fixed(source, spec, indices)`` — the legacy fixed-L path,
+  (B, T, L) -> (B, T, D).
+
+Source taxonomy (composition, not configuration)::
+
+    FpArena(arena)                      full-precision row arena
+    QuantizedArena(q, scales)           int8 rows + per-row f32 scale
+    ShardedArena(inner, mesh, axis)     row-shard any leaf source's arrays
+                                        over a mesh axis (shard_map; one
+                                        psum of reduced D-vectors)
+    CachedSource(hot, cold)             replicated top-K hot rows + ANY
+                                        cold source for the tail
+
+Composition laws are preserved bit-for-bit vs the pre-API engine:
+
+* hot + cold exactness — ``CachedSource`` reduces cache slots (misses hit
+  the zero null slot) and redirects hits to the arena null row before the
+  cold pass, so hot_pass + cold_pass == uncached lookup exactly;
+* sharded == replicated — ``ShardedArena`` gathers foreign rows as local
+  row 0 zero-masked, reduces shard-local partial bags, psums once, and
+  rounds the result through the inner source's dtype exactly like the
+  replicated kernel does;
+* int8 masking — the quantized null row carries a zero scale, so every
+  redirect stays inert without masks.
+
+Because sources are pytrees, the *whole source* is a call-time jit
+argument: swapping a hot cache, a quantized cold arena, or the full fp
+arena on a live engine hits the same compiled executable (same treedef,
+same leaf shapes). ``VersionedSource`` wraps any source plus a monotone
+version into a self-describing broadcast artifact — the generalization of
+the hot-arena artifact to full param publication.
+
+Adding the next source (quantized-hot, two-level cache, per-table arenas)
+is one new dataclass implementing ``reduce_flat`` — not six new
+functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+from dataclasses import dataclass
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compat
+from repro.core import sparse_engine as se
+from repro.kernels import ops
+
+__all__ = [
+    "CachedSource", "EmbeddingSource", "FpArena", "QuantizedArena",
+    "ShardedArena", "SourceSpec", "VersionedSource", "describe_source",
+    "hot_cache_of", "lookup_bags", "lookup_fixed", "rebind_arena",
+    "register_source", "resolve_source", "with_hot_cache",
+]
+
+# name -> (cls, data_fields, meta_fields): drives pytree registration,
+# artifact (de)serialization, and the API-surface snapshot.
+_SOURCE_REGISTRY = {}
+
+
+def register_source(data_fields: Tuple[str, ...],
+                    meta_fields: Tuple[str, ...] = ()):
+    """Class decorator: pytree-register a source dataclass and add it to
+    the artifact registry. THE extension point — a new source is one
+    decorated dataclass implementing ``reduce_flat`` (and optionally the
+    fixed / shard-local hooks), nothing else."""
+    def deco(cls):
+        jax.tree_util.register_dataclass(
+            cls, data_fields=list(data_fields),
+            meta_fields=list(meta_fields))
+        _SOURCE_REGISTRY[cls.__name__] = (cls, tuple(data_fields),
+                                          tuple(meta_fields))
+        return cls
+    return deco
+
+
+# HotRowCache predates this module but is a serializable component of
+# CachedSource artifacts; register it for encode/decode only (it is
+# already a pytree).
+_SOURCE_REGISTRY["HotRowCache"] = (
+    se.HotRowCache, ("hot_rows", "slot_of", "hot_ids"), ())
+
+
+class EmbeddingSource:
+    """Base protocol for embedding sources.
+
+    Subclasses implement ``reduce_flat`` (ragged reduction over
+    pre-flattened arena row ids -> f32 partial bags) and ``out_dtype``;
+    the fixed-L path falls back to a uniform-offset ragged reduction
+    unless a subclass provides a specialized ``reduce_fixed``. The
+    shard-local hooks (``shard_reduce_flat`` / ``shard_reduce_fixed``)
+    are only required of sources that can sit inside ``ShardedArena``.
+    """
+
+    @property
+    def out_dtype(self):
+        raise NotImplementedError
+
+    def reduce_flat(self, spec: se.ArenaSpec, flat: jax.Array,
+                    offsets: jax.Array, *, max_l: int) -> jax.Array:
+        """(N,) arena row ids + (n_bags+1,) offsets -> f32 (n_bags, D)."""
+        raise NotImplementedError
+
+    def reduce_fixed(self, spec: se.ArenaSpec,
+                     flat: jax.Array) -> jax.Array:
+        """(B*T, L) arena row ids -> f32 (B*T, D). Default: route through
+        the ragged reduction with uniform offsets."""
+        n_bags, l = flat.shape
+        offsets = (jnp.arange(n_bags + 1, dtype=jnp.int32) * l)
+        return self.reduce_flat(spec, flat.reshape(-1), offsets, max_l=l)
+
+    def shard_reduce_flat(self, spec: se.ArenaSpec, flat: jax.Array,
+                          offsets: jax.Array, axis: str) -> jax.Array:
+        """Shard-local half of ``reduce_flat`` for use inside shard_map
+        (arrays hold this shard's rows); returns psum'd f32 partials."""
+        raise NotImplementedError(
+            f"{type(self).__name__} cannot be row-sharded; wrap a leaf "
+            f"source (FpArena / QuantizedArena) in ShardedArena instead")
+
+    def shard_reduce_fixed(self, spec: se.ArenaSpec, flat: jax.Array,
+                           axis: str) -> jax.Array:
+        raise NotImplementedError(
+            f"{type(self).__name__} cannot be row-sharded; wrap a leaf "
+            f"source (FpArena / QuantizedArena) in ShardedArena instead")
+
+
+@register_source(("arena",))
+@dataclass(frozen=True)
+class FpArena(EmbeddingSource):
+    """The plain full-precision row arena — the reference source every
+    other composition must agree with."""
+    arena: jax.Array                     # (rows, D)
+
+    @property
+    def out_dtype(self):
+        return self.arena.dtype
+
+    def reduce_flat(self, spec, flat, offsets, *, max_l):
+        return ops.sparse_lengths_sum(
+            self.arena, flat, offsets, max_l=max_l).astype(jnp.float32)
+
+    def reduce_fixed(self, spec, flat):
+        # fused EB-Streamer pass (one kernel over all tables)
+        return ops.embedding_bag(self.arena, flat).astype(jnp.float32)
+
+    def shard_reduce_flat(self, spec, flat, offsets, axis):
+        return se.ragged_partial_reduce(self.arena, flat, offsets, axis)
+
+    def shard_reduce_fixed(self, spec, flat, axis):
+        lo, vlocal = se.shard_row_range(self.arena, axis)
+        return se._masked_fixed_partial_reduce(
+            lambda safe: jnp.take(self.arena, safe, axis=0)
+            .astype(jnp.float32), lo, vlocal, flat, axis)
+
+
+@register_source(("q", "scales"))
+@dataclass(frozen=True)
+class QuantizedArena(EmbeddingSource):
+    """int8 rows + one f32 scale per row (3.9x capacity); dequantized on
+    the fly inside the reduction. The null row's zero scale keeps every
+    redirect inert — the int8 masking protocol."""
+    q: jax.Array                         # (rows, D) int8
+    scales: jax.Array                    # (rows, 1) f32
+
+    @property
+    def out_dtype(self):
+        return jnp.float32
+
+    @classmethod
+    def from_arena(cls, arena: jax.Array) -> "QuantizedArena":
+        q, scales = se.quantize_arena(arena)
+        return cls(q=q, scales=scales)
+
+    def quantize_rows(self, arena: jax.Array,
+                      rows: jax.Array) -> "QuantizedArena":
+        """Re-quantize only `rows` from `arena` — the incremental
+        maintenance patch. Exact vs a full ``from_arena`` rebuild when
+        only `rows` changed (row-wise quantization has no cross-row
+        state). Duplicate row ids are harmless (idempotent set)."""
+        sub = jnp.take(arena, rows, axis=0).astype(jnp.float32)
+        qr, scales = se._rowwise_quantize(sub)   # same rule as from_arena
+        return QuantizedArena(q=self.q.at[rows].set(qr),
+                              scales=self.scales.at[rows].set(scales))
+
+    def reduce_flat(self, spec, flat, offsets, *, max_l):
+        n_bags = offsets.shape[0] - 1
+        seg = se.ragged_segment_ids(offsets, flat.shape[0])
+        rows = jnp.take(self.q, flat, axis=0).astype(jnp.float32) \
+            * jnp.take(self.scales, flat, axis=0)
+        return jax.ops.segment_sum(rows, seg, num_segments=n_bags)
+
+    def reduce_fixed(self, spec, flat):
+        rows = jnp.take(self.q, flat, axis=0).astype(jnp.float32)
+        s = jnp.take(self.scales, flat, axis=0)
+        return (rows * s).sum(axis=1)
+
+    def shard_reduce_flat(self, spec, flat, offsets, axis):
+        return se.ragged_partial_reduce_q(self.q, self.scales, flat,
+                                          offsets, axis)
+
+    def shard_reduce_fixed(self, spec, flat, axis):
+        lo, vlocal = se.shard_row_range(self.q, axis)
+        return se._masked_fixed_partial_reduce(
+            lambda safe: jnp.take(self.q, safe, axis=0)
+            .astype(jnp.float32)
+            * jnp.take(self.scales, safe, axis=0), lo, vlocal, flat,
+            axis)
+
+
+@register_source(("inner",), ("mesh", "axis"))
+@dataclass(frozen=True)
+class ShardedArena(EmbeddingSource):
+    """Row-shard any leaf source over `axis` of `mesh` (shard_map).
+
+    The ownership protocol every sharded path shares: foreign rows are
+    gathered as local row 0 and zero-masked, partial bags are reduced
+    shard-locally, one psum combines them — only reduced (n_bags, D)
+    partials ever cross chips, never raw rows (Centaur streams reductions
+    for the same reason). The psum'd f32 result is rounded through the
+    inner source's dtype so sharded and replicated stay bit-comparable on
+    low-precision arenas too.
+    """
+    inner: EmbeddingSource
+    mesh: jax.sharding.Mesh
+    axis: str = "model"
+
+    @property
+    def out_dtype(self):
+        return self.inner.out_dtype
+
+    @property
+    def n_shards(self) -> int:
+        return se.mesh_shards(self.mesh, self.axis)
+
+    def _shard_map(self, local_fn, batch_args, batch_specs, out_spec):
+        """shard_map `local_fn(inner_local, *batch_args)` with the inner
+        source's leaves row-sharded over `axis` and the given batch /
+        output partitioning. Generic over the inner structure, so any
+        leaf source gains the sharded composition for free."""
+        from jax.sharding import PartitionSpec as P
+        leaves, treedef = jax.tree_util.tree_flatten(self.inner)
+
+        def body(*args):
+            ls, rest = args[:len(leaves)], args[len(leaves):]
+            return local_fn(jax.tree_util.tree_unflatten(treedef, ls),
+                            *rest)
+
+        fn = compat.shard_map(
+            body, mesh=self.mesh,
+            in_specs=tuple(P(self.axis, None) for _ in leaves)
+            + tuple(batch_specs),
+            out_specs=out_spec)
+        return fn(*leaves, *batch_args)
+
+    def _data_axes(self):
+        """The non-row mesh axes: the fixed-path batch partitions over
+        them (each data-group reduces only its own samples)."""
+        return tuple(a for a in self.mesh.axis_names if a != self.axis)
+
+    def reduce_flat(self, spec, flat, offsets, *, max_l):
+        from jax.sharding import PartitionSpec as P
+        if self.n_shards == 1:
+            return self.inner.reduce_flat(spec, flat, offsets,
+                                          max_l=max_l)
+        # the ragged stream cannot split over a data axis (offsets are
+        # global bag boundaries): batch args stay replicated, one psum
+        # of reduced partials over the row axis
+        part = self._shard_map(
+            lambda src, f, o: src.shard_reduce_flat(spec, f, o,
+                                                    self.axis),
+            (flat, offsets), (P(None), P(None)), P(None, None))
+        # round through the inner dtype exactly like the replicated
+        # kernel does, so both partitions stay bit-comparable
+        return part.astype(self.inner.out_dtype).astype(jnp.float32)
+
+    def reduce_fixed(self, spec, flat):
+        from jax.sharding import PartitionSpec as P
+        if self.n_shards == 1:
+            return self.inner.reduce_fixed(spec, flat)
+        # fixed-L bags are independent rows of (B*T, L): partition them
+        # over the remaining (data) mesh axes so each data-group gathers
+        # and reduces only its own samples
+        other = self._data_axes()
+        batch_spec = P(other if other else None)
+        out_spec = P(other if other else None, None)
+        part = self._shard_map(
+            lambda src, f: src.shard_reduce_fixed(spec, f, self.axis),
+            (flat,), (batch_spec,), out_spec)
+        return part.astype(self.inner.out_dtype).astype(jnp.float32)
+
+
+@register_source(("hot", "cold"))
+@dataclass(frozen=True)
+class CachedSource(EmbeddingSource):
+    """Replicated top-K hot rows + ANY cold source for the tail.
+
+    The shared hot/cold protocol: the hot pass reduces cache slots
+    (misses hit the zero null slot), and the cold indices redirect cached
+    rows to the arena null row, so any cold reduction over them is
+    exactly the complement — hot + cold == uncached, for every cold
+    source. Cold may itself be sharded or quantized (or, later, another
+    CachedSource — a two-level cache is this dataclass nested).
+    """
+    hot: se.HotRowCache
+    cold: EmbeddingSource
+
+    @property
+    def out_dtype(self):
+        return self.cold.out_dtype
+
+    @property
+    def k(self) -> int:
+        return self.hot.hot_rows.shape[0] - 1
+
+    def reduce_flat(self, spec, flat, offsets, *, max_l):
+        hot, cold_idx = se.cache_split_flat(self.hot, spec.null_row,
+                                            flat, offsets, max_l)
+        return hot + self.cold.reduce_flat(spec, cold_idx, offsets,
+                                           max_l=max_l)
+
+
+# ---------------------------------------------------------------------------
+# The two entry points
+# ---------------------------------------------------------------------------
+
+def lookup_bags(source: EmbeddingSource, spec: se.ArenaSpec,
+                indices: jax.Array, offsets: jax.Array, *,
+                max_l: int) -> jax.Array:
+    """THE ragged sparse stage: flat per-table ids + offsets -> (B, T, D).
+
+    Subsumes lookup_ragged / _sharded / _auto / _quantized / _cached /
+    _cached_q: the composition lives in the `source` pytree, not in the
+    function name. Differentiable w.r.t. the source's fp leaves on every
+    backend (``jax.grad`` routes through the kernel custom VJPs).
+    """
+    n_bags = offsets.shape[0] - 1
+    flat = se.flatten_ragged_indices(spec, indices, offsets)
+    out = source.reduce_flat(spec, flat, offsets, max_l=max_l)
+    return out.reshape(n_bags // spec.n_tables, spec.n_tables,
+                       spec.dim).astype(source.out_dtype)
+
+
+def lookup_fixed(source: EmbeddingSource, spec: se.ArenaSpec,
+                 indices: jax.Array) -> jax.Array:
+    """The legacy fixed-L sparse stage: (B, T, L) ids -> (B, T, D).
+
+    Subsumes lookup / lookup_sharded / lookup_auto / lookup_quantized.
+    """
+    b, t, _ = indices.shape
+    flat = se.flatten_indices(spec, indices)
+    out = source.reduce_fixed(spec, flat)
+    return out.reshape(b, t, spec.dim).astype(source.out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Construction helpers
+# ---------------------------------------------------------------------------
+
+def resolve_source(arena: jax.Array,
+                   mesh: Optional[jax.sharding.Mesh] = None,
+                   axis: str = "model") -> EmbeddingSource:
+    """The default source for a raw arena: replicated fp, row-sharded
+    over `axis` when a mesh with a >1 axis is given (the pre-API
+    ``lookup_auto`` behavior as a value instead of a function)."""
+    src: EmbeddingSource = FpArena(arena)
+    if se.mesh_shards(mesh, axis) > 1:
+        src = ShardedArena(src, mesh, axis)
+    return src
+
+
+def hot_cache_of(source) -> Optional[se.HotRowCache]:
+    """The hot cache a source serves from, or None (non-cached source)."""
+    return source.hot if isinstance(source, CachedSource) else None
+
+
+def with_hot_cache(source: CachedSource,
+                   cache: se.HotRowCache) -> CachedSource:
+    """Same cold source, new hot cache — the write-through/rebuild swap."""
+    assert isinstance(source, CachedSource), source
+    return CachedSource(hot=cache, cold=source.cold)
+
+
+def rebind_arena(source: EmbeddingSource,
+                 arena: jax.Array) -> EmbeddingSource:
+    """Return `source` with every fp-arena leaf replaced by `arena`
+    (quantized arenas are a frozen *representation* of some arena version
+    and are left alone — rebuild them explicitly via ``quantize_rows`` /
+    ``from_arena``). Used to keep a serving source in lockstep when the
+    live params object is swapped."""
+    if isinstance(source, FpArena):
+        return FpArena(arena)
+    if isinstance(source, ShardedArena):
+        return ShardedArena(rebind_arena(source.inner, arena),
+                            source.mesh, source.axis)
+    if isinstance(source, CachedSource):
+        return CachedSource(source.hot, rebind_arena(source.cold, arena))
+    return source
+
+
+def describe_source(source) -> str:
+    """Human/stats label: 'fp', 'int8', 'sharded(4,fp)', 'cached(fp)'…"""
+    if isinstance(source, FpArena):
+        return "fp"
+    if isinstance(source, QuantizedArena):
+        return "int8"
+    if isinstance(source, ShardedArena):
+        return f"sharded({source.n_shards},{describe_source(source.inner)})"
+    if isinstance(source, CachedSource):
+        return f"cached({describe_source(source.cold)})"
+    return type(source).__name__
+
+
+@dataclass(frozen=True)
+class SourceSpec:
+    """Declarative serving plan: WHICH source to build, not how.
+
+    Replaces the (path string x cache_k x quantize_cold x mesh) kwarg
+    cross-product: a RecEngine (or any consumer) takes one SourceSpec and
+    calls ``build(arena, spec, counts)``. String shorthands map 1:1 onto
+    the old path names via ``from_path`` ('fixed' | 'ragged' | 'cached'
+    | 'sharded').
+    """
+    layout: str = "ragged"               # 'ragged' | 'fixed' batch layout
+    cache_k: int = 0                     # >0: pin top-K rows hot
+    quantize_cold: bool = False          # int8 cold/uncached arena
+    mesh: Optional[jax.sharding.Mesh] = None
+    axis: str = "model"
+    require_mesh: bool = False           # 'sharded': no silent fallback
+
+    PATH_NAMES = ("fixed", "ragged", "cached", "sharded")
+
+    def __post_init__(self):
+        assert self.layout in ("ragged", "fixed"), self.layout
+        if self.require_mesh and se.mesh_shards(self.mesh, self.axis) < 2:
+            raise ValueError(
+                "require_mesh=True (path 'sharded') needs a mesh with a "
+                f">1 {self.axis!r} axis — a misconfigured replica must "
+                "not silently fall back to the replicated arena")
+        if self.layout == "fixed" and (self.cache_k or self.quantize_cold):
+            raise ValueError(
+                "layout='fixed' serves through the legacy fixed-L step "
+                "and cannot consume a cached/quantized source — drop "
+                "cache_k/quantize_cold or use the ragged layout")
+
+    @staticmethod
+    def from_path(path: Union[str, "SourceSpec"], *, cache_k: int = 0,
+                  quantize_cold: bool = False,
+                  mesh: Optional[jax.sharding.Mesh] = None,
+                  axis: str = "model") -> "SourceSpec":
+        """String shorthand -> plan ('cached' consumes cache_k etc.)."""
+        if isinstance(path, SourceSpec):
+            return path
+        assert path in SourceSpec.PATH_NAMES, \
+            (path, SourceSpec.PATH_NAMES)
+        if path != "cached":
+            # refuse to silently drop cache/int8 configuration — an
+            # operator who asked for them must pick the 'cached' path
+            # (or pass a full SourceSpec) to get them
+            assert not cache_k and not quantize_cold, \
+                (f"path {path!r} ignores cache_k/quantize_cold; use "
+                 f"path 'cached' or a SourceSpec to configure them")
+        if path == "fixed":
+            return SourceSpec(layout="fixed", mesh=mesh, axis=axis)
+        if path == "ragged":
+            return SourceSpec(mesh=mesh, axis=axis)
+        if path == "sharded":
+            return SourceSpec(mesh=mesh, axis=axis, require_mesh=True)
+        assert cache_k > 0, "cached path needs cache_k > 0"
+        return SourceSpec(cache_k=cache_k, quantize_cold=quantize_cold,
+                          mesh=mesh, axis=axis)
+
+    @property
+    def cached(self) -> bool:
+        return self.cache_k > 0
+
+    def path_name(self) -> str:
+        """The nearest legacy shorthand (for stats/back-compat labels)."""
+        if self.layout == "fixed":
+            return "fixed"
+        if self.cached:
+            return "cached"
+        if self.require_mesh:
+            return "sharded"
+        return "ragged"
+
+    def build(self, arena: jax.Array, spec: se.ArenaSpec,
+              counts=None) -> EmbeddingSource:
+        """Materialize the plan for an arena (counts: trace histogram for
+        the hot ranking; uniform when omitted)."""
+        cold: EmbeddingSource = (QuantizedArena.from_arena(arena)
+                                 if self.quantize_cold else FpArena(arena))
+        if se.mesh_shards(self.mesh, self.axis) > 1:
+            cold = ShardedArena(cold, self.mesh, self.axis)
+        if not self.cached:
+            return cold
+        if counts is None:
+            counts = np.ones(spec.total_rows)
+        hot = se.build_hot_cache(arena, spec, counts, self.cache_k)
+        return CachedSource(hot=hot, cold=cold)
+
+
+# ---------------------------------------------------------------------------
+# Versioned broadcast artifact — any source + a monotone version
+# ---------------------------------------------------------------------------
+
+def _encode(obj, arrays: dict, counter: list):
+    if isinstance(obj, (jax.Array, np.ndarray)):
+        key = f"a{counter[0]}"
+        counter[0] += 1
+        arrays[key] = np.asarray(obj)
+        return {"kind": "array", "key": key}
+    name = type(obj).__name__
+    if name not in _SOURCE_REGISTRY:
+        raise TypeError(f"cannot serialize {name}: not a registered "
+                        f"source type ({sorted(_SOURCE_REGISTRY)})")
+    _, data_fields, meta_fields = _SOURCE_REGISTRY[name]
+    node = {"kind": "node", "type": name, "fields": {}}
+    for f in data_fields:
+        node["fields"][f] = _encode(getattr(obj, f), arrays, counter)
+    for f in meta_fields:
+        v = getattr(obj, f)
+        if isinstance(v, jax.sharding.Mesh):
+            # meshes are host topology, not state: the consumer rebinds
+            # its own at deserialize time
+            node["fields"][f] = {"kind": "mesh"}
+        else:
+            node["fields"][f] = {"kind": "meta", "value": v}
+    return node
+
+
+def _decode(node, z, mesh):
+    if node["kind"] == "array":
+        return jnp.asarray(z[node["key"]])
+    assert node["kind"] == "node", node
+    cls, data_fields, meta_fields = _SOURCE_REGISTRY[node["type"]]
+    kw = {}
+    for f in data_fields + meta_fields:
+        sub = node["fields"][f]
+        if sub["kind"] == "mesh":
+            kw[f] = mesh
+        elif sub["kind"] == "meta":
+            kw[f] = sub["value"]
+        else:
+            kw[f] = _decode(sub, z, mesh)
+    if cls is ShardedArena and mesh is None:
+        # no mesh on the consumer: serve the inner source replicated
+        return kw["inner"]
+    return cls(**kw)
+
+
+@dataclass(frozen=True)
+class VersionedSource:
+    """Any EmbeddingSource plus the monotone version that produced it —
+    the fleet broadcast artifact, generalizing the hot-arena-only
+    artifact to quantized cold arenas and full fp arenas (param
+    broadcast). ``serialize``/``deserialize`` round-trip through one
+    self-describing byte blob; ``apply`` adopts it into an engine
+    atomically iff strictly newer (idempotent, order-free delivery).
+    """
+    source: EmbeddingSource
+    version: int
+
+    MAGIC = b"CSA1"              # Centaur source artifact, format v1
+
+    def serialize(self) -> bytes:
+        arrays, counter = {}, [0]
+        tree = _encode(self.source, arrays, counter)
+        buf = io.BytesIO()
+        np.savez(buf,
+                 magic=np.frombuffer(self.MAGIC, np.uint8),
+                 version=np.asarray(self.version, np.int64),
+                 structure=np.frombuffer(
+                     json.dumps(tree).encode(), np.uint8),
+                 **arrays)
+        return buf.getvalue()
+
+    @staticmethod
+    def deserialize(blob: bytes,
+                    mesh: Optional[jax.sharding.Mesh] = None
+                    ) -> "VersionedSource":
+        """Reconstruct; a recorded ShardedArena rebinds to `mesh`, or
+        unwraps to its (replicated) inner source when mesh is None."""
+        try:
+            with np.load(io.BytesIO(blob)) as z:
+                if z["magic"].tobytes() != VersionedSource.MAGIC:
+                    raise ValueError("bad magic")
+                tree = json.loads(z["structure"].tobytes().decode())
+                source = _decode(tree, z, mesh)
+                return VersionedSource(source=source,
+                                       version=int(z["version"]))
+        except Exception as e:
+            raise ValueError(
+                f"not a versioned-source artifact: {e}") from e
+
+    def apply(self, engine) -> bool:
+        """Adopt into a RecEngine iff strictly newer; same-or-older
+        artifacts are absorbed (reordered transport is safe)."""
+        if engine.source_version >= self.version:
+            return False
+        engine.update_source(self.source, version=self.version)
+        return True

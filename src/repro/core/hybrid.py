@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.configs.base import DLRMConfig
 from repro.core import dense_engine as de
 from repro.core import dlrm as dlrm_mod
+from repro.core import embedding_source as es
 from repro.core import sparse_engine as se
 from repro.kernels import ref as kref
 
@@ -70,7 +71,8 @@ def pipelined_forward(params: Dict, cfg: DLRMConfig, dense: jax.Array,
     idx_s = indices.reshape(n_micro, mb, spec.n_tables, -1)
 
     # Prologue: gather microbatch 0's embeddings.
-    emb0 = se.lookup_auto(params["arena"], spec, idx_s[0], mesh)
+    src = es.resolve_source(params["arena"], mesh)
+    emb0 = es.lookup_fixed(src, spec, idx_s[0])
     # Next-microbatch index stream. The last microbatch has no successor:
     # its "next" gather used to wrap around to microbatch 0 and be
     # discarded — a full wasted EB-Streamer pass. Feed all-null-row
@@ -86,7 +88,7 @@ def pipelined_forward(params: Dict, cfg: DLRMConfig, dense: jax.Array,
         x, _ = de.feature_interaction(bot, emb_i)
         logit = de.mlp_apply(params["top"], x)[:, 0]
         # ... overlapped with the sparse stage for microbatch i+1
-        emb_n = se.lookup_auto(params["arena"], spec, idx_n, mesh)
+        emb_n = es.lookup_fixed(src, spec, idx_n)
         return emb_n, logit
 
     _, logits = jax.lax.scan(body, emb0, (dense_s, idx_next))
@@ -153,8 +155,8 @@ def pipelined_forward_ragged(params: Dict, cfg: DLRMConfig,
     idx_s, off_s = split_ragged_microbatches(indices, offsets, n_micro,
                                              max_l)
 
-    emb0 = se.lookup_ragged_auto(params["arena"], spec, idx_s[0], off_s[0],
-                                 max_l=max_l, mesh=mesh)
+    src = es.resolve_source(params["arena"], mesh)
+    emb0 = es.lookup_bags(src, spec, idx_s[0], off_s[0], max_l=max_l)
     idx_next = jnp.concatenate([idx_s[1:], jnp.zeros_like(idx_s[:1])], 0)
     off_next = jnp.concatenate([off_s[1:], jnp.zeros_like(off_s[:1])], 0)
 
@@ -163,8 +165,7 @@ def pipelined_forward_ragged(params: Dict, cfg: DLRMConfig,
         bot = de.mlp_apply(params["bottom"], dense_i)
         x, _ = de.feature_interaction(bot, emb_i.astype(bot.dtype))
         logit = de.mlp_apply(params["top"], x)[:, 0]
-        emb_n = se.lookup_ragged_auto(params["arena"], spec, idx_n, off_n,
-                                      max_l=max_l, mesh=mesh)
+        emb_n = es.lookup_bags(src, spec, idx_n, off_n, max_l=max_l)
         return emb_n, logit
 
     _, logits = jax.lax.scan(body, emb0, (dense_s, idx_next, off_next))

@@ -16,9 +16,19 @@ The paper's EB-Streamer (Fig. 10) is reproduced structurally:
   'model' mesh axis**; each chip reduces the rows it owns and a single psum
   combines partial bags. Only reduced D-vectors ever cross chips (the same
   reason Centaur streams reductions instead of raw gathered rows).
+
+NOTE: the lookup entry points that used to live here (``lookup``,
+``lookup_sharded``, ``lookup_auto``, ``lookup_quantized``, and the six
+``lookup_ragged*`` variants) are deprecation shims now — the unified API
+is ``repro.core.embedding_source``: one ``lookup_bags`` / ``lookup_fixed``
+pair dispatching over pytree-registered ``EmbeddingSource`` values. This
+module keeps the arena layout (ArenaSpec / flatten), the shard-local
+reduction protocol, and the hot-row cache data structures those sources
+are built from.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Optional
 
@@ -26,8 +36,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import compat
 from repro.kernels import ops
+
+
+def _deprecated(name: str, repl: str) -> None:
+    warnings.warn(
+        f"repro.core.sparse_engine.{name} is deprecated; use "
+        f"repro.core.embedding_source.{repl} over an EmbeddingSource "
+        f"(see the README migration table)",
+        DeprecationWarning, stacklevel=3)
 
 
 @dataclass(frozen=True)
@@ -71,65 +88,33 @@ def flatten_indices(spec: ArenaSpec, indices: jax.Array) -> jax.Array:
 
 
 def lookup(arena: jax.Array, spec: ArenaSpec, indices: jax.Array) -> jax.Array:
-    """Replicated-arena gather+reduce: (B, T, L) -> (B, T, D).
-
-    Single fused kernel call across *all* tables (one EB-Streamer pass).
-    """
-    b, t, l = indices.shape
-    flat = flatten_indices(spec, indices)
-    out = ops.embedding_bag(arena, flat)          # (B*T, D)
-    return out.reshape(b, t, spec.dim)
+    """DEPRECATED shim: use ``lookup_fixed(FpArena(arena), spec, indices)``."""
+    from repro.core import embedding_source as es
+    _deprecated("lookup", "lookup_fixed(FpArena(arena), ...)")
+    return es.lookup_fixed(es.FpArena(arena), spec, indices)
 
 
 def lookup_sharded(arena_shard: jax.Array, spec: ArenaSpec,
                    indices: jax.Array, axis: str) -> jax.Array:
-    """Row-sharded gather+reduce for use inside shard_map.
-
-    arena_shard: (rows/n_shards, D) local rows (contiguous row-block shard);
-    indices: (B, T, L) replicated. Out-of-shard rows are routed to the null
-    row trick *relative to the shard*: rows this chip does not own are
-    redirected to a clipped in-range row and zero-masked via a weight of 0 in
-    the reduction — implemented by gathering and masking before the local
-    reduce, then psum over `axis` combines partial bags.
-    """
-    n_shards = compat.axis_size(axis)
-    my = jax.lax.axis_index(axis)
-    vlocal = arena_shard.shape[0]
-    lo = my * vlocal
-
-    b, t, l = indices.shape
-    flat = flatten_indices(spec, indices)          # (B*T, L) global rows
-    rel = flat - lo
-    mine = (rel >= 0) & (rel < vlocal)
-    # Redirect foreign rows to local row 0 and mask their contribution.
-    safe = jnp.where(mine, rel, 0)
-    rows = jnp.take(arena_shard, safe, axis=0)     # (B*T, L, D)
-    rows = jnp.where(mine[..., None], rows, 0)
-    part = rows.astype(jnp.float32).sum(axis=1)    # local partial reduction
-    out = jax.lax.psum(part, axis)                 # combine partial bags
-    return out.reshape(b, t, spec.dim).astype(arena_shard.dtype)
+    """DEPRECATED shim: shard-local fixed reduce, now
+    ``FpArena(arena_shard).shard_reduce_fixed`` (inside shard_map)."""
+    from repro.core import embedding_source as es
+    _deprecated("lookup_sharded",
+                "ShardedArena(FpArena(arena), mesh) with lookup_fixed")
+    b, t, _ = indices.shape
+    flat = flatten_indices(spec, indices)
+    part = es.FpArena(arena_shard).shard_reduce_fixed(spec, flat, axis)
+    return part.reshape(b, t, spec.dim).astype(arena_shard.dtype)
 
 
 def lookup_auto(arena: jax.Array, spec: ArenaSpec, indices: jax.Array,
                 mesh: Optional[jax.sharding.Mesh] = None,
                 axis: str = "model") -> jax.Array:
-    """pjit-level entry: row-shard the arena over `axis` when a mesh is given.
-
-    The shard_map below is the production path: it guarantees that only
-    reduced (B,T,D) partials cross chips (one psum), never raw gathered rows.
-    """
-    if mesh is None or axis not in mesh.axis_names or mesh.shape[axis] == 1:
-        return lookup(arena, spec, indices)
-    from jax.sharding import PartitionSpec as P
-    other = tuple(a for a in mesh.axis_names if a != axis)
-    batch_spec = P(other if other else None)
-    fn = compat.shard_map(
-        lambda a, i: lookup_sharded(a, spec, i, axis),
-        mesh=mesh,
-        in_specs=(P(axis, None), batch_spec),
-        out_specs=batch_spec,
-    )
-    return fn(arena, indices)
+    """DEPRECATED shim: use ``lookup_fixed(resolve_source(arena, mesh))``."""
+    from repro.core import embedding_source as es
+    _deprecated("lookup_auto", "lookup_fixed(resolve_source(arena, mesh))")
+    return es.lookup_fixed(es.resolve_source(arena, mesh, axis), spec,
+                           indices)
 
 
 def quantize_arena(arena: jax.Array):
@@ -141,7 +126,13 @@ def quantize_arena(arena: jax.Array):
     (the EB-RU reduces dequantized rows; a zero scale keeps the null row
     inert). Returns (q int8 (R, D), scales f32 (R, 1)).
     """
-    a32 = arena.astype(jnp.float32)
+    return _rowwise_quantize(arena.astype(jnp.float32))
+
+
+def _rowwise_quantize(a32: jax.Array):
+    """THE row-wise symmetric int8 rule — the single definition shared by
+    the full-arena build and the incremental `quantize_rows` patch, so
+    the patch stays bit-identical to a full rebuild by construction."""
     amax = jnp.max(jnp.abs(a32), axis=-1, keepdims=True)
     scales = amax / 127.0
     q = jnp.where(scales > 0,
@@ -152,13 +143,11 @@ def quantize_arena(arena: jax.Array):
 
 def lookup_quantized(q: jax.Array, scales: jax.Array, spec: ArenaSpec,
                      indices: jax.Array) -> jax.Array:
-    """Gather+reduce over an int8 arena: dequantize-per-row then reduce."""
-    b, t, l = indices.shape
-    flat = flatten_indices(spec, indices)            # (B*T, L)
-    rows = jnp.take(q, flat, axis=0).astype(jnp.float32)
-    s = jnp.take(scales, flat, axis=0)               # (B*T, L, 1)
-    out = (rows * s).sum(axis=1)
-    return out.reshape(b, t, spec.dim)
+    """DEPRECATED shim: use ``lookup_fixed(QuantizedArena(q, scales), …)``."""
+    from repro.core import embedding_source as es
+    _deprecated("lookup_quantized",
+                "lookup_fixed(QuantizedArena(q, scales), ...)")
+    return es.lookup_fixed(es.QuantizedArena(q, scales), spec, indices)
 
 
 # ---------------------------------------------------------------------------
@@ -195,16 +184,11 @@ def flatten_ragged_indices(spec: ArenaSpec, indices: jax.Array,
 
 def lookup_ragged(arena: jax.Array, spec: ArenaSpec, indices: jax.Array,
                   offsets: jax.Array, *, max_l: int) -> jax.Array:
-    """Ragged gather+reduce: flat per-table ids + offsets -> (B, T, D).
-
-    One fused sparse_lengths_sum kernel pass across all tables — the
-    production replacement for fixed-L `lookup`.
-    """
-    n_bags = offsets.shape[0] - 1
-    b = n_bags // spec.n_tables
-    flat = flatten_ragged_indices(spec, indices, offsets)
-    out = ops.sparse_lengths_sum(arena, flat, offsets, max_l=max_l)
-    return out.reshape(b, spec.n_tables, spec.dim)
+    """DEPRECATED shim: use ``lookup_bags(FpArena(arena), ...)``."""
+    from repro.core import embedding_source as es
+    _deprecated("lookup_ragged", "lookup_bags(FpArena(arena), ...)")
+    return es.lookup_bags(es.FpArena(arena), spec, indices, offsets,
+                          max_l=max_l)
 
 
 def shard_row_range(arena_shard: jax.Array, axis: str):
@@ -234,6 +218,20 @@ def _masked_partial_reduce(gather_f32, lo, vlocal: int, flat: jax.Array,
     return jax.lax.psum(part, axis)
 
 
+def _masked_fixed_partial_reduce(gather_f32, lo, vlocal: int,
+                                 flat: jax.Array, axis: str) -> jax.Array:
+    """Fixed-L sibling of ``_masked_partial_reduce`` — the same ownership
+    protocol over (B*T, L) row blocks: foreign rows gathered as local row
+    0 and zero-masked, per-bag sum, one psum. One body, so the fp and
+    int8 fixed-path shard reduces can never diverge on the masking edge
+    either. Returns f32 (B*T, D)."""
+    rel = flat - lo
+    mine = (rel >= 0) & (rel < vlocal)
+    safe = jnp.where(mine, rel, 0)
+    rows = jnp.where(mine[..., None], gather_f32(safe), 0)
+    return jax.lax.psum(rows.sum(axis=1), axis)
+
+
 def ragged_partial_reduce(arena_shard: jax.Array, flat: jax.Array,
                           offsets: jax.Array, axis: str) -> jax.Array:
     """Shard-local half of a ragged reduce over pre-flattened arena rows.
@@ -261,16 +259,15 @@ def ragged_partial_reduce_q(q_shard: jax.Array, scales_shard: jax.Array,
 def lookup_ragged_sharded(arena_shard: jax.Array, spec: ArenaSpec,
                           indices: jax.Array, offsets: jax.Array,
                           axis: str) -> jax.Array:
-    """Row-sharded ragged gather+reduce for use inside shard_map.
-
-    Same ownership protocol as `lookup_sharded`: foreign rows are gathered
-    as local row 0 and zero-masked, partial bags are segment-reduced
-    locally, one psum combines them — only reduced (B,T,D) partials cross
-    chips.
-    """
+    """DEPRECATED shim: shard-local ragged reduce, now
+    ``FpArena(arena_shard).shard_reduce_flat`` (inside shard_map)."""
+    from repro.core import embedding_source as es
+    _deprecated("lookup_ragged_sharded",
+                "ShardedArena(FpArena(arena), mesh) with lookup_bags")
     n_bags = offsets.shape[0] - 1
     flat = flatten_ragged_indices(spec, indices, offsets)
-    out = ragged_partial_reduce(arena_shard, flat, offsets, axis)
+    out = es.FpArena(arena_shard).shard_reduce_flat(spec, flat, offsets,
+                                                    axis)
     return out.reshape(n_bags // spec.n_tables, spec.n_tables,
                        spec.dim).astype(arena_shard.dtype)
 
@@ -288,35 +285,24 @@ def lookup_ragged_auto(arena: jax.Array, spec: ArenaSpec,
                        max_l: int,
                        mesh: Optional[jax.sharding.Mesh] = None,
                        axis: str = "model") -> jax.Array:
-    """pjit-level ragged entry: row-shard the arena over `axis` on a mesh."""
-    if mesh_shards(mesh, axis) == 1:
-        return lookup_ragged(arena, spec, indices, offsets, max_l=max_l)
-    from jax.sharding import PartitionSpec as P
-    fn = compat.shard_map(
-        lambda a, i, o: lookup_ragged_sharded(a, spec, i, o, axis),
-        mesh=mesh,
-        in_specs=(P(axis, None), P(None), P(None)),
-        out_specs=P(None, None, None),
-    )
-    return fn(arena, indices, offsets)
+    """DEPRECATED shim: use ``lookup_bags(resolve_source(arena, mesh))``."""
+    from repro.core import embedding_source as es
+    _deprecated("lookup_ragged_auto",
+                "lookup_bags(resolve_source(arena, mesh))")
+    return es.lookup_bags(es.resolve_source(arena, mesh, axis), spec,
+                          indices, offsets, max_l=max_l)
 
 
 def lookup_ragged_quantized(q: jax.Array, scales: jax.Array,
                             spec: ArenaSpec, indices: jax.Array,
                             offsets: jax.Array) -> jax.Array:
-    """Ragged gather+reduce over the int8 arena (dequantize per row)."""
-    n_bags = offsets.shape[0] - 1
-    flat = flatten_ragged_indices(spec, indices, offsets)
-    out = _ragged_reduce_q(q, scales, flat, offsets, n_bags)
-    return out.reshape(n_bags // spec.n_tables, spec.n_tables, spec.dim)
-
-
-def _ragged_reduce_q(q: jax.Array, scales: jax.Array, flat: jax.Array,
-                     offsets: jax.Array, n_bags: int) -> jax.Array:
-    seg = ragged_segment_ids(offsets, flat.shape[0])
-    rows = jnp.take(q, flat, axis=0).astype(jnp.float32) \
-        * jnp.take(scales, flat, axis=0)
-    return jax.ops.segment_sum(rows, seg, num_segments=n_bags)
+    """DEPRECATED shim: use ``lookup_bags(QuantizedArena(q, scales), …)``."""
+    from repro.core import embedding_source as es
+    _deprecated("lookup_ragged_quantized",
+                "lookup_bags(QuantizedArena(q, scales), ...)")
+    # the segment-sum reduction does not consume max_l; any bound works
+    return es.lookup_bags(es.QuantizedArena(q, scales), spec, indices,
+                          offsets, max_l=1)
 
 
 def null_indices(spec: ArenaSpec, shape) -> jax.Array:
@@ -394,22 +380,33 @@ def build_hot_cache(arena: jax.Array, spec: ArenaSpec, counts,
                        hot_ids=jnp.asarray(hot_ids))
 
 
-def cache_split(cache: HotRowCache, spec: ArenaSpec, indices: jax.Array,
-                offsets: jax.Array, max_l: int):
-    """Shared hot/cold protocol: the hot pass reduces cache slots (misses
-    hit the zero null slot), and cold_idx redirects cached rows to the
-    arena null row so any cold reduction over it is exactly the complement.
-    Returns (hot_sum (n_bags, D) f32, cold_idx (N,), n_bags). Public:
-    benches and shard-emulation tests compose custom cold passes from it.
-    """
-    n_bags = offsets.shape[0] - 1
+def cache_split_flat(cache: HotRowCache, null_row: int, flat: jax.Array,
+                     offsets: jax.Array, max_l: int):
+    """THE hot/cold split over pre-flattened arena row ids — the single
+    definition of the exactness-critical protocol (``CachedSource`` and
+    the legacy-shaped ``cache_split`` both call it): the hot pass reduces
+    cache slots (misses hit the zero null slot), and cold_idx redirects
+    cached rows to the arena null row so any cold reduction over it is
+    exactly the complement. Returns (hot_sum (n_bags, D) f32,
+    cold_idx (N,))."""
     k = cache.hot_rows.shape[0] - 1
-    flat = flatten_ragged_indices(spec, indices, offsets)
     slots = jnp.take(cache.slot_of, flat)
     hot = ops.sparse_lengths_sum(cache.hot_rows, slots, offsets,
                                  max_l=max_l).astype(jnp.float32)
-    cold_idx = jnp.where(slots < k,
-                         jnp.asarray(spec.null_row, flat.dtype), flat)
+    cold_idx = jnp.where(slots < k, jnp.asarray(null_row, flat.dtype),
+                         flat)
+    return hot, cold_idx
+
+
+def cache_split(cache: HotRowCache, spec: ArenaSpec, indices: jax.Array,
+                offsets: jax.Array, max_l: int):
+    """``cache_split_flat`` over per-table ids (flattens first). Returns
+    (hot_sum (n_bags, D) f32, cold_idx (N,), n_bags). Public: benches and
+    shard-emulation tests compose custom cold passes from it."""
+    n_bags = offsets.shape[0] - 1
+    flat = flatten_ragged_indices(spec, indices, offsets)
+    hot, cold_idx = cache_split_flat(cache, spec.null_row, flat, offsets,
+                                     max_l)
     return hot, cold_idx, n_bags
 
 
@@ -418,35 +415,14 @@ def lookup_ragged_cached(cache: HotRowCache, arena: jax.Array,
                          offsets: jax.Array, *, max_l: int,
                          mesh: Optional[jax.sharding.Mesh] = None,
                          axis: str = "model") -> jax.Array:
-    """Hot-row-cached ragged lookup, exact vs `lookup_ragged`.
-
-    With a mesh the cold pass runs through the row-sharded arena inside
-    shard_map — the Centaur composition: the hot arena stays replicated
-    (it is small and absorbs most traffic), cold rows stay shard-resident,
-    and only reduced cold partials cross chips. The hot+cold sum is the
-    same exact decomposition either way.
-    """
-    hot, cold_idx, n_bags = cache_split(cache, spec, indices, offsets,
-                                        max_l)
-    if mesh_shards(mesh, axis) == 1:
-        cold = ops.sparse_lengths_sum(arena, cold_idx, offsets,
-                                      max_l=max_l).astype(jnp.float32)
-    else:
-        from jax.sharding import PartitionSpec as P
-        fn = compat.shard_map(
-            lambda a, f, o: ragged_partial_reduce(a, f, o, axis),
-            mesh=mesh,
-            in_specs=(P(axis, None), P(None), P(None)),
-            out_specs=P(None, None),
-        )
-        # round through the arena dtype exactly like the replicated cold
-        # kernel does, so replicated and sharded stay bit-comparable on
-        # low-precision (e.g. bf16) arenas too
-        cold = fn(arena, cold_idx, offsets).astype(arena.dtype) \
-            .astype(jnp.float32)
-    out = hot + cold
-    return out.reshape(n_bags // spec.n_tables, spec.n_tables,
-                       spec.dim).astype(arena.dtype)
+    """DEPRECATED shim: use
+    ``lookup_bags(CachedSource(cache, resolve_source(arena, mesh)), …)``."""
+    from repro.core import embedding_source as es
+    _deprecated("lookup_ragged_cached",
+                "lookup_bags(CachedSource(cache, <cold source>), ...)")
+    src = es.CachedSource(hot=cache,
+                          cold=es.resolve_source(arena, mesh, axis))
+    return es.lookup_bags(src, spec, indices, offsets, max_l=max_l)
 
 
 def lookup_ragged_cached_q(cache: HotRowCache, q: jax.Array,
@@ -455,26 +431,16 @@ def lookup_ragged_cached_q(cache: HotRowCache, q: jax.Array,
                            max_l: int,
                            mesh: Optional[jax.sharding.Mesh] = None,
                            axis: str = "model") -> jax.Array:
-    """Hot rows exact (fp replicated arena), cold rows from the int8 arena
-    — the capacity configuration: hot working set at full precision, the
-    long tail at 3.9x density. With a mesh the int8 cold arena is
-    row-sharded like the fp one (scales shard with their rows)."""
-    hot, cold_idx, n_bags = cache_split(cache, spec, indices, offsets,
-                                        max_l)
-    if mesh_shards(mesh, axis) == 1:
-        cold = _ragged_reduce_q(q, scales, cold_idx, offsets, n_bags)
-    else:
-        from jax.sharding import PartitionSpec as P
-        fn = compat.shard_map(
-            lambda qq, ss, f, o: ragged_partial_reduce_q(qq, ss, f, o,
-                                                         axis),
-            mesh=mesh,
-            in_specs=(P(axis, None), P(axis, None), P(None), P(None)),
-            out_specs=P(None, None),
-        )
-        cold = fn(q, scales, cold_idx, offsets)
-    return (hot + cold).reshape(n_bags // spec.n_tables, spec.n_tables,
-                                spec.dim)
+    """DEPRECATED shim: use
+    ``lookup_bags(CachedSource(cache, QuantizedArena(q, scales)), …)``."""
+    from repro.core import embedding_source as es
+    _deprecated("lookup_ragged_cached_q",
+                "lookup_bags(CachedSource(cache, QuantizedArena(...)), ...)")
+    cold = es.QuantizedArena(q=q, scales=scales)
+    if mesh_shards(mesh, axis) > 1:
+        cold = es.ShardedArena(cold, mesh, axis)
+    return es.lookup_bags(es.CachedSource(hot=cache, cold=cold), spec,
+                          indices, offsets, max_l=max_l)
 
 
 def cache_hit_rate(cache: HotRowCache, spec: ArenaSpec, indices: jax.Array,

@@ -49,7 +49,8 @@ def train_dlrm_ragged(args) -> float:
     cache_cfg = None
     if args.online_cache:
         cache_cfg = OnlineCacheConfig(k=args.cache_k,
-                                      refresh_every=args.cache_refresh)
+                                      refresh_every=args.cache_refresh,
+                                      quantize_cold=args.quantize_cold)
     trainer = OnlineTrainer(cfg, params, max_l=max_l,
                             sparse=not args.dense_grads,
                             cache_cfg=cache_cfg, mesh=mesh)
@@ -74,6 +75,8 @@ def train_dlrm_ragged(args) -> float:
         if step % args.log_every == 0:
             extra = (f" cache v{trainer.version}" if args.online_cache
                      else "")
+            if args.quantize_cold and trainer.cold_q is not None:
+                extra += f" dirty_q={int(trainer._dirty_q.sum())}"
             print(f"step {step:5d} loss {loss:.4f} "
                   f"({time.time() - t0:.3f}s){extra}")
         if ckpt and (step + 1) % args.ckpt_every == 0:
@@ -209,6 +212,10 @@ def main() -> None:
                         "instead of the row-wise sparse optimizer")
     p.add_argument("--cache-k", type=int, default=2048)
     p.add_argument("--cache-refresh", type=int, default=50)
+    p.add_argument("--quantize-cold", action="store_true",
+                   help="with --online-cache: maintain an int8 cold "
+                        "arena incrementally (only rows touched since "
+                        "the last rebuild are re-quantized)")
     p.add_argument("--shards", type=int, default=1,
                    help="row-shard the embedding arena over an N-way "
                         "'model' mesh (DLRM; with --ragged the sparse "

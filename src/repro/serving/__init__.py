@@ -1,6 +1,7 @@
+from repro.core.embedding_source import SourceSpec
 from repro.serving.engine import Batcher, DecodeEngine, Request
 from repro.serving.rec_engine import (RecBatcher, RecEngine, RecRequest,
                                       requests_from_ragged_batch)
 
 __all__ = ["Batcher", "DecodeEngine", "Request", "RecBatcher", "RecEngine",
-           "RecRequest", "requests_from_ragged_batch"]
+           "RecRequest", "SourceSpec", "requests_from_ragged_batch"]

@@ -11,25 +11,38 @@ SLAs) over the ragged production sparse path:
 * ``RecEngine`` — drains the batcher, pads each micro-batch to a static
   *bucket* shape (batch rounded up to a bucket size with empty-bag dummy
   rows, flat index stream padded to bucket*T*max_l) so every bucket
-  compiles exactly once, then runs one of three embedding paths:
+  compiles exactly once, then serves one ragged forward whose embedding
+  stage is a single ``embedding_source.lookup_bags`` over the engine's
+  ``EmbeddingSource`` pytree.
 
-    - ``fixed``  — the legacy fixed-L engine (requires every bag to have
-                   exactly cfg.lookups_per_table ids; kept as the
-                   regression baseline);
-    - ``ragged`` — `dlrm.forward_ragged` over the sharded/replicated arena;
-    - ``cached`` — ragged + hot-row cache: top-K rows by trace frequency
-                   pinned in a small replicated arena (RecNMP's observation
-                   that Zipfian skew concentrates traffic), cold rows from
-                   the fp32 or int8 arena.
+  WHICH source serves is a declarative plan, not a kwarg soup: the engine
+  takes ``source=`` as a ``SourceSpec`` (or an already-built
+  ``EmbeddingSource``), with the old path strings kept as thin aliases:
 
-  Per-request latency percentiles (p50/p95/p99) and, on the cached path,
-  the measured hot hit rate are exported by ``stats()``.
+    - ``"fixed"``   — legacy fixed-L layout (regression baseline);
+    - ``"ragged"``  — fp arena, row-sharded when the plan has a mesh;
+    - ``"sharded"`` — ragged with the mesh *required* (a misconfigured
+                      replica can never silently fall back to replicated);
+    - ``"cached"``  — hot-row cache over any cold source (fp or int8,
+                      replicated or sharded).
+
+  The source is a call-time jit argument, so ``update_source`` swaps ANY
+  component — hot cache, quantized cold arena, the full fp arena —
+  without recompiling (same treedef + leaf shapes = compiled-cache hit),
+  and stale (lower-version) swaps are rejected at this boundary.
+
+  Per-request latency percentiles (p50/p95/p99) are exported by
+  ``stats()``; hit-rate accounting is per-path-correct: a non-cached
+  source reports ``cache_hit_rate=None`` (never a fake 0.0), and the
+  counters reset on version bumps so the post-swap rate reflects the
+  live cache.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +50,9 @@ import numpy as np
 
 from repro.configs.base import DLRMConfig
 from repro.core import dlrm
+from repro.core import embedding_source as es
 from repro.core import sparse_engine as se
+from repro.core.embedding_source import SourceSpec
 
 
 @dataclass
@@ -108,37 +123,41 @@ def tune_buckets(sizes: Sequence[int], max_batch: int,
 
 
 class RecEngine:
-    """Batcher-fed DLRM inference over the ragged sparse path.
+    """Batcher-fed DLRM inference; the embedding stage is ONE
+    ``lookup_bags`` over a swappable ``EmbeddingSource`` pytree.
 
-    Embedding sources (``path``):
-      * ``fixed``   — legacy fixed-L engine (regression baseline);
-      * ``ragged``  — `dlrm.forward_ragged`; the arena row-shards over the
-                      mesh's 'model' axis when a mesh is passed;
-      * ``sharded`` — ragged with the row-sharded arena made explicit: a
-                      mesh is *required*, so a misconfigured replica can
-                      never silently fall back to the replicated arena;
-      * ``cached``  — ragged + hot-row cache; with a mesh the cold pass
-                      runs through the row-sharded arena (the hot arena
-                      stays replicated on every chip).
+    ``source`` accepts:
+      * a path string — ``'fixed' | 'ragged' | 'sharded' | 'cached'`` —
+        the thin aliases onto a ``SourceSpec`` (cache_k / quantize_cold /
+        mesh feed the plan);
+      * a ``SourceSpec`` — the declarative plan, built against
+        ``params['arena']`` (+ ``cache_trace`` for the hot ranking);
+      * an ``EmbeddingSource`` — served as-is (ragged layout).
     """
 
-    PATHS = ("fixed", "ragged", "cached", "sharded")
+    PATHS = SourceSpec.PATH_NAMES
 
     def __init__(self, cfg: DLRMConfig, params: Dict, *,
-                 path: str = "ragged", max_l: Optional[int] = None,
+                 source: Union[str, SourceSpec, es.EmbeddingSource,
+                               None] = None,
+                 max_l: Optional[int] = None,
                  max_batch: int = 32, max_wait_ms: float = 2.0,
                  buckets: Sequence[int] = (1, 2, 4, 8, 16, 32),
                  cache_k: int = 0, cache_trace=None,
                  quantize_cold: bool = False,
                  auto_tune_after: Optional[int] = None,
-                 mesh: Optional[jax.sharding.Mesh] = None):
-        assert path in self.PATHS, path
-        if path == "sharded":
-            assert mesh is not None and se.mesh_shards(mesh) > 1, \
-                "path='sharded' needs a mesh with a >1 'model' axis"
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 path: Optional[str] = None):
+        if path is not None:
+            warnings.warn(
+                "RecEngine(path=...) is deprecated; pass source=<path "
+                "string | SourceSpec | EmbeddingSource> instead",
+                DeprecationWarning, stacklevel=2)
+            assert source is None, "pass source= OR path=, not both"
+            source = path
         self.cfg = cfg
+        self.source: Optional[es.EmbeddingSource] = None
         self.params = params
-        self.path = path
         self.spec = dlrm.arena_spec(cfg)
         self.max_l = max_l if max_l is not None else cfg.lookups_per_table
         self.mesh = mesh
@@ -152,60 +171,135 @@ class RecEngine:
         self.served = 0
         self._hits = 0.0
         self._lookups = 0
+        self.source_version = 0
 
-        self.cache: Optional[se.HotRowCache] = None
-        self.cache_version = 0
-        quantized = None
-        if path == "cached":
-            assert cache_k > 0, "cached path needs cache_k > 0"
-            counts = (cache_trace if cache_trace is not None
-                      else np.ones(self.spec.total_rows))
-            self.cache = se.build_hot_cache(params["arena"], self.spec,
-                                            counts, cache_k)
-            if quantize_cold:
-                quantized = se.quantize_arena(params["arena"])
-        self._quantized = quantized
+        if source is None:
+            source = "ragged"
+        if isinstance(source, (str, SourceSpec)):
+            self.plan: Optional[SourceSpec] = SourceSpec.from_path(
+                source, cache_k=cache_k, quantize_cold=quantize_cold,
+                mesh=mesh)
+            self.path = self.plan.path_name()
+            self.source = self.plan.build(params["arena"], self.spec,
+                                          cache_trace)
+        else:
+            assert isinstance(source, es.EmbeddingSource), source
+            assert not cache_k and cache_trace is None \
+                and not quantize_cold, \
+                ("cache_k/cache_trace/quantize_cold are SourceSpec plan "
+                 "inputs; a pre-built EmbeddingSource is served as-is — "
+                 "compose a CachedSource/QuantizedArena yourself or pass "
+                 "a SourceSpec instead of silently dropping the kwargs")
+            self.plan = None
+            self.path = es.describe_source(source)
+            self.source = source
+        self.layout = ("fixed" if self.plan is not None
+                       and self.plan.layout == "fixed" else "ragged")
 
-        if path == "fixed":
+        if self.layout == "fixed":
             step = dlrm.make_serve_step(cfg, mesh)
             self._serve = jax.jit(step)
         else:
-            # cache is a call-time pytree argument so that update_cache can
-            # swap in a new version without recompiling (same K = same
-            # shapes = cache hit in the jit lookup)
-            step = dlrm.make_ragged_serve_step(
-                cfg, max_l=self.max_l, mesh=mesh, quantized=quantized)
+            # the source is a call-time pytree argument so update_source
+            # can swap any component — hot cache, int8 cold arena, the
+            # full fp arena — without recompiling (same treedef + leaf
+            # shapes = compiled-cache hit)
+            step = dlrm.make_ragged_serve_step(cfg, max_l=self.max_l,
+                                               mesh=mesh)
             self._serve = jax.jit(step)
         self._hit_rate = jax.jit(
             lambda c, i, o: se.cache_hit_rate(c, self.spec, i, o))
 
-    def update_cache(self, cache: se.HotRowCache,
-                     version: Optional[int] = None) -> None:
-        """Atomically swap in a rebuilt hot cache (online-training refresh).
+    # -- the swap boundary --------------------------------------------------
 
-        The whole HotRowCache object is replaced at once — (hot_rows,
-        slot_of) are never observable in a torn state. Keeping K constant
-        across versions keeps the serve step's compiled shape unchanged.
+    @property
+    def params(self) -> Dict:
+        return self._params
+
+    @params.setter
+    def params(self, params: Dict) -> None:
+        """Swapping the live params rebinds the source's fp-arena leaves,
+        so 'params and cache swap together' keeps meaning one assignment
+        plus one ``update_cache`` — exactly the pre-API protocol. The
+        rebound source has identical leaf shapes, so no recompile."""
+        self._params = params
+        if getattr(self, "source", None) is not None:
+            self.source = es.rebind_arena(self.source, params["arena"])
+
+    @property
+    def cache(self) -> Optional[se.HotRowCache]:
+        """The hot cache currently served (None on non-cached sources)."""
+        return es.hot_cache_of(self.source)
+
+    @property
+    def cache_version(self) -> int:
+        """Back-compat alias for ``source_version``."""
+        return self.source_version
+
+    def update_source(self, source: es.EmbeddingSource,
+                      version: Optional[int] = None) -> None:
+        """Atomically swap the served embedding source (any component:
+        hot cache, quantized cold arena, full fp arena).
+
+        The whole source pytree is replaced at once — no torn state. The
+        new source must match the old one's treedef and leaf shapes /
+        dtypes, which is exactly the no-recompile condition: the jit'd
+        serve step sees the same compiled signature.
 
         Stale broadcasts are rejected: a versioned swap to anything below
         the currently served version would re-serve rows the trainer has
         since rewritten (broadcast artifacts arrive out of order across a
         fleet). Equal versions are allowed — between rebuilds the trainer
         republishes the same version with write-through-patched values.
+        Hit/lookup counters reset on version bumps so the reported hit
+        rate reflects the live cache, not its predecessors.
         """
-        assert self.path == "cached", "update_cache needs the cached path"
-        if version is not None and version < self.cache_version:
+        assert self.layout != "fixed", \
+            ("a fixed-layout engine serves from params['arena'] and "
+             "never reads engine.source — accepting this swap would "
+             "bump the version while serving stale embeddings forever")
+        if version is not None and version < self.source_version:
+            raise ValueError(
+                f"stale source broadcast: version {version} < served "
+                f"version {self.source_version} — reordered artifact, "
+                f"refusing to roll the serving source back")
+        old_leaves, old_def = jax.tree_util.tree_flatten(self.source)
+        new_leaves, new_def = jax.tree_util.tree_flatten(source)
+        assert old_def == new_def, \
+            ("source swap changed the pytree structure — this forces a "
+             "recompile on the serving hot path", old_def, new_def)
+        assert all(a.shape == b.shape and a.dtype == b.dtype
+                   for a, b in zip(old_leaves, new_leaves)), \
+            ("source swap changed leaf shapes/dtypes — this forces a "
+             "recompile on the serving hot path; keep trainer and engine "
+             "cache_k / arena shapes equal")
+        new_version = (version if version is not None
+                       else self.source_version + 1)
+        if new_version > self.source_version:
+            # per-path-correct accounting: the old cache's hits must not
+            # dilute the post-swap hit rate
+            self._hits = 0.0
+            self._lookups = 0
+        self.source = source
+        self.source_version = new_version
+
+    def update_cache(self, cache: se.HotRowCache,
+                     version: Optional[int] = None) -> None:
+        """Swap only the hot cache, keeping the cold source (the classic
+        online-training refresh; see ``update_source`` for the rules)."""
+        assert isinstance(self.source, es.CachedSource), \
+            "update_cache needs a cached source"
+        if version is not None and version < self.source_version:
             raise ValueError(
                 f"stale cache broadcast: version {version} < served "
-                f"version {self.cache_version} — reordered artifact, "
+                f"version {self.source_version} — reordered artifact, "
                 f"refusing to roll the hot arena back")
-        assert cache.hot_rows.shape == self.cache.hot_rows.shape, \
+        assert cache.hot_rows.shape == self.source.hot.hot_rows.shape, \
             ("cache swap changed K/D — this forces a recompile on the "
              "serving hot path; keep trainer and engine cache_k equal",
-             cache.hot_rows.shape, self.cache.hot_rows.shape)
-        self.cache = cache
-        self.cache_version = (version if version is not None
-                              else self.cache_version + 1)
+             cache.hot_rows.shape, self.source.hot.hot_rows.shape)
+        self.update_source(es.with_hot_cache(self.source, cache),
+                           version=version)
 
     def warmup(self):
         """Compile every bucket shape off the SLA clock.
@@ -215,7 +309,7 @@ class RecEngine:
         would show up as an SLA violation in production.
         """
         t = self.cfg.n_tables
-        l = self.cfg.lookups_per_table if self.path == "fixed" else 0
+        l = self.cfg.lookups_per_table if self.layout == "fixed" else 0
         dummy = [RecRequest(
             rid=-1, dense=np.zeros(self.cfg.dense_features, np.float32),
             sparse_ids=[np.zeros(l, np.int32)] * t)]
@@ -227,9 +321,9 @@ class RecEngine:
                                batch["offsets"]).block_until_ready()
 
     def _run_serve(self, batch: Dict):
-        if self.path == "fixed":
+        if self.layout == "fixed":
             return self._serve(self.params, batch)
-        return self._serve(self.params, batch, self.cache)
+        return self._serve(self.params, batch, self.source)
 
     def retune_buckets(self, n_buckets: int = 6,
                        warmup: bool = True) -> tuple:
@@ -254,7 +348,7 @@ class RecEngine:
         dense = np.zeros((bucket, self.cfg.dense_features), np.float32)
         for i, r in enumerate(reqs):
             dense[i] = r.dense
-        if self.path == "fixed":
+        if self.layout == "fixed":
             l = self.cfg.lookups_per_table
             idx = np.zeros((bucket, t, l), np.int32)
             for i, r in enumerate(reqs):
@@ -327,14 +421,19 @@ class RecEngine:
         arr = np.asarray(self.latencies)
         out = {"n": len(arr),
                "path": self.path,
+               "source": es.describe_source(self.source),
                "p50_ms": float(np.percentile(arr, 50) * 1e3),
                "p95_ms": float(np.percentile(arr, 95) * 1e3),
                "p99_ms": float(np.percentile(arr, 99) * 1e3),
                "mean_ms": float(arr.mean() * 1e3)}
-        if self._lookups:
-            out["cache_hit_rate"] = self._hits / self._lookups
-        if self.path == "cached":
-            out["cache_version"] = self.cache_version
+        # per-path-correct: None (not a fake 0.0) when no hot cache is
+        # serving, or when no lookups have hit the live cache version yet
+        if self.cache is None:
+            out["cache_hit_rate"] = None
+        else:
+            out["cache_hit_rate"] = (self._hits / self._lookups
+                                     if self._lookups else None)
+            out["cache_version"] = self.source_version
         out["buckets"] = self.buckets
         return out
 

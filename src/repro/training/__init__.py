@@ -62,17 +62,47 @@ and the engine do; neither ever mutates a published cache in place.
    single-process rule (``examples/serve_recommender.py --replicas N``
    demonstrates the full trainer -> N-replica loop).
 
-Sharding note: all three steps are unchanged by the row-sharded arena —
-the hot cache is a *replicated* copy of top-K rows wherever the cold rows
+4. **Generalized source swap (``VersionedSource``).** With the unified
+   ``EmbeddingSource`` API the cache-swap protocol is a special case of
+   a *source* swap: the serving engine holds one source pytree as a
+   call-time jit argument, and ``RecEngine.update_source`` atomically
+   replaces ANY component — the hot cache, the int8 cold arena
+   (``QuantizedArena``), or the full fp arena — under the same version
+   gate. The no-recompile condition is structural (same treedef + leaf
+   shapes/dtypes) and is asserted at the swap boundary.
+   ``VersionedSource`` is the broadcast artifact for the general case:
+   it serializes the *entire* source (hot rows + the whole cold arena),
+   so ``OnlineTrainer.publish_source()`` is full param publication for
+   the sparse stage — a cold remote replica needs no by-reference param
+   sharing to serve exactly (``serve_recommender.py --replicas N`` ends
+   with this demonstration). A recorded ``ShardedArena`` rebinds to the
+   consumer's own mesh at ``deserialize(blob, mesh=...)`` (meshes are
+   host topology, not state), or unwraps to its replicated inner source
+   when no mesh is given. Step-version semantics are unchanged:
+   strictly-newer adopts, same-or-older is absorbed.
+
+Quantized-cold maintenance note: when ``OnlineCacheConfig(quantize_cold=
+True)``, the trainer keeps an int8 mirror of the arena and re-quantizes
+ONLY the rows touched since the last rebuild (``QuantizedArena.
+quantize_rows``; exact vs a full requantization because row-wise
+quantization has no cross-row state); the patched mirror rides in the
+same version as the rebuilt hot cache, so ``sync_engine`` pushes (hot,
+int8 cold) as one consistent swap.
+
+Sharding note: all steps are unchanged by the row-sharded arena — the
+hot cache is a *replicated* copy of top-K rows wherever the cold rows
 live, and the sharded train step returns the same global touched-row ids
 the write-through patch consumes (``make_train_step_ragged(sharded=True)``
 updates each arena shard locally; see ``sparse_optim.shard_local_rows``).
 """
+from repro.core.embedding_source import VersionedSource
 from repro.training.online import (OnlineCacheConfig, OnlineTrainer,
                                    VersionedHotCache, make_drifting_zipf)
 from repro.training.sparse_optim import (SparseOptimizer, ragged_row_grads,
+                                         source_row_grads,
                                          sparse_rowwise_adagrad)
 
 __all__ = ["OnlineCacheConfig", "OnlineTrainer", "SparseOptimizer",
-           "VersionedHotCache", "make_drifting_zipf", "ragged_row_grads",
+           "VersionedHotCache", "VersionedSource", "make_drifting_zipf",
+           "ragged_row_grads", "source_row_grads",
            "sparse_rowwise_adagrad"]

@@ -22,7 +22,9 @@ import numpy as np
 
 from repro.configs.base import DLRMConfig
 from repro.core import dlrm
+from repro.core import embedding_source as es
 from repro.core import sparse_engine as se
+from repro.core.embedding_source import VersionedSource
 
 
 @dataclass(frozen=True)
@@ -30,6 +32,9 @@ class OnlineCacheConfig:
     k: int                       # hot rows pinned per rebuild
     refresh_every: int = 50      # steps between re-rank + rebuild
     decay: float = 0.98          # per-step histogram decay
+    quantize_cold: bool = False  # maintain an int8 cold arena alongside
+    #                              the fp one, re-quantizing only the rows
+    #                              touched since the last rebuild
 
 
 @dataclass(frozen=True)
@@ -123,6 +128,7 @@ class OnlineTrainer:
         self.params = params
         self.max_l = max_l
         self.cache_cfg = cache_cfg
+        self.mesh = mesh
         opt, step = dlrm.make_train_step_ragged(cfg, max_l=max_l, lr=lr,
                                                 sparse=sparse, mesh=mesh)
         self.opt_state = opt.init(params)
@@ -136,6 +142,15 @@ class OnlineTrainer:
         self.version = 0
         self.cache: Optional[se.HotRowCache] = None
         self.losses: list = []
+        # incremental quantized-cold maintenance (ROADMAP): keep an int8
+        # mirror of the arena and the set of rows dirtied since the last
+        # requant, so each rebuild patches O(touched) rows instead of
+        # re-quantizing the whole (V, D) arena
+        self.cold_q: Optional[es.QuantizedArena] = None
+        self._dirty_q = None
+        if cache_cfg is not None and cache_cfg.quantize_cold:
+            self.cold_q = es.QuantizedArena.from_arena(params["arena"])
+            self._dirty_q = np.zeros(params["arena"].shape[0], bool)
 
     # -- histogram ---------------------------------------------------------
 
@@ -157,6 +172,10 @@ class OnlineTrainer:
         self.params, self.opt_state, loss, rows = self._step(
             self.params, self.opt_state, batch_dev)
         self.steps += 1
+        if self._dirty_q is not None:
+            # the null/fill rows ride along harmlessly: re-quantizing an
+            # all-zero row is an exact no-op
+            self._dirty_q[np.asarray(rows)] = True
         if self.cache is not None:
             # step 1 of the protocol: values must never go stale
             self.cache = self._patch(self.cache, self.params["arena"],
@@ -177,17 +196,65 @@ class OnlineTrainer:
 
     def rebuild_cache(self) -> VersionedHotCache:
         """Step 2 of the protocol: re-rank from the decayed histogram and
-        publish a fresh cache under a bumped version."""
+        publish a fresh cache under a bumped version. When quantized-cold
+        maintenance is on, the int8 arena is patched in the same version
+        (only the rows dirtied since the last rebuild are re-quantized)."""
         assert self.cache_cfg is not None, "no cache_cfg configured"
         self.cache = se.build_hot_cache(self.params["arena"], self.spec,
                                         self.hist, self.cache_cfg.k)
+        if self.cold_q is not None:
+            self.refresh_quantized()
         self.version += 1
         return self.snapshot()
+
+    def refresh_quantized(self) -> es.QuantizedArena:
+        """Incremental quantized-cold maintenance: re-quantize exactly the
+        rows dirtied since the last refresh (O(touched), not O(V)); the
+        result is bit-identical to a full ``QuantizedArena.from_arena``
+        rebuild because row-wise quantization has no cross-row state."""
+        assert self.cold_q is not None, \
+            "no quantized cold arena maintained (cache_cfg.quantize_cold)"
+        rows = np.nonzero(self._dirty_q)[0]
+        if rows.size:
+            self.cold_q = self.cold_q.quantize_rows(
+                self.params["arena"], jnp.asarray(rows, jnp.int32))
+            self._dirty_q[:] = False
+        return self.cold_q
 
     def snapshot(self) -> Optional[VersionedHotCache]:
         if self.cache is None:
             return None
         return VersionedHotCache(cache=self.cache, version=self.version)
+
+    def serving_source(self) -> es.EmbeddingSource:
+        """The source a replica should serve right now: the live hot cache
+        over the maintained cold arena (int8 when quantize_cold, else the
+        fp arena), row-sharded when the trainer runs on a mesh — the same
+        composition a ``RecEngine(source='cached', mesh=...)`` serves, so
+        the artifact's structure matches sharded replicas too (a
+        replicated consumer simply deserializes without a mesh and the
+        ShardedArena wrapper unwraps). Structure-stable across versions,
+        so pushing it through ``RecEngine.update_source`` never
+        recompiles."""
+        cold = (self.cold_q if self.cold_q is not None
+                else es.FpArena(self.params["arena"]))
+        if se.mesh_shards(self.mesh) > 1:
+            cold = es.ShardedArena(cold, self.mesh)
+        if self.cache is None:
+            return cold
+        return es.CachedSource(hot=self.cache, cold=cold)
+
+    def publish_source(self) -> Optional[bytes]:
+        """Serialize the full serving source as a ``VersionedSource``
+        broadcast artifact — the arena-broadcast-for-params item: unlike
+        ``publish()`` (hot rows only, params shared by reference), this
+        blob carries every sparse-stage parameter a remote replica needs
+        (hot rows + the entire cold arena). None before the first rebuild.
+        """
+        if self.cache is None:
+            return None
+        return VersionedSource(source=self.serving_source(),
+                               version=self.version).serialize()
 
     def publish(self) -> Optional[bytes]:
         """Serialize the current snapshot as a fleet broadcast artifact
@@ -208,6 +275,11 @@ class OnlineTrainer:
         gate is the trainer *step*, not just the rebuild version: between
         rebuilds every optimizer step advances (params, patched cache) as
         a consistent pair, and serving should track it.
+
+        The push goes through ``update_source`` with a source rebuilt to
+        the engine's own structure: the fp cold leaf rebinds to the live
+        arena, an int8 cold leaf swaps to the trainer-maintained
+        ``cold_q`` (incremental requant) — one atomic swap, no recompile.
         """
         snap = self.snapshot()
         if snap is None:
@@ -215,10 +287,31 @@ class OnlineTrainer:
         if getattr(engine, "_trainer_step", -1) >= self.steps \
                 and getattr(engine, "cache_version", -1) >= snap.version:
             return False
-        engine.params = self.params
-        engine.update_cache(snap.cache, version=snap.version)
+        engine.params = self.params          # MLPs + fp-arena leaf rebind
+        new_source = self._match_structure(engine.source, snap.cache)
+        engine.update_source(new_source, version=snap.version)
         engine._trainer_step = self.steps
         return True
+
+    def _match_structure(self, engine_source,
+                         cache: se.HotRowCache) -> es.EmbeddingSource:
+        """Rebuild the engine's source shape from live trainer state."""
+        def cold_like(c):
+            if isinstance(c, es.ShardedArena):
+                return es.ShardedArena(cold_like(c.inner), c.mesh, c.axis)
+            if isinstance(c, es.QuantizedArena):
+                assert self.cold_q is not None, \
+                    ("the engine serves an int8 cold arena but the "
+                     "trainer maintains none — set "
+                     "OnlineCacheConfig(quantize_cold=True)")
+                return self.cold_q
+            if isinstance(c, es.FpArena):
+                return es.FpArena(self.params["arena"])
+            raise TypeError(f"cannot sync cold source {type(c).__name__}")
+        if isinstance(engine_source, es.CachedSource):
+            return es.CachedSource(hot=cache,
+                                   cold=cold_like(engine_source.cold))
+        return cold_like(engine_source)
 
 
 def make_drifting_zipf(cfg: DLRMConfig, *, batch_size: int, mean_l: int,

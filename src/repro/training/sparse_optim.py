@@ -66,6 +66,24 @@ def ragged_row_grads(d_bags: jax.Array, indices: jax.Array,
     return rows.astype(jnp.int32), grads
 
 
+def source_row_grads(spec, d_bags: jax.Array, indices: jax.Array,
+                     offsets: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Row gradients of ``lookup_bags(FpArena(arena), spec, …)`` w.r.t.
+    the arena, restricted to the touched rows.
+
+    This is the sparse-optimizer half of the source API's gradient
+    contract: ``jax.grad`` through ``lookup_bags`` routes into the
+    source's fp leaves via the kernel custom VJPs and materializes a
+    dense (V, D) scatter; this helper produces the *same* gradient as the
+    O(index-stream) pair (rows, row_grads) — the equivalence is pinned by
+    the source suite (tests/test_embedding_source.py). `indices`/`offsets`
+    are the per-table ragged batch exactly as passed to ``lookup_bags``.
+    """
+    flat = se.flatten_ragged_indices(spec, indices, offsets)
+    return ragged_row_grads(d_bags, flat, offsets,
+                            fill_row=spec.null_row)
+
+
 def shard_local_rows(rows: jax.Array, row_grads: jax.Array, *, lo,
                      vlocal: int, null_row: int
                      ) -> Tuple[jax.Array, jax.Array]:

@@ -1,0 +1,97 @@
+"""API-surface snapshot: the lookup zoo must not grow back.
+
+The whole point of the EmbeddingSource redesign is ONE ragged entry point
+and ONE fixed entry point over source values. This test pins the public
+names of the sparse-path modules against a committed manifest
+(tests/api_manifest.json): adding a new public `lookup*` function (or any
+public name) without updating the manifest fails CI, which forces the
+"new source = one dataclass, not six functions" conversation in review.
+
+Regenerate after an intentional API change:
+
+    PYTHONPATH=src python tests/test_api_surface.py --regen
+"""
+import importlib
+import inspect
+import json
+from pathlib import Path
+
+MANIFEST = Path(__file__).parent / "api_manifest.json"
+
+# the modules whose public surface is pinned (the sparse subsystem the
+# redesign consolidated)
+MODULES = (
+    "repro.core",
+    "repro.core.embedding_source",
+    "repro.core.sparse_engine",
+    "repro.core.dlrm",
+    "repro.serving",
+    "repro.serving.rec_engine",
+    "repro.training",
+    "repro.training.online",
+    "repro.training.sparse_optim",
+)
+
+
+def public_surface(module_name: str) -> list:
+    mod = importlib.import_module(module_name)
+    if hasattr(mod, "__all__"):
+        return sorted(mod.__all__)
+    names = []
+    for name, obj in vars(mod).items():
+        if name.startswith("_"):
+            continue
+        if inspect.ismodule(obj):
+            continue
+        # only names *defined* here count — re-imports are not surface
+        defined_in = getattr(obj, "__module__", module_name)
+        if defined_in != module_name:
+            continue
+        names.append(name)
+    return sorted(names)
+
+
+def current_surface() -> dict:
+    return {m: public_surface(m) for m in MODULES}
+
+
+def test_api_surface_matches_manifest():
+    want = json.loads(MANIFEST.read_text())
+    got = current_surface()
+    assert got.keys() == want.keys(), (sorted(got), sorted(want))
+    for mod in MODULES:
+        added = sorted(set(got[mod]) - set(want[mod]))
+        removed = sorted(set(want[mod]) - set(got[mod]))
+        assert not added and not removed, (
+            f"public surface of {mod} changed: added={added} "
+            f"removed={removed}. If intentional, regenerate the manifest "
+            f"(PYTHONPATH=src python tests/test_api_surface.py --regen) "
+            f"— and if you are adding a lookup* variant, STOP: implement "
+            f"an EmbeddingSource dataclass instead.")
+
+
+def test_lookup_zoo_is_shims_only():
+    """Every legacy lookup* name in sparse_engine must be a deprecation
+    shim (body delegates to embedding_source) — the zoo can shrink, never
+    re-grow as real implementations."""
+    from repro.core import sparse_engine as se
+    legacy = [n for n in vars(se) if n.startswith("lookup")]
+    assert sorted(legacy) == [
+        "lookup", "lookup_auto", "lookup_quantized", "lookup_ragged",
+        "lookup_ragged_auto", "lookup_ragged_cached",
+        "lookup_ragged_cached_q", "lookup_ragged_quantized",
+        "lookup_ragged_sharded", "lookup_sharded"]
+    for name in legacy:
+        src = inspect.getsource(getattr(se, name))
+        assert "_deprecated(" in src and "embedding_source" in src, \
+            f"{name} is not a deprecation shim"
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        MANIFEST.write_text(json.dumps(current_surface(), indent=2,
+                                       sort_keys=True) + "\n")
+        print(f"wrote {MANIFEST}")
+    else:
+        print(json.dumps(current_surface(), indent=2, sort_keys=True))

@@ -9,6 +9,7 @@ from hypothesis import strategies as st
 from repro.configs.dlrm import DLRM_CONFIGS, DLRM_SMOKE
 from repro.core import dense_engine as de
 from repro.core import dlrm, hybrid
+from repro.core import embedding_source as es
 from repro.core import sparse_engine as se
 
 
@@ -49,7 +50,7 @@ def test_lookup_matches_manual(rng):
     spec = se.ArenaSpec(2, 30, 4)
     arena = se.init_arena(jax.random.PRNGKey(1), spec)
     idx = jnp.asarray(rng.randint(0, 30, (3, 2, 5)), jnp.int32)
-    out = se.lookup(arena, spec, idx)
+    out = es.lookup_fixed(es.FpArena(arena), spec, idx)
     a = np.asarray(arena)
     for b in range(3):
         for t in range(2):
@@ -142,7 +143,7 @@ def test_pipelined_tail_dummy_is_null_and_equivalent(dlrm_setup):
     flat = np.asarray(se.flatten_indices(spec, dummy))
     assert (flat == spec.null_row).all()
     # the null row gathers to exactly zero
-    out = se.lookup(params["arena"], spec, dummy)
+    out = es.lookup_fixed(es.FpArena(params["arena"]), spec, dummy)
     assert float(jnp.abs(out).max()) == 0.0
     f = dlrm.forward(params, cfg, batch["dense"], batch["indices"])
     for n_micro in (1, 2, 4, 8):
@@ -158,8 +159,8 @@ def test_quantized_arena_lookup_error_bound(rng):
     q, scales = se.quantize_arena(arena)
     assert q.dtype == jnp.int8
     idx = jnp.asarray(rng.randint(0, 50, (4, 2, 6)), jnp.int32)
-    exact = se.lookup(arena, spec, idx)
-    approx = se.lookup_quantized(q, scales, spec, idx)
+    exact = es.lookup_fixed(es.FpArena(arena), spec, idx)
+    approx = es.lookup_fixed(es.QuantizedArena(q, scales), spec, idx)
     # error <= L * max_row_scale per component
     bound = 6 * float(scales.max()) + 1e-6
     assert float(jnp.abs(exact - approx).max()) <= bound

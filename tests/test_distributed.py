@@ -77,14 +77,16 @@ print(json.dumps({"err": err, "aux_local": float(aux_local),
 
 def test_dlrm_sharded_lookup_matches_replicated():
     r = run_with_devices("""
+from repro.core import embedding_source as es
 from repro.core import sparse_engine as se
 mesh = make_mesh((2, 4), ('data', 'model'))
 spec = se.ArenaSpec(3, 64, 8)
 arena = se.init_arena(jax.random.PRNGKey(0), spec, shards=4)
 rng = np.random.RandomState(0)
 idx = jnp.asarray(rng.randint(0, 64, (8, 3, 5)), jnp.int32)
-out_rep = se.lookup(arena, spec, idx)
-out_sh = jax.jit(lambda a, i: se.lookup_auto(a, spec, i, mesh))(arena, idx)
+out_rep = es.lookup_fixed(es.FpArena(arena), spec, idx)
+out_sh = jax.jit(lambda a, i: es.lookup_fixed(
+    es.ShardedArena(es.FpArena(a), mesh), spec, i))(arena, idx)
 print(json.dumps({"err": float(jnp.abs(out_rep - out_sh).max())}))
 """)
     assert r["err"] < 1e-5
@@ -115,6 +117,7 @@ print(json.dumps({"err": float(jnp.abs(f_fixed - f_ragged).max())}))
 
 def test_ragged_sharded_lookup_matches_replicated():
     r = run_with_devices("""
+from repro.core import embedding_source as es
 from repro.core import sparse_engine as se
 mesh = make_mesh((2, 4), ('data', 'model'))
 spec = se.ArenaSpec(3, 64, 8)
@@ -124,9 +127,10 @@ lens = rng.randint(0, 6, 24).astype(np.int32)
 off = np.zeros(25, np.int32); off[1:] = np.cumsum(lens)
 idx = jnp.asarray(rng.randint(0, 64, int(off[-1]) + 4), jnp.int32)
 off = jnp.asarray(off)
-out_rep = se.lookup_ragged(arena, spec, idx, off, max_l=5)
-out_sh = jax.jit(lambda a, i, o: se.lookup_ragged_auto(
-    a, spec, i, o, max_l=5, mesh=mesh))(arena, idx, off)
+out_rep = es.lookup_bags(es.FpArena(arena), spec, idx, off, max_l=5)
+out_sh = jax.jit(lambda a, i, o: es.lookup_bags(
+    es.ShardedArena(es.FpArena(a), mesh), spec, i, o,
+    max_l=5))(arena, idx, off)
 print(json.dumps({"err": float(jnp.abs(out_rep - out_sh).max())}))
 """)
     assert r["err"] < 1e-5

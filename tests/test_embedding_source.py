@@ -1,0 +1,669 @@
+"""Source-equivalence property suite for the unified EmbeddingSource API.
+
+ONE suite replaces the per-function equivalence copies that used to ride
+with each `lookup*` variant: every composition of
+{FpArena, QuantizedArena, ShardedArena, CachedSource} must agree with the
+plain FpArena reference on the same ragged bags — exactly for fp
+compositions, within the per-bag quantization bound for int8 cold rows —
+over the hard edges (empty bags, duplicate indices, all-null bags, padded
+tails, uneven vocab) and shard counts {1, 2, 4, 8}.
+
+Sharding is vmap-emulated in-process (axis_index/psum behave exactly as
+under shard_map) and exercised through the REAL shard_map entry point
+(`ShardedArena` on 2/4/8-way meshes) in a subprocess with fake host
+devices. Also locked down here: gradient routing through the source's fp
+leaves, the no-recompile source-swap contract, the incremental
+`quantize_rows` patch, the `VersionedSource` artifact, `SourceSpec`
+plans, and the deprecation shims (value-preserving + warning).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import dlrm
+from repro.core import embedding_source as es
+from repro.core import sparse_engine as se
+from repro.training import source_row_grads
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+SHARD_COUNTS = (1, 2, 4, 8)
+# rows_per_table whose total_rows (3*r + 1) never divide 8: the padded
+# trailing arena rows are in play at every shard count > 1
+UNEVEN_ROWS = (29, 30, 37)
+
+
+def _ragged_case(rng, spec, b, max_l, pad=0):
+    """Random ragged batch with every hard edge forced in: an empty bag,
+    a full bag, a duplicated index, an all-null-index bag, a padded
+    tail."""
+    n_bags = b * spec.n_tables
+    lens = rng.randint(0, max_l + 1, n_bags).astype(np.int32)
+    lens[0] = 0
+    lens[-1] = max_l
+    lens[1] = max(lens[1], 1)
+    off = np.zeros(n_bags + 1, np.int32)
+    np.cumsum(lens, out=off[1:])
+    n = int(off[-1])
+    idx = rng.randint(0, spec.rows_per_table, n + pad).astype(np.int32)
+    if n >= 2:
+        idx[off[-2]] = idx[0] if lens[0] else idx[n - 1]
+    t1 = 1 % spec.n_tables
+    idx[off[1]:off[2]] = spec.null_row - t1 * spec.rows_per_table
+    return jnp.asarray(idx), jnp.asarray(off)
+
+
+def _emulate_sharded(source, shards, spec, idx, off, max_l):
+    """lookup_bags over ShardedArena(source), with the shard axis
+    vmap-emulated (no mesh needed): every shard must reproduce the full
+    result after the psum."""
+    n_bags = off.shape[0] - 1
+    flat = se.flatten_ragged_indices(spec, idx, off)
+    leaves, treedef = jax.tree_util.tree_flatten(source)
+    shard_leaves = [x.reshape(shards, -1, *x.shape[1:]) for x in leaves]
+
+    def local(*ls):
+        src = jax.tree_util.tree_unflatten(treedef, ls)
+        return src.shard_reduce_flat(spec, flat, off, "x")
+
+    outs = jax.vmap(local, axis_name="x")(*shard_leaves)
+    outs = outs.astype(source.out_dtype).astype(jnp.float32)
+    return [o.reshape(n_bags // spec.n_tables, spec.n_tables, spec.dim)
+            .astype(source.out_dtype) for o in outs]
+
+
+# ---------------------------------------------------------------------------
+# the core equivalence property: every composition == FpArena reference
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=10)
+@given(st.sampled_from(SHARD_COUNTS), st.sampled_from(UNEVEN_ROWS),
+       st.integers(0, 2**31 - 1))
+def test_all_source_compositions_agree(shards, rpt, seed):
+    rng = np.random.RandomState(seed % (2**32 - 1))
+    spec = se.ArenaSpec(3, rpt, 8)
+    arena = se.init_arena(jax.random.PRNGKey(seed % 997), spec, shards,
+                          scale=1.0)
+    max_l = 5
+    idx, off = _ragged_case(rng, spec, b=3, max_l=max_l, pad=4)
+    counts = se.trace_row_counts(spec, idx, off)
+    cache = se.build_hot_cache(arena, spec, counts, k=8)
+    fp = es.FpArena(arena)
+    q = es.QuantizedArena.from_arena(arena)
+    q_bound = max_l * float(np.asarray(q.scales).max()) + 1e-6
+
+    want = np.asarray(es.lookup_bags(fp, spec, idx, off, max_l=max_l))
+
+    # exact fp compositions
+    got_c = np.asarray(es.lookup_bags(es.CachedSource(cache, fp), spec,
+                                      idx, off, max_l=max_l))
+    np.testing.assert_allclose(got_c, want, rtol=1e-5, atol=1e-5)
+
+    # int8 compositions within the per-bag dequantization bound
+    got_q = np.asarray(es.lookup_bags(q, spec, idx, off, max_l=max_l))
+    assert np.abs(got_q - want).max() <= q_bound
+    got_cq = np.asarray(es.lookup_bags(es.CachedSource(cache, q), spec,
+                                       idx, off, max_l=max_l))
+    assert np.abs(got_cq - want).max() <= q_bound
+
+    # sharded (vmap-emulated) == replicated, for fp and int8 cold
+    for src, ref, tol in ((fp, want, 1e-5), (q, got_q, 1e-5)):
+        for out in _emulate_sharded(src, shards, spec, idx, off, max_l):
+            np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5,
+                                       atol=tol)
+
+    # cached with a sharded cold pass: hot stays replicated, every shard
+    # reconstructs the exact replicated cached result (the shard-local
+    # composition shard_map runs, vmap-emulated here)
+    flat = se.flatten_ragged_indices(spec, idx, off)
+    slots = jnp.take(cache.slot_of, flat)
+    k = cache.hot_rows.shape[0] - 1
+    cold_idx = jnp.where(slots < k,
+                         jnp.asarray(spec.null_row, flat.dtype), flat)
+    from repro.kernels import ops
+    hot = ops.sparse_lengths_sum(cache.hot_rows, slots, off,
+                                 max_l=max_l).astype(jnp.float32)
+    colds = jax.vmap(
+        lambda a: es.FpArena(a).shard_reduce_flat(spec, cold_idx, off,
+                                                  "x"),
+        axis_name="x")(arena.reshape(shards, -1, spec.dim))
+    for s in range(shards):
+        got = np.asarray((hot + colds[s]).reshape(
+            (off.shape[0] - 1) // spec.n_tables, spec.n_tables,
+            spec.dim).astype(arena.dtype))
+        np.testing.assert_allclose(got, got_c, rtol=1e-5, atol=1e-5)
+
+
+def test_fixed_layout_sources_agree(rng):
+    """lookup_fixed over every source == lookup_bags over the equivalent
+    uniform ragged batch (the fixed path is one reshape away)."""
+    spec = se.ArenaSpec(3, 30, 8)
+    arena = se.init_arena(jax.random.PRNGKey(2), spec, scale=1.0)
+    idx = jnp.asarray(rng.randint(0, 30, (4, 3, 5)), jnp.int32)
+    b, t, l = idx.shape
+    flat_stream = se.flatten_indices(spec, idx).reshape(-1)
+    # undo table bases to get the per-table ragged stream
+    tables = jnp.tile(jnp.repeat(jnp.arange(t), l), b)
+    ragged_idx = flat_stream - tables * spec.rows_per_table
+    off = jnp.asarray(np.arange(b * t + 1, dtype=np.int32) * l)
+    counts = se.trace_row_counts(spec, ragged_idx, off)
+    cache = se.build_hot_cache(arena, spec, counts, k=8)
+    q = es.QuantizedArena.from_arena(arena)
+    for src, tol in ((es.FpArena(arena), 1e-5), (q, 1e-5),
+                     (es.CachedSource(cache, es.FpArena(arena)), 1e-5),
+                     (es.CachedSource(cache, q), 1e-5)):
+        fixed = np.asarray(es.lookup_fixed(src, spec, idx))
+        ragged = np.asarray(es.lookup_bags(src, spec, ragged_idx, off,
+                                           max_l=l))
+        np.testing.assert_allclose(fixed, ragged, rtol=1e-5, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# gradients route through the source's fp leaves
+# ---------------------------------------------------------------------------
+
+def test_grad_through_source_matches_row_grads(rng):
+    """jax.grad of a loss through lookup_bags(FpArena) == the scatter of
+    sparse_optim.source_row_grads — the O(N) training contract."""
+    spec = se.ArenaSpec(2, 20, 4)
+    arena = se.init_arena(jax.random.PRNGKey(1), spec)
+    idx, off = _ragged_case(np.random.RandomState(3), spec, b=3, max_l=4,
+                            pad=3)
+    n_bags = off.shape[0] - 1
+    w = jnp.asarray(rng.randn(n_bags // spec.n_tables, spec.n_tables,
+                              spec.dim), jnp.float32)
+
+    def loss(src):
+        return jnp.sum(es.lookup_bags(src, spec, idx, off, max_l=4) * w)
+
+    g = jax.grad(loss)(es.FpArena(arena)).arena     # dense (V, D) scatter
+
+    rows, row_g = source_row_grads(spec, w.reshape(n_bags, spec.dim), idx,
+                                   off)
+    dense = np.zeros(arena.shape, np.float32)
+    for r, gr in zip(np.asarray(rows), np.asarray(row_g)):
+        if r != spec.null_row:
+            dense[r] += gr
+    got = np.asarray(g).copy()
+    got[spec.null_row] = 0.0     # row-wise path pins the null row at zero
+    np.testing.assert_allclose(got, dense, rtol=1e-5, atol=1e-5)
+
+
+def test_grad_through_cached_source_splits_hot_cold(rng):
+    """Grads through a CachedSource land on the hot rows AND the cold
+    arena leaves — the whole source is differentiable state."""
+    spec = se.ArenaSpec(2, 15, 4)
+    arena = se.init_arena(jax.random.PRNGKey(5), spec)
+    idx, off = _ragged_case(np.random.RandomState(6), spec, b=2, max_l=3)
+    counts = se.trace_row_counts(spec, idx, off)
+    cache = se.build_hot_cache(arena, spec, counts, k=4)
+    src = es.CachedSource(cache, es.FpArena(arena))
+
+    def loss(s):
+        return jnp.sum(es.lookup_bags(s, spec, idx, off, max_l=3))
+
+    g = jax.grad(loss, allow_int=True)(src)   # slot_of/hot_ids are int32
+    g_hot = np.asarray(g.hot.hot_rows)
+    g_cold = np.asarray(g.cold.arena)
+    assert np.abs(g_hot[:-1]).max() > 0          # hot rows receive grads
+    # hot-slot grads + cold-arena grads partition the uncached arena grad
+    # exactly on every REAL row (miss positions park their grads on the
+    # zero null slot / null row, which the optimizers never train — the
+    # same sentinel contract as the forward)
+    g_ref = np.asarray(jax.grad(
+        lambda a: jnp.sum(es.lookup_bags(es.FpArena(a), spec, idx, off,
+                                         max_l=3)))(arena))
+    recomposed = g_cold.copy()
+    hot_ids = np.asarray(cache.hot_ids)
+    recomposed[hot_ids] += g_hot[:-1]
+    real = [r for r in range(spec.null_row)]
+    np.testing.assert_allclose(recomposed[real], g_ref[real], rtol=1e-5,
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# incremental quantized maintenance
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(1, 30), st.integers(0, 2**31 - 1))
+def test_quantize_rows_patch_exact_vs_full_rebuild(n_touched, seed):
+    rng = np.random.RandomState(seed % (2**32 - 1))
+    spec = se.ArenaSpec(2, 25, 8)
+    arena = se.init_arena(jax.random.PRNGKey(seed % 997), spec, scale=1.0)
+    cold_q = es.QuantizedArena.from_arena(arena)
+    rows = np.unique(rng.randint(0, spec.null_row, n_touched))
+    rows = np.concatenate([rows, rows[:1], [spec.null_row]])  # dup + null
+    arena2 = arena.at[jnp.asarray(rows[:-1])].add(
+        jnp.asarray(rng.randn(rows.size - 1, spec.dim), jnp.float32))
+    arena2 = arena2.at[spec.null_row:].set(0.0)
+    patched = cold_q.quantize_rows(arena2, jnp.asarray(rows, jnp.int32))
+    full = es.QuantizedArena.from_arena(arena2)
+    np.testing.assert_array_equal(np.asarray(patched.q),
+                                  np.asarray(full.q))
+    np.testing.assert_array_equal(np.asarray(patched.scales),
+                                  np.asarray(full.scales))
+
+
+def test_online_trainer_incremental_quantized_cold():
+    """OnlineTrainer(quantize_cold=True): at every rebuild the maintained
+    int8 arena equals a from-scratch requantization, touching only the
+    dirtied rows."""
+    from repro.configs.dlrm import DLRM_SMOKE
+    from repro.training import (OnlineCacheConfig, OnlineTrainer,
+                                make_drifting_zipf)
+    cfg = DLRM_SMOKE
+    params = dlrm.init(jax.random.PRNGKey(0), cfg)
+    trainer = OnlineTrainer(
+        cfg, params, max_l=6, lr=1e-2,
+        cache_cfg=OnlineCacheConfig(k=32, refresh_every=4,
+                                    quantize_cold=True))
+    gen = make_drifting_zipf(cfg, batch_size=8, mean_l=3, max_l=6, seed=7)
+    for step in range(8):
+        trainer.train_step(next(gen))
+        if (step + 1) % 4 == 0:      # a rebuild just ran
+            full = es.QuantizedArena.from_arena(trainer.params["arena"])
+            np.testing.assert_array_equal(np.asarray(trainer.cold_q.q),
+                                          np.asarray(full.q))
+            np.testing.assert_array_equal(
+                np.asarray(trainer.cold_q.scales),
+                np.asarray(full.scales))
+            assert not trainer._dirty_q.any()
+    trainer.train_step(next(gen))    # a step after the rebuild...
+    assert trainer._dirty_q.any()    # ...dirties rows again
+    # the serving source carries the maintained int8 cold arena
+    src = trainer.serving_source()
+    assert isinstance(src, es.CachedSource)
+    assert src.cold is trainer.cold_q
+
+
+# ---------------------------------------------------------------------------
+# SourceSpec plans and the no-recompile swap contract
+# ---------------------------------------------------------------------------
+
+def test_source_spec_from_path_mappings():
+    spec = se.ArenaSpec(2, 10, 4)
+    arena = se.init_arena(jax.random.PRNGKey(0), spec)
+    assert es.SourceSpec.from_path("ragged").build(arena, spec) \
+        == es.FpArena(arena)
+    assert es.SourceSpec.from_path("fixed").layout == "fixed"
+    cached = es.SourceSpec.from_path("cached", cache_k=4,
+                                     quantize_cold=True)
+    src = cached.build(arena, spec)
+    assert isinstance(src, es.CachedSource)
+    assert isinstance(src.cold, es.QuantizedArena)
+    assert cached.path_name() == "cached"
+    with pytest.raises(ValueError, match="sharded"):
+        es.SourceSpec.from_path("sharded", mesh=None)
+    with pytest.raises(AssertionError):
+        es.SourceSpec.from_path("cached", cache_k=0)
+
+
+def test_engine_source_swaps_never_recompile():
+    """Acceptance: swapping ANY versioned source component (hot cache,
+    quantized cold arena, full fp arena) on a live RecEngine hits the
+    same compiled executable, and stale versions are rejected."""
+    from repro.configs.dlrm import DLRM_SMOKE
+    from repro.data import DLRMSynthetic
+    from repro.serving import RecEngine, requests_from_ragged_batch
+    cfg = DLRM_SMOKE
+    spec = dlrm.arena_spec(cfg)
+    params = dlrm.init(jax.random.PRNGKey(0), cfg)
+    data = DLRMSynthetic(cfg, seed=3)
+    rb = data.ragged_batch(4, dist="poisson", mean_l=3, max_l=6)
+    counts = se.trace_row_counts(spec, rb["indices"], rb["offsets"])
+    eng = RecEngine(cfg, params, source="cached", cache_k=16,
+                    quantize_cold=True, cache_trace=counts, max_l=6,
+                    max_batch=8, max_wait_ms=0.0, buckets=(4, 8))
+    eng.warmup()
+    if not hasattr(eng._serve, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable")
+    compiled = eng._serve._cache_size()
+
+    def serve_round():
+        reqs = requests_from_ragged_batch(rb, cfg.n_tables)
+        for r in reqs:
+            eng.submit(r)
+        eng.step(force=True)
+        eng.drain()
+        return np.asarray([r.prob for r in reqs])
+
+    serve_round()
+    old = eng.source
+    # 1) hot-cache swap
+    eng.update_cache(se.build_hot_cache(params["arena"], spec, counts,
+                                        16), version=2)
+    serve_round()
+    # 2) quantized-cold swap
+    new_q = es.QuantizedArena.from_arena(params["arena"])
+    eng.update_source(es.CachedSource(eng.source.hot, new_q), version=3)
+    serve_round()
+    # 3) full fp-arena swap (via a rebuilt source of the same structure)
+    eng.update_source(es.CachedSource(
+        old.hot, es.QuantizedArena(new_q.q, new_q.scales)), version=4)
+    probs = serve_round()
+    assert eng._serve._cache_size() == compiled, "a source swap recompiled"
+    assert np.isfinite(probs).all()
+    # stale-version rejection still holds after all that
+    with pytest.raises(ValueError, match="stale"):
+        eng.update_source(eng.source, version=1)
+    # structure changes are refused (they would force a recompile)
+    with pytest.raises(AssertionError):
+        eng.update_source(es.FpArena(params["arena"]), version=9)
+
+    # 4) the FULL FP-ARENA swap on a cached-fp engine (the acceptance
+    # case the int8 engine above cannot express: its source holds no
+    # fp-arena leaf)
+    fp_eng = RecEngine(cfg, params, source="cached", cache_k=16,
+                       cache_trace=counts, max_l=6, max_batch=8,
+                       max_wait_ms=0.0, buckets=(4, 8))
+    fp_eng.warmup()
+    compiled_fp = fp_eng._serve._cache_size()
+    new_arena = (params["arena"] + 0.125).at[spec.null_row:].set(0.0)
+    new_hot = se.build_hot_cache(new_arena, spec, counts, 16)
+    fp_eng.update_source(es.CachedSource(new_hot, es.FpArena(new_arena)),
+                         version=2)
+    reqs = requests_from_ragged_batch(rb, cfg.n_tables)
+    for r in reqs:
+        fp_eng.submit(r)
+    fp_eng.step(force=True)
+    fp_eng.drain()
+    assert fp_eng._serve._cache_size() == compiled_fp, \
+        "the full fp-arena swap recompiled"
+    # and the swap actually took effect: serving matches the new arena
+    want = np.asarray(jax.nn.sigmoid(dlrm.forward_ragged(
+        dict(params, arena=new_arena), cfg, jnp.asarray(rb["dense"]),
+        jnp.asarray(rb["indices"]), jnp.asarray(rb["offsets"]),
+        max_l=6)))
+    got = np.asarray([r.prob for r in reqs])
+    np.testing.assert_allclose(got, want[:len(got)], rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_hit_rate_accounting_per_path():
+    """stats()['cache_hit_rate'] is None on non-cached sources and resets
+    on version bumps (post-swap rate reflects the live cache only)."""
+    from repro.configs.dlrm import DLRM_SMOKE
+    from repro.data import DLRMSynthetic
+    from repro.serving import RecEngine, requests_from_ragged_batch
+    cfg = DLRM_SMOKE
+    spec = dlrm.arena_spec(cfg)
+    params = dlrm.init(jax.random.PRNGKey(0), cfg)
+    data = DLRMSynthetic(cfg, seed=4)
+    rb = data.ragged_batch(4, dist="poisson", mean_l=3, max_l=6)
+
+    ragged = RecEngine(cfg, params, source="ragged", max_l=6, max_batch=8,
+                       max_wait_ms=0.0)
+    for r in requests_from_ragged_batch(rb, cfg.n_tables):
+        ragged.submit(r)
+    ragged.step(force=True)
+    ragged.drain()
+    assert ragged.stats()["cache_hit_rate"] is None
+
+    counts = se.trace_row_counts(spec, rb["indices"], rb["offsets"])
+    cached = RecEngine(cfg, params, source="cached", cache_k=16,
+                       cache_trace=counts, max_l=6, max_batch=8,
+                       max_wait_ms=0.0)
+    for r in requests_from_ragged_batch(rb, cfg.n_tables):
+        cached.submit(r)
+    cached.step(force=True)
+    cached.drain()
+    assert cached.stats()["cache_hit_rate"] > 0
+    assert cached._lookups > 0
+    cached.update_cache(se.build_hot_cache(params["arena"], spec, counts,
+                                           16), version=5)
+    assert cached._lookups == 0          # bump resets the counters
+    assert cached.stats()["cache_hit_rate"] is None   # no post-swap data
+    # republish at the SAME version (write-through) keeps the counters
+    for r in requests_from_ragged_batch(rb, cfg.n_tables):
+        cached.submit(r)
+    cached.step(force=True)
+    cached.drain()
+    n = cached._lookups
+    cached.update_cache(cached.cache, version=5)
+    assert cached._lookups == n
+
+
+# ---------------------------------------------------------------------------
+# VersionedSource artifact
+# ---------------------------------------------------------------------------
+
+def test_versioned_source_roundtrip_every_composition(rng):
+    spec = se.ArenaSpec(2, 12, 4)
+    arena = se.init_arena(jax.random.PRNGKey(0), spec)
+    counts = np.ones(spec.total_rows)
+    cache = se.build_hot_cache(arena, spec, counts, 4)
+    q = es.QuantizedArena.from_arena(arena)
+    for src in (es.FpArena(arena), q,
+                es.CachedSource(cache, es.FpArena(arena)),
+                es.CachedSource(cache, q)):
+        blob = es.VersionedSource(src, 7).serialize()
+        back = es.VersionedSource.deserialize(blob)
+        assert back.version == 7
+        assert type(back.source) is type(src)
+        for a, b in zip(jax.tree_util.tree_leaves(src),
+                        jax.tree_util.tree_leaves(back.source)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError, match="artifact"):
+        es.VersionedSource.deserialize(b"junk")
+
+
+def test_versioned_source_apply_order_free():
+    from repro.configs.dlrm import DLRM_SMOKE
+    from repro.serving import RecEngine
+    cfg = DLRM_SMOKE
+    spec = dlrm.arena_spec(cfg)
+    params = dlrm.init(jax.random.PRNGKey(0), cfg)
+    counts = np.ones(spec.total_rows)
+    eng = RecEngine(cfg, params, source="cached", cache_k=8,
+                    cache_trace=counts, max_l=6, max_batch=4)
+    art = es.VersionedSource(eng.source, 3)
+    blob = art.serialize()
+    back = es.VersionedSource.deserialize(blob)
+    assert back.apply(eng) and eng.source_version == 3
+    assert not back.apply(eng)                   # idempotent re-delivery
+    stale = es.VersionedSource(eng.source, 1)
+    assert not stale.apply(eng)                  # reordered: absorbed
+    assert eng.source_version == 3
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: value-preserving, and they warn
+# ---------------------------------------------------------------------------
+
+def test_legacy_lookup_shims_warn_and_agree(rng):
+    spec = se.ArenaSpec(3, 30, 8)
+    arena = se.init_arena(jax.random.PRNGKey(4), spec, scale=1.0)
+    q, scales = se.quantize_arena(arena)
+    idx_f = jnp.asarray(rng.randint(0, 30, (2, 3, 4)), jnp.int32)
+    idx, off = _ragged_case(np.random.RandomState(8), spec, b=2, max_l=4,
+                            pad=3)
+    counts = se.trace_row_counts(spec, idx, off)
+    cache = se.build_hot_cache(arena, spec, counts, 8)
+    fp = es.FpArena(arena)
+    qa = es.QuantizedArena(q, scales)
+
+    cases = [
+        (lambda: se.lookup(arena, spec, idx_f),
+         lambda: es.lookup_fixed(fp, spec, idx_f)),
+        (lambda: se.lookup_auto(arena, spec, idx_f),
+         lambda: es.lookup_fixed(fp, spec, idx_f)),
+        (lambda: se.lookup_quantized(q, scales, spec, idx_f),
+         lambda: es.lookup_fixed(qa, spec, idx_f)),
+        (lambda: se.lookup_ragged(arena, spec, idx, off, max_l=4),
+         lambda: es.lookup_bags(fp, spec, idx, off, max_l=4)),
+        (lambda: se.lookup_ragged_auto(arena, spec, idx, off, max_l=4),
+         lambda: es.lookup_bags(fp, spec, idx, off, max_l=4)),
+        (lambda: se.lookup_ragged_quantized(q, scales, spec, idx, off),
+         lambda: es.lookup_bags(qa, spec, idx, off, max_l=4)),
+        (lambda: se.lookup_ragged_cached(cache, arena, spec, idx, off,
+                                         max_l=4),
+         lambda: es.lookup_bags(es.CachedSource(cache, fp), spec, idx,
+                                off, max_l=4)),
+        (lambda: se.lookup_ragged_cached_q(cache, q, scales, spec, idx,
+                                           off, max_l=4),
+         lambda: es.lookup_bags(es.CachedSource(cache, qa), spec, idx,
+                                off, max_l=4)),
+    ]
+    for legacy, modern in cases:
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            old = np.asarray(legacy())
+        np.testing.assert_array_equal(old, np.asarray(modern()))
+
+    # the shard-local shims (must run under a named axis, padded arena)
+    shards = 2
+    arena = se.init_arena(jax.random.PRNGKey(4), spec, shards, scale=1.0)
+    fp = es.FpArena(arena)
+    view = arena.reshape(shards, -1, spec.dim)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        outs = jax.vmap(lambda a: se.lookup_ragged_sharded(
+            a, spec, idx, off, "x"), axis_name="x")(view)
+    want = np.asarray(es.lookup_bags(fp, spec, idx, off, max_l=4))
+    for s in range(shards):
+        np.testing.assert_allclose(np.asarray(outs[s]), want, rtol=1e-5,
+                                   atol=1e-5)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        outs = jax.vmap(lambda a: se.lookup_sharded(a, spec, idx_f, "x"),
+                        axis_name="x")(view)
+    want = np.asarray(es.lookup_fixed(fp, spec, idx_f))
+    for s in range(shards):
+        np.testing.assert_allclose(np.asarray(outs[s]), want, rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_engine_and_dlrm_deprecated_kwargs_warn():
+    from repro.configs.dlrm import DLRM_SMOKE
+    from repro.data import DLRMSynthetic
+    from repro.serving import RecEngine
+    cfg = DLRM_SMOKE
+    spec = dlrm.arena_spec(cfg)
+    params = dlrm.init(jax.random.PRNGKey(0), cfg)
+    data = DLRMSynthetic(cfg, seed=1)
+    rb = data.ragged_batch(2, dist="poisson", mean_l=2, max_l=4)
+    counts = se.trace_row_counts(spec, rb["indices"], rb["offsets"])
+    cache = se.build_hot_cache(params["arena"], spec, counts, 8)
+    args = (jnp.asarray(rb["dense"]), jnp.asarray(rb["indices"]),
+            jnp.asarray(rb["offsets"]))
+    with pytest.warns(DeprecationWarning, match="source="):
+        old = dlrm.forward_ragged(params, cfg, *args, max_l=4,
+                                  cache=cache)
+    new = dlrm.forward_ragged(
+        params, cfg, *args, max_l=4,
+        source=es.CachedSource(cache, es.FpArena(params["arena"])))
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+    with pytest.warns(DeprecationWarning, match="path"):
+        RecEngine(cfg, params, path="ragged", max_l=4, max_batch=4)
+    # conflicting source= + deprecated kwargs must be loud, not silent
+    with pytest.raises(ValueError, match="BOTH"):
+        dlrm.forward_ragged(params, cfg, *args, max_l=4,
+                            source=es.FpArena(params["arena"]),
+                            cache=cache)
+    # make_ragged_serve_step back-compat: build-time cache= kwarg, and a
+    # bare HotRowCache as the per-call third argument, both warn and
+    # serve exactly what the equivalent CachedSource serves
+    batch = {"dense": args[0], "indices": args[1], "offsets": args[2]}
+    want = np.asarray(jax.nn.sigmoid(new))
+    with pytest.warns(DeprecationWarning, match="cache="):
+        legacy_step = dlrm.make_ragged_serve_step(cfg, max_l=4,
+                                                  cache=cache)
+    with pytest.warns(DeprecationWarning):     # _legacy_source at trace
+        got = np.asarray(legacy_step(params, batch))
+    np.testing.assert_array_equal(got, want)
+    step = dlrm.make_ragged_serve_step(cfg, max_l=4)
+    with pytest.warns(DeprecationWarning, match="HotRowCache"):
+        got = np.asarray(step(params, batch, cache))
+    np.testing.assert_array_equal(got, want)
+    # a per-call bare-HotRowCache swap must keep the build-time int8
+    # cold arena (the legacy cached_q contract), not degrade to fp
+    q, scales = se.quantize_arena(params["arena"])
+    with pytest.warns(DeprecationWarning):
+        q_step = dlrm.make_ragged_serve_step(cfg, max_l=4, cache=cache,
+                                             quantized=(q, scales))
+        base = np.asarray(q_step(params, batch))
+        swapped = np.asarray(q_step(params, batch, cache))
+    np.testing.assert_array_equal(base, swapped)
+    # SourceSpec string shorthands refuse silently-dropped cache config
+    with pytest.raises(AssertionError, match="cached"):
+        es.SourceSpec.from_path("ragged", cache_k=64)
+    # fixed layout cannot consume cached/quantized sources (it serves
+    # through the legacy fixed-L step) — refused at plan time, and a
+    # fixed engine refuses source swaps it would never serve
+    with pytest.raises(ValueError, match="fixed"):
+        es.SourceSpec(layout="fixed", cache_k=8)
+    fixed_eng = RecEngine(cfg, params, source="fixed", max_batch=4)
+    with pytest.raises(AssertionError):
+        fixed_eng.update_source(es.FpArena(params["arena"]), version=1)
+
+
+# ---------------------------------------------------------------------------
+# the REAL shard_map entry point (subprocess, fake host devices)
+# ---------------------------------------------------------------------------
+
+def _run_with_devices(code: str, n: int = 8, timeout: int = 480) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = SRC
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    prelude = textwrap.dedent("""
+        import json, jax, jax.numpy as jnp, numpy as np
+        from repro.core import embedding_source as es
+        from repro.core import sparse_engine as se
+        from repro.launch.mesh import make_mesh
+    """)
+    out = subprocess.run([sys.executable, "-c", prelude + code],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_source_matches_replicated_shard_map():
+    """ShardedArena (fp and int8, bare and as a cached cold pass) on
+    2/4/8-way meshes through the real shard_map == replicated."""
+    r = _run_with_devices("""
+spec = se.ArenaSpec(3, 37, 8)
+rng = np.random.RandomState(0)
+errs = {}
+for shards in (2, 4, 8):
+    mesh = make_mesh((shards,), ("model",))
+    arena = se.init_arena(jax.random.PRNGKey(0), spec, shards, scale=1.0)
+    lens = rng.randint(0, 5, 9).astype(np.int32)
+    off = np.zeros(10, np.int32); off[1:] = np.cumsum(lens)
+    idx = jnp.asarray(rng.randint(0, 37, int(off[-1]) + 4), jnp.int32)
+    off = jnp.asarray(off)
+    fp = es.FpArena(arena)
+    q = es.QuantizedArena.from_arena(arena)
+    counts = se.trace_row_counts(spec, idx, off)
+    cache = se.build_hot_cache(arena, spec, counts, 8)
+    want = es.lookup_bags(fp, spec, idx, off, max_l=4)
+    want_q = es.lookup_bags(q, spec, idx, off, max_l=4)
+    want_c = es.lookup_bags(es.CachedSource(cache, fp), spec, idx, off,
+                            max_l=4)
+    sh_fp = es.ShardedArena(fp, mesh)
+    sh_q = es.ShardedArena(q, mesh)
+    got = jax.jit(lambda i, o: es.lookup_bags(sh_fp, spec, i, o,
+                                              max_l=4))(idx, off)
+    got_q = jax.jit(lambda i, o: es.lookup_bags(sh_q, spec, i, o,
+                                                max_l=4))(idx, off)
+    got_c = jax.jit(lambda i, o: es.lookup_bags(
+        es.CachedSource(cache, sh_fp), spec, i, o, max_l=4))(idx, off)
+    errs[shards] = [float(jnp.abs(got - want).max()),
+                    float(jnp.abs(got_q - want_q).max()),
+                    float(jnp.abs(got_c - want_c).max())]
+print(json.dumps({str(k): v for k, v in errs.items()}))
+""")
+    for shards, (e_fp, e_q, e_c) in r.items():
+        assert e_fp < 1e-5, (shards, e_fp)
+        assert e_q < 1e-5, (shards, e_q)
+        assert e_c < 1e-5, (shards, e_c)

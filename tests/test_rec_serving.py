@@ -11,6 +11,7 @@ from hypothesis import strategies as st
 
 from repro.configs.dlrm import DLRM_SMOKE
 from repro.core import dlrm, hybrid
+from repro.core import embedding_source as es
 from repro.core import sparse_engine as se
 from repro.data import DLRMSynthetic
 from repro.serving import (RecBatcher, RecEngine, RecRequest,
@@ -71,7 +72,9 @@ def test_cached_forward_matches_uncached(setup):
     args = (jnp.asarray(rb["dense"]), jnp.asarray(rb["indices"]),
             jnp.asarray(rb["offsets"]))
     f = dlrm.forward_ragged(params, cfg, *args, max_l=6)
-    c = dlrm.forward_ragged(params, cfg, *args, max_l=6, cache=cache)
+    c = dlrm.forward_ragged(
+        params, cfg, *args, max_l=6,
+        source=es.CachedSource(cache, es.FpArena(params["arena"])))
     np.testing.assert_allclose(np.asarray(f), np.asarray(c), rtol=1e-4,
                                atol=1e-4)
 
@@ -119,7 +122,7 @@ def _run_requests(engine, reqs):
 
 def test_rec_engine_end_to_end_ragged(setup):
     cfg, params, data = setup
-    engine = RecEngine(cfg, params, path="ragged", max_l=6,
+    engine = RecEngine(cfg, params, source="ragged", max_l=6,
                        max_batch=8, max_wait_ms=0.0, buckets=(2, 4, 8))
     rb = data.ragged_batch(13, dist="poisson", mean_l=3, max_l=6)
     reqs = requests_from_ragged_batch(rb, cfg.n_tables)
@@ -145,7 +148,7 @@ def test_rec_engine_paths_agree(setup):
     probs = {}
     for path in ("fixed", "ragged", "cached"):   # 'sharded' needs a mesh —
         # covered in test_sharded_sparse.py under fake devices
-        engine = RecEngine(cfg, params, path=path, max_l=l, max_batch=8,
+        engine = RecEngine(cfg, params, source=path, max_l=l, max_batch=8,
                            max_wait_ms=0.0,
                            cache_k=16 if path == "cached" else 0,
                            cache_trace=counts)
@@ -167,7 +170,7 @@ def test_rec_engine_bucket_padding_is_inert(setup):
     rb = data.ragged_batch(1, dist="poisson", mean_l=3, max_l=6)
     got = []
     for buckets in ((1,), (4,), (16,)):
-        engine = RecEngine(cfg, params, path="ragged", max_l=6,
+        engine = RecEngine(cfg, params, source="ragged", max_l=6,
                            max_batch=max(buckets), max_wait_ms=0.0,
                            buckets=buckets)
         reqs = requests_from_ragged_batch(rb, cfg.n_tables)
@@ -182,9 +185,9 @@ def test_rec_engine_quantized_cold_close(setup):
     rb = data.ragged_batch(6, dist="poisson", mean_l=3, max_l=6)
     spec = dlrm.arena_spec(cfg)
     counts = se.trace_row_counts(spec, rb["indices"], rb["offsets"])
-    ref_engine = RecEngine(cfg, params, path="ragged", max_l=6,
+    ref_engine = RecEngine(cfg, params, source="ragged", max_l=6,
                            max_batch=8, max_wait_ms=0.0)
-    q_engine = RecEngine(cfg, params, path="cached", max_l=6, max_batch=8,
+    q_engine = RecEngine(cfg, params, source="cached", max_l=6, max_batch=8,
                          max_wait_ms=0.0, cache_k=32, cache_trace=counts,
                          quantize_cold=True)
     reqs_a = requests_from_ragged_batch(rb, cfg.n_tables)
@@ -233,7 +236,7 @@ def test_rec_engine_retune_with_no_observations(setup):
     """retune_buckets before any traffic must not crash and must keep the
     engine serviceable (empty histogram -> default buckets)."""
     cfg, params, data = setup
-    engine = RecEngine(cfg, params, path="ragged", max_l=6, max_batch=8,
+    engine = RecEngine(cfg, params, source="ragged", max_l=6, max_batch=8,
                        max_wait_ms=0.0)
     buckets = engine.retune_buckets(warmup=False)
     assert buckets == (1, 8)
@@ -249,9 +252,9 @@ def test_rec_engine_retune_preserves_predictions(setup):
     cfg, params, data = setup
     rb = data.ragged_batch(24, dist="poisson", mean_l=3, max_l=6)
 
-    ref = RecEngine(cfg, params, path="ragged", max_l=6, max_batch=8,
+    ref = RecEngine(cfg, params, source="ragged", max_l=6, max_batch=8,
                     max_wait_ms=0.0)
-    tuned = RecEngine(cfg, params, path="ragged", max_l=6, max_batch=8,
+    tuned = RecEngine(cfg, params, source="ragged", max_l=6, max_batch=8,
                       max_wait_ms=0.0, auto_tune_after=4)
     probs = []
     for engine in (ref, tuned):
@@ -275,7 +278,7 @@ def test_rec_engine_update_cache_swaps_without_staleness(setup):
     spec = dlrm.arena_spec(cfg)
     rb = data.ragged_batch(6, dist="poisson", mean_l=3, max_l=6)
     counts = se.trace_row_counts(spec, rb["indices"], rb["offsets"])
-    engine = RecEngine(cfg, params, path="cached", max_l=6, max_batch=8,
+    engine = RecEngine(cfg, params, source="cached", max_l=6, max_batch=8,
                        max_wait_ms=0.0, cache_k=16, cache_trace=counts)
     assert engine.cache_version == 0
 
@@ -307,7 +310,7 @@ def test_rec_engine_rejects_stale_cache_version(setup):
     spec = dlrm.arena_spec(cfg)
     rb = data.ragged_batch(4, dist="poisson", mean_l=3, max_l=6)
     counts = se.trace_row_counts(spec, rb["indices"], rb["offsets"])
-    engine = RecEngine(cfg, params, path="cached", max_l=6, max_batch=8,
+    engine = RecEngine(cfg, params, source="cached", max_l=6, max_batch=8,
                        max_wait_ms=0.0, cache_k=16, cache_trace=counts)
     fresh = se.build_hot_cache(params["arena"], spec, counts, 16)
     engine.update_cache(fresh, version=5)
@@ -350,7 +353,7 @@ def test_versioned_cache_broadcast_roundtrip_and_apply(setup):
     with pytest.raises(ValueError, match="artifact"):
         VersionedHotCache.deserialize(b"not an artifact")
 
-    replicas = [RecEngine(cfg, params, path="cached", max_l=6, max_batch=8,
+    replicas = [RecEngine(cfg, params, source="cached", max_l=6, max_batch=8,
                           max_wait_ms=0.0, cache_k=16, cache_trace=counts)
                 for _ in range(2)]
     for eng in replicas:

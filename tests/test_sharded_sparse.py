@@ -11,8 +11,9 @@ Three layers, matching how the subsystem composes:
   NOT divide the shard count (padded-rows edge), empty bags, duplicate
   indices, and all-null-index bags.
 * **shard_map on a real mesh** (subprocess with 8 fake host devices, the
-  test_distributed.py pattern): `lookup_ragged_cached(mesh=...)`,
-  `RecEngine(path='sharded'|'cached', mesh=...)`, and
+  test_distributed.py pattern): `lookup_bags` over
+  `CachedSource(..., ShardedArena(...))` compositions,
+  `RecEngine(source='sharded'|'cached', mesh=...)`, and
   `make_train_step_ragged(sharded=True)` — the exact production entry
   points.
 * **exactness acceptance**: sharded-cold cached == replicated cached ==
@@ -36,6 +37,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.core import embedding_source as es
 from repro.core import sparse_engine as se
 from repro.training import sparse_optim as so
 
@@ -91,10 +93,11 @@ def test_sharded_cold_cached_matches_replicated_and_plain(shards, rpt,
     counts = se.trace_row_counts(spec, idx, off)
     cache = se.build_hot_cache(arena, spec, counts, k=8)
 
-    plain = np.asarray(se.lookup_ragged(arena, spec, idx, off,
-                                        max_l=max_l))
-    repl = np.asarray(se.lookup_ragged_cached(cache, arena, spec, idx,
-                                              off, max_l=max_l))
+    plain = np.asarray(es.lookup_bags(es.FpArena(arena), spec, idx, off,
+                                      max_l=max_l))
+    repl = np.asarray(es.lookup_bags(
+        es.CachedSource(cache, es.FpArena(arena)), spec, idx, off,
+        max_l=max_l))
     np.testing.assert_allclose(repl, plain, rtol=1e-5, atol=1e-6)
 
     # the exact shard-local composition shard_map runs: replicated hot
@@ -126,8 +129,9 @@ def test_sharded_cold_cached_q_matches_replicated(shards, seed):
     counts = se.trace_row_counts(spec, idx, off)
     cache = se.build_hot_cache(arena, spec, counts, k=8)
 
-    repl = np.asarray(se.lookup_ragged_cached_q(cache, q, scales, spec,
-                                                idx, off, max_l=max_l))
+    repl = np.asarray(es.lookup_bags(
+        es.CachedSource(cache, es.QuantizedArena(q, scales)), spec, idx,
+        off, max_l=max_l))
     hot, cold_idx, n_bags = se.cache_split(cache, spec, idx, off, max_l)
     colds = jax.vmap(
         lambda qq, ss: se.ragged_partial_reduce_q(qq, ss, cold_idx, off,
@@ -150,10 +154,14 @@ def test_lookup_ragged_sharded_uneven_vocab(shards, rpt, seed):
     spec = se.ArenaSpec(3, rpt, 8)
     arena = se.init_arena(jax.random.PRNGKey(seed % 997), spec, shards)
     idx, off = _ragged_case(rng, spec, b=2, max_l=4, pad=2)
-    want = np.asarray(se.lookup_ragged(arena, spec, idx, off, max_l=4))
+    want = np.asarray(es.lookup_bags(es.FpArena(arena), spec, idx, off,
+                                     max_l=4))
+    flat = se.flatten_ragged_indices(spec, idx, off)
+    n_bags = off.shape[0] - 1
     outs = jax.vmap(
-        lambda a: se.lookup_ragged_sharded(a, spec, idx, off, "x"),
-        axis_name="x")(_shard_view(arena, shards))
+        lambda a: es.FpArena(a).shard_reduce_flat(spec, flat, off, "x")
+        .reshape(n_bags // spec.n_tables, spec.n_tables, spec.dim)
+        .astype(arena.dtype), axis_name="x")(_shard_view(arena, shards))
     for s in range(shards):
         np.testing.assert_allclose(np.asarray(outs[s]), want, rtol=1e-5,
                                    atol=1e-6)
@@ -239,6 +247,7 @@ def run_with_devices(code: str, n: int = 8, timeout: int = 480) -> dict:
         import json, jax, jax.numpy as jnp, numpy as np
         from repro.configs.dlrm import DLRM_SMOKE
         from repro.core import dlrm
+        from repro.core import embedding_source as es
         from repro.core import sparse_engine as se
         from repro.launch.mesh import make_mesh
     """)
@@ -265,15 +274,19 @@ for shards in (2, 4, 8):
     idx, off = jnp.asarray(rb["indices"]), jnp.asarray(rb["offsets"])
     counts = se.trace_row_counts(spec, rb["indices"], rb["offsets"])
     cache = se.build_hot_cache(arena, spec, counts, k=64)
-    plain = se.lookup_ragged(arena, spec, idx, off, max_l=6)
-    repl = se.lookup_ragged_cached(cache, arena, spec, idx, off, max_l=6)
-    shrd = se.lookup_ragged_cached(cache, arena, spec, idx, off, max_l=6,
-                                   mesh=mesh)
-    q, scales = se.quantize_arena(arena)
-    q_repl = se.lookup_ragged_cached_q(cache, q, scales, spec, idx, off,
-                                       max_l=6)
-    q_shrd = se.lookup_ragged_cached_q(cache, q, scales, spec, idx, off,
-                                       max_l=6, mesh=mesh)
+    fp = es.FpArena(arena)
+    qa = es.QuantizedArena.from_arena(arena)
+    plain = es.lookup_bags(fp, spec, idx, off, max_l=6)
+    repl = es.lookup_bags(es.CachedSource(cache, fp), spec, idx, off,
+                          max_l=6)
+    shrd = es.lookup_bags(
+        es.CachedSource(cache, es.ShardedArena(fp, mesh)), spec, idx,
+        off, max_l=6)
+    q_repl = es.lookup_bags(es.CachedSource(cache, qa), spec, idx, off,
+                            max_l=6)
+    q_shrd = es.lookup_bags(
+        es.CachedSource(cache, es.ShardedArena(qa, mesh)), spec, idx,
+        off, max_l=6)
     errs[shards] = [float(jnp.abs(shrd - plain).max()),
                     float(jnp.abs(shrd - repl).max()),
                     float(jnp.abs(q_shrd - q_repl).max())]
@@ -300,9 +313,9 @@ rb = data.ragged_batch(6, mean_l=3, max_l=6)
 counts = se.trace_row_counts(spec, rb["indices"], rb["offsets"])
 probs = {}
 for name, kw in (
-    ("ragged", dict(path="ragged")),
-    ("sharded", dict(path="sharded", mesh=mesh)),
-    ("cached_sharded", dict(path="cached", mesh=mesh, cache_k=32,
+    ("ragged", dict(source="ragged")),
+    ("sharded", dict(source="sharded", mesh=mesh)),
+    ("cached_sharded", dict(source="cached", mesh=mesh, cache_k=32,
                             cache_trace=counts)),
 ):
     eng = RecEngine(cfg, params, max_l=6, max_batch=8, max_wait_ms=0.0,
@@ -387,14 +400,36 @@ for _ in range(6):
     trainer.train_step(b)
 rb = data.ragged_batch(4, mean_l=3, max_l=max_l)
 idx, off = jnp.asarray(rb["indices"]), jnp.asarray(rb["offsets"])
-plain = se.lookup_ragged(trainer.params["arena"], spec, idx, off,
-                         max_l=max_l)
-cached = se.lookup_ragged_cached(trainer.cache, trainer.params["arena"],
-                                 spec, idx, off, max_l=max_l, mesh=mesh)
+plain = es.lookup_bags(es.FpArena(trainer.params["arena"]), spec, idx,
+                       off, max_l=max_l)
+cached = es.lookup_bags(
+    es.CachedSource(trainer.cache, es.ShardedArena(
+        es.FpArena(trainer.params["arena"]), mesh)), spec, idx, off,
+    max_l=max_l)
+# a sharded trainer publishes a SHARDED-structured artifact: a sharded
+# replica adopts it (mesh rebind, same treedef -> no recompile), and a
+# replicated consumer deserializes without a mesh and gets the unwrapped
+# inner source
+from repro.serving import RecEngine
+src = trainer.serving_source()
+sharded_structure = int(isinstance(src.cold, es.ShardedArena))
+blob = trainer.publish_source()
+eng = RecEngine(cfg, trainer.params, source="cached", mesh=mesh,
+                cache_k=64, cache_trace=trainer.hist, max_l=max_l,
+                max_batch=4)
+art = es.VersionedSource.deserialize(blob, mesh=mesh)
+adopted = int(art.apply(eng))
+repl = es.VersionedSource.deserialize(blob)          # no mesh: unwraps
+repl_ok = int(isinstance(repl.source.cold, es.FpArena))
 print(json.dumps({"err": float(jnp.abs(cached - plain).max()),
                   "version": trainer.version,
                   "loss0": trainer.losses[0],
-                  "lossN": trainer.losses[-1]}))
+                  "lossN": trainer.losses[-1],
+                  "sharded_structure": sharded_structure,
+                  "adopted": adopted, "repl_ok": repl_ok}))
 """)
     assert r["err"] < 1e-5
     assert r["version"] >= 1
+    assert r["sharded_structure"] == 1
+    assert r["adopted"] == 1
+    assert r["repl_ok"] == 1

@@ -12,6 +12,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.core import embedding_source as es
 from repro.core import sparse_engine as se
 from repro.kernels import embedding_gather as eg
 from repro.kernels import ref as kref
@@ -113,10 +114,13 @@ def test_lookup_sharded_matches_lookup(shards, seed):
                     - 2 * spec.rows_per_table)        # padded (zero) row
     idx = jnp.asarray(idx)
 
-    want = se.lookup(arena, spec, idx)
+    want = es.lookup_fixed(es.FpArena(arena), spec, idx)
+    flat = se.flatten_indices(spec, idx)
     shard_view = jnp.reshape(arena, (shards, -1, spec.dim))
-    outs = jax.vmap(lambda a: se.lookup_sharded(a, spec, idx, "x"),
-                    axis_name="x")(shard_view)
+    outs = jax.vmap(
+        lambda a: es.FpArena(a).shard_reduce_fixed(spec, flat, "x")
+        .reshape(idx.shape[0], idx.shape[1], spec.dim)
+        .astype(arena.dtype), axis_name="x")(shard_view)
     for s in range(shards):
         np.testing.assert_allclose(np.asarray(outs[s]), np.asarray(want),
                                    rtol=1e-5, atol=1e-5)
@@ -134,14 +138,17 @@ def test_lookup_ragged_sharded_matches_unsharded(shards, seed):
     arena = se.init_arena(jax.random.PRNGKey(seed % 997), spec, shards)
     idx, off, _ = _ragged_case(rng, spec, b=3, max_l=4, pad=5)
 
-    want = se.lookup_ragged(arena, spec, idx, off, max_l=4)
+    want = es.lookup_bags(es.FpArena(arena), spec, idx, off, max_l=4)
     np.testing.assert_allclose(np.asarray(want),
                                _oracle(arena, spec, idx, off),
                                rtol=1e-5, atol=1e-5)
+    flat = se.flatten_ragged_indices(spec, idx, off)
+    n_bags = off.shape[0] - 1
     shard_view = jnp.reshape(arena, (shards, -1, spec.dim))
     outs = jax.vmap(
-        lambda a: se.lookup_ragged_sharded(a, spec, idx, off, "x"),
-        axis_name="x")(shard_view)
+        lambda a: es.FpArena(a).shard_reduce_flat(spec, flat, off, "x")
+        .reshape(n_bags // spec.n_tables, spec.n_tables, spec.dim)
+        .astype(arena.dtype), axis_name="x")(shard_view)
     for s in range(shards):
         np.testing.assert_allclose(np.asarray(outs[s]), np.asarray(want),
                                    rtol=1e-5, atol=1e-5)
@@ -152,8 +159,9 @@ def test_lookup_ragged_quantized_error_bound(rng):
     arena = se.init_arena(jax.random.PRNGKey(0), spec, scale=1.0)
     q, scales = se.quantize_arena(arena)
     idx, off, _ = _ragged_case(rng, spec, b=4, max_l=6, pad=3)
-    exact = se.lookup_ragged(arena, spec, idx, off, max_l=6)
-    approx = se.lookup_ragged_quantized(q, scales, spec, idx, off)
+    exact = es.lookup_bags(es.FpArena(arena), spec, idx, off, max_l=6)
+    approx = es.lookup_bags(es.QuantizedArena(q, scales), spec, idx, off,
+                            max_l=6)
     bound = 6 * float(scales.max()) + 1e-6
     assert float(jnp.abs(exact - approx).max()) <= bound
 
@@ -178,9 +186,9 @@ def test_hot_cache_exact_vs_uncached(rng):
     counts = se.trace_row_counts(spec, idx, off)
     for k in (1, 8, 64):
         cache = se.build_hot_cache(arena, spec, counts, k)
-        got = se.lookup_ragged_cached(cache, arena, spec, idx, off,
-                                      max_l=5)
-        want = se.lookup_ragged(arena, spec, idx, off, max_l=5)
+        got = es.lookup_bags(es.CachedSource(cache, es.FpArena(arena)),
+                             spec, idx, off, max_l=5)
+        want = es.lookup_bags(es.FpArena(arena), spec, idx, off, max_l=5)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-5, atol=1e-5)
 
@@ -212,9 +220,10 @@ def test_hot_cache_quantized_cold_bound(rng):
     idx, off, _ = _ragged_case(rng, spec, b=3, max_l=4)
     counts = se.trace_row_counts(spec, idx, off)
     cache = se.build_hot_cache(arena, spec, counts, k=16)
-    got = se.lookup_ragged_cached_q(cache, q, scales, spec, idx, off,
-                                    max_l=4)
-    want = se.lookup_ragged(arena, spec, idx, off, max_l=4)
+    got = es.lookup_bags(
+        es.CachedSource(cache, es.QuantizedArena(q, scales)), spec, idx,
+        off, max_l=4)
+    want = es.lookup_bags(es.FpArena(arena), spec, idx, off, max_l=4)
     bound = 4 * float(scales.max()) + 1e-6
     assert float(jnp.abs(got - want).max()) <= bound
 
@@ -227,7 +236,8 @@ def test_hot_cache_all_rows_hot_makes_cold_pass_inert(rng):
     counts = se.trace_row_counts(spec, idx, off)
     cache = se.build_hot_cache(arena, spec, counts, k=spec.null_row)
     assert float(se.cache_hit_rate(cache, spec, idx, off)) == 1.0
-    got = se.lookup_ragged_cached(cache, arena, spec, idx, off, max_l=3)
-    want = se.lookup_ragged(arena, spec, idx, off, max_l=3)
+    got = es.lookup_bags(es.CachedSource(cache, es.FpArena(arena)), spec,
+                         idx, off, max_l=3)
+    want = es.lookup_bags(es.FpArena(arena), spec, idx, off, max_l=3)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)

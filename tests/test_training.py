@@ -18,6 +18,7 @@ from hypothesis import strategies as st
 
 from repro.configs.dlrm import DLRM_SMOKE
 from repro.core import dlrm
+from repro.core import embedding_source as es
 from repro.core import sparse_engine as se
 from repro.kernels import embedding_gather as eg
 from repro.kernels import ops
@@ -215,10 +216,12 @@ def test_patch_hot_rows_keeps_composition_exact(rng):
                                jnp.asarray(cold + [spec.null_row],
                                            jnp.int32)])
     arena2 = arena.at[touched[:-1]].add(1.5)
-    stale = se.lookup_ragged_cached(cache, arena2, spec, idx, off, max_l=3)
+    stale = es.lookup_bags(es.CachedSource(cache, es.FpArena(arena2)),
+                           spec, idx, off, max_l=3)
     patched = _patch_hot_rows(cache, arena2, spec.null_row, touched)
-    got = se.lookup_ragged_cached(patched, arena2, spec, idx, off, max_l=3)
-    want = se.lookup_ragged(arena2, spec, idx, off, max_l=3)
+    got = es.lookup_bags(es.CachedSource(patched, es.FpArena(arena2)),
+                         spec, idx, off, max_l=3)
+    want = es.lookup_bags(es.FpArena(arena2), spec, idx, off, max_l=3)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
     # the un-patched cache must actually have been wrong (test has teeth)
@@ -250,10 +253,12 @@ def test_online_trainer_loss_goes_down_with_cache_refresh():
     b = next(gen)
     trainer.train_step(b)
     idx, off = jnp.asarray(b["indices"]), jnp.asarray(b["offsets"])
-    got = se.lookup_ragged_cached(trainer.cache, trainer.params["arena"],
-                                  trainer.spec, idx, off, max_l=max_l)
-    want = se.lookup_ragged(trainer.params["arena"], trainer.spec, idx, off,
-                            max_l=max_l)
+    got = es.lookup_bags(
+        es.CachedSource(trainer.cache,
+                        es.FpArena(trainer.params["arena"])),
+        trainer.spec, idx, off, max_l=max_l)
+    want = es.lookup_bags(es.FpArena(trainer.params["arena"]),
+                          trainer.spec, idx, off, max_l=max_l)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-5)
 
@@ -323,7 +328,7 @@ def test_sync_engine_publishes_every_step():
                                                         refresh_every=4))
     gen = make_drifting_zipf(cfg, batch_size=8, mean_l=3, max_l=max_l,
                              seed=7)
-    engine = RecEngine(cfg, params, path="cached", max_l=max_l,
+    engine = RecEngine(cfg, params, source="cached", max_l=max_l,
                        max_batch=8, cache_k=32,
                        cache_trace=np.ones(trainer.spec.total_rows))
     assert not trainer.sync_engine(engine)        # nothing built yet
