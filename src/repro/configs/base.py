@@ -144,9 +144,45 @@ class DLRMConfig:
     bottom_mlp: Tuple[int, ...] = (512, 256, 32)
     top_mlp: Tuple[int, ...] = (512, 256, 1)
     dtype: str = "float32"
+    # Heterogeneous tables (Centaur's workload characterization: vocab
+    # sizes and access skew vary wildly per table). When set, each table
+    # t owns a private (table_rows[t] + 1, table_dims[t]) arena served
+    # through a TableGroupSource, a per-table projection lifts dim_t into
+    # the shared interaction width `emb_dim`, and the synthetic trace
+    # draws table t's ids from Zipf(table_alphas[t]). All three tuples
+    # must have n_tables entries; rows_per_table/emb_dim keep their
+    # uniform meaning only as the envelope (max) for bucket/spec sizing.
+    table_rows: Optional[Tuple[int, ...]] = None
+    table_dims: Optional[Tuple[int, ...]] = None
+    table_alphas: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        for f in ("table_rows", "table_dims", "table_alphas"):
+            v = getattr(self, f)
+            assert v is None or len(v) == self.n_tables, \
+                (f, len(v), self.n_tables)
+        assert (self.table_rows is None) == (self.table_dims is None), \
+            "heterogeneous configs set table_rows AND table_dims together"
+
+    @property
+    def heterogeneous(self) -> bool:
+        return self.table_rows is not None
+
+    @property
+    def resolved_table_rows(self) -> Tuple[int, ...]:
+        return (self.table_rows if self.table_rows is not None
+                else (self.rows_per_table,) * self.n_tables)
+
+    @property
+    def resolved_table_dims(self) -> Tuple[int, ...]:
+        return (self.table_dims if self.table_dims is not None
+                else (self.emb_dim,) * self.n_tables)
 
     @property
     def table_bytes(self) -> int:
+        if self.heterogeneous:
+            return 4 * sum(r * d for r, d in zip(self.table_rows,
+                                                 self.table_dims))
         return self.n_tables * self.rows_per_table * self.emb_dim * 4
 
     @property

@@ -24,8 +24,41 @@ from repro.optim import Optimizer, adamw, partitioned, rowwise_adagrad
 
 
 def arena_spec(cfg: DLRMConfig) -> se.ArenaSpec:
+    """The uniform ArenaSpec, or — for a heterogeneous config — the
+    group's *envelope* (n_tables, max vocab, max dim): the entry points
+    consume only its n_tables/dim fields for a table group (a group never
+    flattens into one shared arena)."""
+    if cfg.heterogeneous:
+        return se.ArenaSpec(cfg.n_tables, max(cfg.table_rows),
+                            max(cfg.table_dims), cfg.dtype)
     return se.ArenaSpec(cfg.n_tables, cfg.rows_per_table, cfg.emb_dim,
                         cfg.dtype)
+
+
+def member_specs(cfg: DLRMConfig):
+    """Per-table single-table ArenaSpecs of a heterogeneous config."""
+    return tuple(se.ArenaSpec(1, r, d, cfg.dtype)
+                 for r, d in zip(cfg.resolved_table_rows,
+                                 cfg.resolved_table_dims))
+
+
+def table_plans(cfg: DLRMConfig, *, cache_k=0,
+                quantize_rows_above: Optional[int] = None):
+    """The declarative per-table composition for a heterogeneous config:
+    ``cache_k`` (int or per-table sequence; 0 = no hot cache for that
+    table) pins the skewed tables, ``quantize_rows_above`` int8-quantizes
+    every table whose vocab exceeds the threshold (the huge tables whose
+    fp32 rows blow the capacity budget). Returns the TablePlan tuple a
+    ``SourceSpec(tables=...)`` consumes."""
+    rows = cfg.resolved_table_rows
+    dims = cfg.resolved_table_dims
+    if not isinstance(cache_k, (tuple, list)):
+        cache_k = (cache_k,) * cfg.n_tables
+    return tuple(es.TablePlan(
+        rows=r, dim=d, cache_k=int(k),
+        quantize=(quantize_rows_above is not None
+                  and r > quantize_rows_above))
+        for r, d, k in zip(rows, dims, cache_k))
 
 
 def top_mlp_in_dim(cfg: DLRMConfig) -> int:
@@ -35,14 +68,49 @@ def top_mlp_in_dim(cfg: DLRMConfig) -> int:
 
 def init(key: jax.Array, cfg: DLRMConfig, shards: int = 1) -> Dict:
     k_arena, k_bot, k_top = jax.random.split(key, 3)
-    spec = arena_spec(cfg)
     assert cfg.bottom_mlp[-1] == cfg.emb_dim, (
         "bottom MLP must end at emb_dim so its output joins the interaction")
-    return {
-        "arena": se.init_arena(k_arena, spec, shards),
+    params = {
         "bottom": de.init_mlp(k_bot, (cfg.dense_features,) + cfg.bottom_mlp),
         "top": de.init_mlp(k_top, (top_mlp_in_dim(cfg),) + cfg.top_mlp),
     }
+    if cfg.heterogeneous:
+        specs = member_specs(cfg)
+        keys = jax.random.split(k_arena, 2 * cfg.n_tables)
+        params["tables"] = tuple(
+            se.init_arena(keys[t], sp, shards)
+            for t, sp in enumerate(specs))
+        # per-table projection into the shared interaction width: table
+        # t's reduced (dim_t,) bag joins the feature interaction as a
+        # (emb_dim,) vector
+        params["proj"] = tuple(
+            (jax.random.normal(keys[cfg.n_tables + t],
+                               (sp.dim, cfg.emb_dim), jnp.float32)
+             / jnp.sqrt(sp.dim)).astype(cfg.dtype)
+            for t, sp in enumerate(specs))
+    else:
+        params["arena"] = se.init_arena(k_arena, arena_spec(cfg), shards)
+    return params
+
+
+def group_source(params: Dict, cfg: DLRMConfig,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 axis: str = "model") -> es.TableGroupSource:
+    """The default serving group of a heterogeneous config: one fp member
+    per table arena, row-sharded when a mesh with a >1 axis is given."""
+    assert cfg.heterogeneous, "group_source needs a heterogeneous config"
+    return es.TableGroupSource.from_arenas(params["tables"],
+                                           member_specs(cfg), mesh, axis)
+
+
+def project_tables(proj, emb: jax.Array) -> jax.Array:
+    """Per-table output projections: (B, T, dmax) padded group embeddings
+    -> (B, T, emb_dim) interaction features. Table t consumes only its
+    own leading dim_t lanes (the zero-padded tail contributes nothing and
+    its projection rows receive zero gradient)."""
+    cols = [emb[:, t, :p.shape[0]].astype(p.dtype) @ p
+            for t, p in enumerate(proj)]
+    return jnp.stack(cols, axis=1)
 
 
 def head_logits(mlp_params: Dict, dense: jax.Array,
@@ -70,6 +138,10 @@ def _legacy_source(params: Dict, mesh, cache, quantized,
 
 def _compose_legacy(params: Dict, mesh, cache, quantized,
                     axis: str = "model") -> es.EmbeddingSource:
+    assert "arena" in params, (
+        "the legacy cache=/quantized= kwargs only compose over the "
+        "uniform params['arena']; heterogeneous (table-group) params "
+        "take source=<TableGroupSource>")
     # legacy contract: quantized only ever applied to the CACHED cold
     # pass; without a cache it was ignored (fp arena served)
     if cache is not None and quantized is not None:
@@ -97,8 +169,11 @@ def forward(params: Dict, cfg: DLRMConfig, dense: jax.Array,
     """
     spec = arena_spec(cfg)
     if source is None:
-        source = es.resolve_source(params["arena"], mesh)
+        source = (group_source(params, cfg, mesh) if cfg.heterogeneous
+                  else es.resolve_source(params["arena"], mesh))
     emb = es.lookup_fixed(source, spec, indices)      # sparse stage
+    if cfg.heterogeneous:
+        emb = project_tables(params["proj"], emb)
     return head_logits(params, dense, emb)            # dense stage
 
 
@@ -115,22 +190,49 @@ def forward_ragged(params: Dict, cfg: DLRMConfig, dense: jax.Array,
     table) row-major order; max_l: static per-bag length bound.
 
     The embedding stage is ``embedding_source.lookup_bags`` over `source`
-    — ANY composition (fp / int8 / sharded / hot-cached) through the one
-    entry point; serving-time path selection (MP-Rec-style) is the choice
-    of source *value*, not of function. source=None defaults to the fp
-    arena in `params`, row-sharded over the mesh's 'model' axis when a
-    mesh is given. The legacy cache=/quantized= kwargs are deprecated
-    shims onto the equivalent CachedSource/QuantizedArena.
+    — ANY composition (fp / int8 / sharded / hot-cached / table-grouped)
+    through the one entry point; serving-time path selection
+    (MP-Rec-style) is the choice of source *value*, not of function.
+    source=None defaults to the fp arena in `params` (or, on a
+    heterogeneous config, the group over ``params['tables']``),
+    row-sharded over the mesh's 'model' axis when a mesh is given. The
+    legacy cache=/quantized= kwargs are deprecated shims onto the
+    equivalent CachedSource/QuantizedArena.
+
+    Per-table streams: with a ``TableGroupSource``, `indices`/`offsets`
+    may instead be *sequences* — table t's own flat stream and (B+1,)
+    offsets (each table keeps its own padding budget; `max_l` may be
+    per-table too). Heterogeneous configs additionally project each
+    table's reduced bag into the shared interaction width through
+    ``params['proj']``.
     """
     spec = arena_spec(cfg)
+    per_table = isinstance(indices, (tuple, list))
     if source is None:
-        source = _legacy_source(params, mesh, cache, quantized)
+        if cfg.heterogeneous:
+            if cache is not None or quantized is not None:
+                raise ValueError(
+                    "the legacy cache=/quantized= kwargs cannot express "
+                    "per-table composition — pass source=<TableGroup"
+                    "Source> (see dlrm.table_plans / SourceSpec.tables)")
+            source = group_source(params, cfg, mesh)
+        else:
+            source = _legacy_source(params, mesh, cache, quantized)
     elif cache is not None or quantized is not None:
         raise ValueError(
             "forward_ragged got BOTH source= and the deprecated cache=/"
             "quantized= kwargs — the legacy kwargs would be silently "
             "ignored; compose them into the source instead")
-    emb = es.lookup_bags(source, spec, indices, offsets, max_l=max_l)
+    if per_table:
+        assert isinstance(source, es.TableGroupSource), (
+            "per-table index/offset streams are the table-group layout; "
+            f"got a {type(source).__name__} source")
+        emb = es.lookup_bags_per_table(source, indices, offsets,
+                                      max_l=max_l)
+    else:
+        emb = es.lookup_bags(source, spec, indices, offsets, max_l=max_l)
+    if cfg.heterogeneous:
+        emb = project_tables(params["proj"], emb)
     return head_logits(params, dense, emb)
 
 
@@ -159,6 +261,8 @@ def loss_ragged(params: Dict, cfg: DLRMConfig, dense: jax.Array,
 
 
 def make_optimizer(cfg: DLRMConfig, lr: float = 1e-3):
+    if cfg.heterogeneous:
+        return partitioned({"tables": rowwise_adagrad(lr * 10)}, adamw(lr))
     return partitioned({"arena": rowwise_adagrad(lr * 10)}, adamw(lr))
 
 
@@ -206,6 +310,14 @@ def make_train_step_ragged(cfg: DLRMConfig, *, max_l: int, lr: float = 1e-3,
     from repro.training import sparse_optim as so
 
     spec = arena_spec(cfg)
+    if cfg.heterogeneous:
+        if sharded or se.mesh_shards(mesh, axis) > 1:
+            raise ValueError(
+                "sharded TRAINING of a heterogeneous table group is not "
+                "supported yet — serve groups sharded (ShardedArena "
+                "members) and train replicated")
+        return _make_train_step_group(cfg, spec, max_l=max_l, lr=lr,
+                                      sparse=sparse)
     if sharded is None:
         sharded = sparse and se.mesh_shards(mesh, axis) > 1
     if sharded:
@@ -357,6 +469,95 @@ def _make_train_step_ragged_sharded(cfg: DLRMConfig, spec: se.ArenaSpec, *,
         new_params["arena"] = new_arena
         return new_params, {"arena": arena_state, "mlp": mlp_state}, \
             loss, rows
+
+    return Optimizer(init, None), step
+
+
+def _make_train_step_group(cfg: DLRMConfig, spec: se.ArenaSpec, *,
+                           max_l: int, lr: float, sparse: bool):
+    """Heterogeneous (table-group) ragged train step.
+
+    sparse=True: the per-table row-wise path — the group lookup runs over
+    stop-gradient arenas, the head (projections + MLPs) backprops
+    normally, and ``sparse_optim.group_row_grads`` turns the padded bag
+    gradient into per-table (rows, grads) pairs that per-table Adagrad
+    accumulators apply in O(index stream) per table. sparse=False is the
+    dense-grad baseline: autodiff straight through the group source
+    (every member arena gets a densified gradient) + partitioned
+    row-wise Adagrad — kept for the exactness comparison.
+
+    step(params, opt_state, batch) -> (new_params, new_opt_state, loss,
+    touched) where `touched` is the per-table tuple of touched-row arrays
+    (fill = that table's null row), feeding per-table hot-cache
+    write-through.
+    """
+    from repro.training import sparse_optim as so
+
+    specs = member_specs(cfg)
+
+    def touched_rows(batch):
+        n = batch["indices"].shape[0]
+        table, valid = se.ragged_position_tables(batch["offsets"], n,
+                                                 cfg.n_tables)
+        out = []
+        for t, sp in enumerate(specs):
+            idx_t = jnp.where(valid & (table == t), batch["indices"],
+                              jnp.asarray(sp.null_row,
+                                          batch["indices"].dtype))
+            rows, _ = jnp.unique(idx_t, size=n, fill_value=sp.null_row,
+                                 return_inverse=True)
+            out.append(rows.astype(jnp.int32))
+        return tuple(out)
+
+    if not sparse:
+        opt = make_optimizer(cfg, lr)
+
+        def dense_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_ragged)(
+                params, cfg, batch["dense"], batch["indices"],
+                batch["offsets"], batch["labels"], max_l=max_l)
+            new_params, new_state = opt.update(grads, opt_state, params)
+            return new_params, new_state, loss, touched_rows(batch)
+
+        return opt, dense_step
+
+    arena_opt = so.group_rowwise_adagrad(lr * 10)
+    mlp_opt = adamw(lr)
+
+    def init(params):
+        return {"tables": arena_opt.init(params["tables"]),
+                "mlp": mlp_opt.init({k: v for k, v in params.items()
+                                     if k != "tables"})}
+
+    def step(params, opt_state, batch):
+        n_bags = batch["offsets"].shape[0] - 1
+        group = es.TableGroupSource(
+            members=tuple(es.FpArena(jax.lax.stop_gradient(a))
+                          for a in params["tables"]),
+            specs=specs)
+        emb = es.lookup_bags(group, spec, batch["indices"],
+                             batch["offsets"], max_l=max_l)
+
+        def head(head_params, emb):
+            proj_emb = project_tables(head_params["proj"], emb)
+            return _bce(head_logits(head_params, batch["dense"],
+                                    proj_emb), batch["labels"])
+
+        head_params = {k: v for k, v in params.items() if k != "tables"}
+        loss, (d_head, d_emb) = jax.value_and_grad(head, argnums=(0, 1))(
+            head_params, emb)
+
+        d_bags = d_emb.reshape(n_bags, spec.dim)
+        per_table = so.group_row_grads(specs, d_bags, batch["indices"],
+                                       batch["offsets"])
+        new_tables, tables_state = arena_opt.update(
+            params["tables"], opt_state["tables"], per_table)
+        new_head, mlp_state = mlp_opt.update(d_head, opt_state["mlp"],
+                                             head_params)
+        new_params = dict(new_head)
+        new_params["tables"] = new_tables
+        return new_params, {"tables": tables_state, "mlp": mlp_state}, \
+            loss, tuple(rows for rows, _ in per_table)
 
     return Optimizer(init, None), step
 

@@ -22,6 +22,9 @@ Source taxonomy (composition, not configuration)::
                                         psum of reduced D-vectors)
     CachedSource(hot, cold)             replicated top-K hot rows + ANY
                                         cold source for the tail
+    TableGroupSource(members, specs)    heterogeneous per-table members
+                                        (own vocab + dim each), composed
+                                        declaratively per table
 
 Composition laws are preserved bit-for-bit vs the pre-API engine:
 
@@ -42,9 +45,12 @@ same leaf shapes). ``VersionedSource`` wraps any source plus a monotone
 version into a self-describing broadcast artifact — the generalization of
 the hot-arena artifact to full param publication.
 
-Adding the next source (quantized-hot, two-level cache, per-table arenas)
-is one new dataclass implementing ``reduce_flat`` — not six new
-functions.
+Adding the next source (quantized-hot, two-level cache) is one new
+dataclass implementing ``reduce_flat`` — not six new functions.
+``TableGroupSource`` closes the per-table-arenas item: every *member* is
+itself any of the sources above, so per-table composition (hot-cache only
+the skewed tables, int8-quantize only the huge ones) is a value, declared
+per table through ``TablePlan``/``SourceSpec.tables``.
 """
 from __future__ import annotations
 
@@ -52,7 +58,7 @@ import dataclasses
 import io
 import json
 from dataclasses import dataclass
-from typing import Optional, Tuple, Union
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -64,9 +70,12 @@ from repro.kernels import ops
 
 __all__ = [
     "CachedSource", "EmbeddingSource", "FpArena", "QuantizedArena",
-    "ShardedArena", "SourceSpec", "VersionedSource", "describe_source",
-    "hot_cache_of", "lookup_bags", "lookup_fixed", "rebind_arena",
-    "register_source", "resolve_source", "with_hot_cache",
+    "ShardedArena", "SourceSpec", "TableGroupSource", "TablePlan",
+    "VersionedSource", "describe_source", "group_hit_counts",
+    "group_trace_counts", "hot_cache_of", "lookup_bags",
+    "lookup_bags_per_table", "lookup_fixed", "rebind_arena",
+    "register_source", "replace_member", "resolve_source",
+    "with_hot_cache",
 ]
 
 # name -> (cls, data_fields, meta_fields): drives pytree registration,
@@ -106,11 +115,28 @@ class EmbeddingSource:
     unless a subclass provides a specialized ``reduce_fixed``. The
     shard-local hooks (``shard_reduce_flat`` / ``shard_reduce_fixed``)
     are only required of sources that can sit inside ``ShardedArena``.
+    ``reduce_bags`` / ``reduce_fixed_ids`` are the per-table-id halves of
+    the two entry points; their defaults flatten against the uniform
+    arena layout, and only ``TableGroupSource`` (whose tables have no
+    shared layout to flatten into) overrides them.
     """
 
     @property
     def out_dtype(self):
         raise NotImplementedError
+
+    def reduce_bags(self, spec: se.ArenaSpec, indices: jax.Array,
+                    offsets: jax.Array, *, max_l: int) -> jax.Array:
+        """(N,) per-table row ids + (n_bags+1,) offsets -> f32
+        (n_bags, D). Default: flatten into the uniform arena layout and
+        reduce."""
+        flat = se.flatten_ragged_indices(spec, indices, offsets)
+        return self.reduce_flat(spec, flat, offsets, max_l=max_l)
+
+    def reduce_fixed_ids(self, spec: se.ArenaSpec,
+                         indices: jax.Array) -> jax.Array:
+        """(B, T, L) per-table row ids -> f32 (B*T, D)."""
+        return self.reduce_fixed(spec, se.flatten_indices(spec, indices))
 
     def reduce_flat(self, spec: se.ArenaSpec, flat: jax.Array,
                     offsets: jax.Array, *, max_l: int) -> jax.Array:
@@ -335,6 +361,108 @@ class CachedSource(EmbeddingSource):
                                            max_l=max_l)
 
 
+@register_source(("members",), ("specs",))
+@dataclass(frozen=True)
+class TableGroupSource(EmbeddingSource):
+    """Heterogeneous per-table embedding sources behind the ONE entry
+    point — the workload Centaur characterizes: vocab sizes and access
+    skew vary wildly per table, so each table is its own gather-reduce
+    stream over its own arena.
+
+    ``members[t]`` is ANY source (``FpArena`` / ``QuantizedArena`` /
+    ``CachedSource`` / ``ShardedArena``) over table t's private arena
+    ``(vocab_t + 1, dim_t)`` (own trailing null row); ``specs[t]`` is its
+    single-table ``ArenaSpec(1, vocab_t, dim_t)``. Per-table composition
+    is therefore declarative: hot-cache only the skewed tables, int8 only
+    the huge ones (``TablePlan`` / ``SourceSpec.tables``).
+
+    The grouped reduction routes the ONE interleaved (sample, table)
+    row-major stream to every member with foreign positions redirected to
+    that member's always-zero null row — the same mask-free redirect
+    protocol the hot/cold split uses — so each member reduces exactly its
+    own bags and contributes exact zeros elsewhere. Outputs are padded to
+    ``dmax = max(dim_t)``; table t's slice ``[:, t, :dim_t]`` is
+    bit-for-bit the member's own lookup (the composition law pinned by
+    ``tests/test_table_group.py``). ``lookup_bags_per_table`` is the
+    per-table-stream sibling for callers that keep one stream per table.
+    """
+    members: Tuple[EmbeddingSource, ...]
+    specs: Tuple[se.ArenaSpec, ...]
+
+    @property
+    def n_tables(self) -> int:
+        return len(self.members)
+
+    @property
+    def dmax(self) -> int:
+        return max(sp.dim for sp in self.specs)
+
+    @property
+    def out_dtype(self):
+        return jnp.result_type(*[m.out_dtype for m in self.members])
+
+    @property
+    def envelope_spec(self) -> se.ArenaSpec:
+        """The uniform ArenaSpec a group serves under: n_tables tables,
+        the max vocab, the max dim (only n_tables/dim are consumed by the
+        entry points — a group never flattens into a shared arena)."""
+        return se.ArenaSpec(len(self.members),
+                            max(sp.rows_per_table for sp in self.specs),
+                            self.dmax)
+
+    @classmethod
+    def from_arenas(cls, arenas: Sequence[jax.Array],
+                    specs: Sequence[se.ArenaSpec],
+                    mesh: Optional[jax.sharding.Mesh] = None,
+                    axis: str = "model") -> "TableGroupSource":
+        """The default group for raw per-table arenas: replicated fp
+        members, row-sharded when a mesh with a >1 axis is given."""
+        assert len(arenas) == len(specs), (len(arenas), len(specs))
+        return cls(members=tuple(resolve_source(a, mesh, axis)
+                                 for a in arenas),
+                   specs=tuple(specs))
+
+    def _position_tables(self, indices, offsets):
+        """(table id, validity) per stream position."""
+        return se.ragged_position_tables(offsets, indices.shape[0],
+                                         len(self.members))
+
+    def reduce_bags(self, spec, indices, offsets, *, max_l):
+        t_count = len(self.members)
+        assert spec.n_tables == t_count, (spec.n_tables, t_count)
+        assert spec.dim == self.dmax, (spec.dim, self.dmax)
+        n_bags = offsets.shape[0] - 1
+        b = n_bags // t_count
+        table, valid = self._position_tables(indices, offsets)
+        cols = []
+        for t, (m, sp) in enumerate(zip(self.members, self.specs)):
+            mine = valid & (table == t)
+            flat_t = jnp.where(mine, indices,
+                               jnp.asarray(sp.null_row, indices.dtype))
+            red = m.reduce_flat(sp, flat_t, offsets, max_l=max_l)
+            # round through the member dtype exactly like the member's
+            # own lookup_bags does, so grouped dispatch stays bit-equal
+            # to the per-table loop on low-precision members too
+            red = red.astype(m.out_dtype).astype(jnp.float32)
+            red = red.reshape(b, t_count, sp.dim)[:, t, :]
+            if sp.dim < spec.dim:
+                red = jnp.pad(red, ((0, 0), (0, spec.dim - sp.dim)))
+            cols.append(red)
+        return jnp.stack(cols, axis=1).reshape(n_bags, spec.dim)
+
+    def reduce_fixed_ids(self, spec, indices):
+        b, t, l = indices.shape
+        offsets = jnp.arange(b * t + 1, dtype=jnp.int32) * l
+        return self.reduce_bags(spec, indices.reshape(-1), offsets,
+                                max_l=l)
+
+    def reduce_flat(self, spec, flat, offsets, *, max_l):
+        raise TypeError(
+            "TableGroupSource has no shared arena layout to reduce over "
+            "— call lookup_bags / lookup_fixed (per-table ids) or "
+            "lookup_bags_per_table (per-table streams) instead")
+
+
 # ---------------------------------------------------------------------------
 # The two entry points
 # ---------------------------------------------------------------------------
@@ -347,11 +475,12 @@ def lookup_bags(source: EmbeddingSource, spec: se.ArenaSpec,
     Subsumes lookup_ragged / _sharded / _auto / _quantized / _cached /
     _cached_q: the composition lives in the `source` pytree, not in the
     function name. Differentiable w.r.t. the source's fp leaves on every
-    backend (``jax.grad`` routes through the kernel custom VJPs).
+    backend (``jax.grad`` routes through the kernel custom VJPs). For a
+    ``TableGroupSource``, D is the group's ``dmax`` and table t's slice
+    ``[..., :dim_t]`` carries its reduced bags (the tail is zero).
     """
     n_bags = offsets.shape[0] - 1
-    flat = se.flatten_ragged_indices(spec, indices, offsets)
-    out = source.reduce_flat(spec, flat, offsets, max_l=max_l)
+    out = source.reduce_bags(spec, indices, offsets, max_l=max_l)
     return out.reshape(n_bags // spec.n_tables, spec.n_tables,
                        spec.dim).astype(source.out_dtype)
 
@@ -363,9 +492,39 @@ def lookup_fixed(source: EmbeddingSource, spec: se.ArenaSpec,
     Subsumes lookup / lookup_sharded / lookup_auto / lookup_quantized.
     """
     b, t, _ = indices.shape
-    flat = se.flatten_indices(spec, indices)
-    out = source.reduce_fixed(spec, flat)
+    out = source.reduce_fixed_ids(spec, indices)
     return out.reshape(b, t, spec.dim).astype(source.out_dtype)
+
+
+def lookup_bags_per_table(source: TableGroupSource,
+                          indices: Sequence[jax.Array],
+                          offsets: Sequence[jax.Array], *,
+                          max_l) -> jax.Array:
+    """Per-table-stream sibling of ``lookup_bags`` for table groups.
+
+    ``indices[t]`` / ``offsets[t]`` are table t's own flat id stream and
+    (B+1,) bag boundaries — the layout a feature-log pipeline naturally
+    produces, and the one that lets each table carry its own padding
+    budget (``max_l`` may be one int or a per-table sequence). Returns
+    (B, T, dmax) bit-for-bit equal to ``lookup_bags`` over the
+    interleaved stream of the same bags: each member reduces exactly the
+    same per-bag id runs in the same order either way.
+    """
+    assert isinstance(source, TableGroupSource), type(source).__name__
+    t_count = len(source.members)
+    assert len(indices) == t_count and len(offsets) == t_count, \
+        (len(indices), len(offsets), t_count)
+    if not isinstance(max_l, (tuple, list)):
+        max_l = (max_l,) * t_count
+    dmax = source.dmax
+    cols = []
+    for t, (m, sp) in enumerate(zip(source.members, source.specs)):
+        out = lookup_bags(m, sp, indices[t], offsets[t], max_l=max_l[t])
+        out = out.reshape(-1, sp.dim).astype(jnp.float32)
+        if sp.dim < dmax:
+            out = jnp.pad(out, ((0, 0), (0, dmax - sp.dim)))
+        cols.append(out)
+    return jnp.stack(cols, axis=1).astype(source.out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -396,13 +555,33 @@ def with_hot_cache(source: CachedSource,
     return CachedSource(hot=cache, cold=source.cold)
 
 
+def replace_member(source: TableGroupSource, t: int,
+                   member: EmbeddingSource) -> TableGroupSource:
+    """Same group, one member swapped — the per-table component refresh
+    (a new hot cache for one skewed table, a re-quantized cold arena for
+    one huge table). Structure-preserving when `member` matches the old
+    one's treedef, so pushing the result through
+    ``RecEngine.update_source`` never recompiles."""
+    members = list(source.members)
+    members[t] = member
+    return TableGroupSource(members=tuple(members), specs=source.specs)
+
+
 def rebind_arena(source: EmbeddingSource,
-                 arena: jax.Array) -> EmbeddingSource:
+                 arena) -> EmbeddingSource:
     """Return `source` with every fp-arena leaf replaced by `arena`
     (quantized arenas are a frozen *representation* of some arena version
     and are left alone — rebuild them explicitly via ``quantize_rows`` /
-    ``from_arena``). Used to keep a serving source in lockstep when the
+    ``from_arena``). For a ``TableGroupSource`` pass the sequence of
+    per-table arenas. Used to keep a serving source in lockstep when the
     live params object is swapped."""
+    if isinstance(source, TableGroupSource):
+        assert len(arena) == len(source.members), \
+            (len(arena), len(source.members))
+        return TableGroupSource(
+            members=tuple(rebind_arena(m, a)
+                          for m, a in zip(source.members, arena)),
+            specs=source.specs)
     if isinstance(source, FpArena):
         return FpArena(arena)
     if isinstance(source, ShardedArena):
@@ -413,8 +592,13 @@ def rebind_arena(source: EmbeddingSource,
     return source
 
 
-def describe_source(source) -> str:
-    """Human/stats label: 'fp', 'int8', 'sharded(4,fp)', 'cached(fp)'…"""
+def describe_source(source, *, multiline: bool = False) -> str:
+    """Human/stats label: 'fp', 'int8', 'sharded(4,fp)', 'cached(fp)',
+    'group[...]'… With ``multiline=True`` every nested source renders
+    one-per-line (indented tree; groups get one line per table with that
+    member's vocab/dim) instead of one unreadable nested line."""
+    if multiline:
+        return "\n".join(_describe_lines(source, 0))
     if isinstance(source, FpArena):
         return "fp"
     if isinstance(source, QuantizedArena):
@@ -423,7 +607,96 @@ def describe_source(source) -> str:
         return f"sharded({source.n_shards},{describe_source(source.inner)})"
     if isinstance(source, CachedSource):
         return f"cached({describe_source(source.cold)})"
+    if isinstance(source, TableGroupSource):
+        inner = ",".join(describe_source(m) for m in source.members)
+        return f"group[{inner}]"
     return type(source).__name__
+
+
+def _describe_lines(source, depth: int) -> list:
+    pad = "  " * depth
+    if isinstance(source, FpArena):
+        r, d = source.arena.shape
+        return [f"{pad}fp arena ({r}x{d}, {source.arena.dtype})"]
+    if isinstance(source, QuantizedArena):
+        r, d = source.q.shape
+        return [f"{pad}int8 arena ({r}x{d} + f32 row scales)"]
+    if isinstance(source, ShardedArena):
+        return [f"{pad}sharded over {source.n_shards} x "
+                f"'{source.axis}'"] \
+            + _describe_lines(source.inner, depth + 1)
+    if isinstance(source, CachedSource):
+        return [f"{pad}cached (k={source.k} hot rows)"] \
+            + _describe_lines(source.cold, depth + 1)
+    if isinstance(source, TableGroupSource):
+        lines = [f"{pad}group ({len(source.members)} tables, "
+                 f"dmax={source.dmax})"]
+        for t, (m, sp) in enumerate(zip(source.members, source.specs)):
+            lines.append(f"{pad}  table[{t}] vocab={sp.rows_per_table} "
+                         f"dim={sp.dim}")
+            lines += _describe_lines(m, depth + 2)
+        return lines
+    return [f"{pad}{type(source).__name__}"]
+
+
+# ---------------------------------------------------------------------------
+# Group accounting helpers (per-table hit rates / trace histograms)
+# ---------------------------------------------------------------------------
+
+def group_hit_counts(source: TableGroupSource, indices: jax.Array,
+                     offsets: jax.Array):
+    """Per-table (hits, lookups) over one interleaved ragged batch.
+
+    Returns two (T,) int32 arrays; a table whose member serves no hot
+    cache reports 0 hits (the consumer maps it to None — membership is
+    static structure, not data). Jit-friendly: the member walk happens at
+    trace time."""
+    table, valid = source._position_tables(indices, offsets)
+    hits, looks = [], []
+    for t, m in enumerate(source.members):
+        mine = valid & (table == t)
+        looks.append(jnp.sum(mine.astype(jnp.int32)))
+        cache = hot_cache_of(m)
+        if cache is None:
+            hits.append(jnp.zeros((), jnp.int32))
+        else:
+            slots = jnp.take(cache.slot_of, jnp.where(mine, indices, 0))
+            hits.append(jnp.sum((mine & (slots < cache.k))
+                                .astype(jnp.int32)))
+    return jnp.stack(hits), jnp.stack(looks)
+
+
+def group_trace_counts(specs: Sequence[se.ArenaSpec], indices,
+                       offsets) -> list:
+    """Per-table row-touch histograms from an interleaved ragged trace
+    (host-side; the group sibling of ``se.trace_row_counts``). Feeds the
+    per-table hot rankings of a group plan."""
+    idx = np.asarray(indices)
+    off = np.asarray(offsets)
+    t_count = len(specs)
+    n_valid = int(off[-1])
+    seg = np.searchsorted(off[1:], np.arange(n_valid), side="right")
+    table = seg % t_count
+    return [np.bincount(idx[:n_valid][table == t],
+                        minlength=sp.total_rows)
+            for t, sp in enumerate(specs)]
+
+
+@dataclass(frozen=True)
+class TablePlan:
+    """Per-table slice of a group plan: the table's shape plus its OWN
+    composition knobs — hot-cache only the skewed tables (``cache_k``),
+    int8-quantize only the huge ones (``quantize``). A tuple of these in
+    ``SourceSpec.tables`` is the declarative form of a
+    ``TableGroupSource``."""
+    rows: int                            # vocab (real rows, null excluded)
+    dim: int
+    cache_k: int = 0                     # >0: pin this table's top-K hot
+    quantize: bool = False               # int8 this table's (cold) arena
+
+    @property
+    def arena_spec(self) -> se.ArenaSpec:
+        return se.ArenaSpec(1, self.rows, self.dim)
 
 
 @dataclass(frozen=True)
@@ -434,7 +707,10 @@ class SourceSpec:
     cross-product: a RecEngine (or any consumer) takes one SourceSpec and
     calls ``build(arena, spec, counts)``. String shorthands map 1:1 onto
     the old path names via ``from_path`` ('fixed' | 'ragged' | 'cached'
-    | 'sharded').
+    | 'sharded'). With ``tables`` set (a tuple of ``TablePlan``) the plan
+    is a heterogeneous table group: ``build`` takes the *sequence* of
+    per-table arenas (and per-table trace histograms) and composes each
+    member independently.
     """
     layout: str = "ragged"               # 'ragged' | 'fixed' batch layout
     cache_k: int = 0                     # >0: pin top-K rows hot
@@ -442,6 +718,7 @@ class SourceSpec:
     mesh: Optional[jax.sharding.Mesh] = None
     axis: str = "model"
     require_mesh: bool = False           # 'sharded': no silent fallback
+    tables: Optional[Tuple[TablePlan, ...]] = None   # heterogeneous group
 
     PATH_NAMES = ("fixed", "ragged", "cached", "sharded")
 
@@ -452,11 +729,18 @@ class SourceSpec:
                 "require_mesh=True (path 'sharded') needs a mesh with a "
                 f">1 {self.axis!r} axis — a misconfigured replica must "
                 "not silently fall back to the replicated arena")
-        if self.layout == "fixed" and (self.cache_k or self.quantize_cold):
+        if self.layout == "fixed" and (self.cache_k or self.quantize_cold
+                                       or self.tables is not None):
             raise ValueError(
                 "layout='fixed' serves through the legacy fixed-L step "
-                "and cannot consume a cached/quantized source — drop "
-                "cache_k/quantize_cold or use the ragged layout")
+                "and cannot consume a cached/quantized/grouped source — "
+                "drop cache_k/quantize_cold/tables or use the ragged "
+                "layout")
+        if self.tables is not None and (self.cache_k or self.quantize_cold):
+            raise ValueError(
+                "a table-group plan carries cache_k/quantize per "
+                "TablePlan — the top-level cache_k/quantize_cold knobs "
+                "would silently apply to no table")
 
     @staticmethod
     def from_path(path: Union[str, "SourceSpec"], *, cache_k: int = 0,
@@ -487,10 +771,14 @@ class SourceSpec:
 
     @property
     def cached(self) -> bool:
+        if self.tables is not None:
+            return any(tp.cache_k > 0 for tp in self.tables)
         return self.cache_k > 0
 
     def path_name(self) -> str:
         """The nearest legacy shorthand (for stats/back-compat labels)."""
+        if self.tables is not None:
+            return "grouped"
         if self.layout == "fixed":
             return "fixed"
         if self.cached:
@@ -499,10 +787,14 @@ class SourceSpec:
             return "sharded"
         return "ragged"
 
-    def build(self, arena: jax.Array, spec: se.ArenaSpec,
+    def build(self, arena, spec: se.ArenaSpec,
               counts=None) -> EmbeddingSource:
         """Materialize the plan for an arena (counts: trace histogram for
-        the hot ranking; uniform when omitted)."""
+        the hot ranking; uniform when omitted). A table-group plan takes
+        the sequence of per-table arenas and the list of per-table
+        histograms instead."""
+        if self.tables is not None:
+            return self._build_group(arena, counts)
         cold: EmbeddingSource = (QuantizedArena.from_arena(arena)
                                  if self.quantize_cold else FpArena(arena))
         if se.mesh_shards(self.mesh, self.axis) > 1:
@@ -514,10 +806,55 @@ class SourceSpec:
         hot = se.build_hot_cache(arena, spec, counts, self.cache_k)
         return CachedSource(hot=hot, cold=cold)
 
+    def _build_group(self, arenas, counts=None) -> "TableGroupSource":
+        assert len(arenas) == len(self.tables), \
+            (len(arenas), len(self.tables))
+        if counts is None:
+            counts = [None] * len(self.tables)
+        sharded = se.mesh_shards(self.mesh, self.axis) > 1
+        members, specs = [], []
+        for tp, arena, c in zip(self.tables, arenas, counts):
+            sp = tp.arena_spec
+            member: EmbeddingSource = (QuantizedArena.from_arena(arena)
+                                       if tp.quantize else FpArena(arena))
+            if sharded:
+                member = ShardedArena(member, self.mesh, self.axis)
+            if tp.cache_k > 0:
+                if c is None:
+                    c = np.ones(sp.total_rows)
+                hot = se.build_hot_cache(arena, sp, c, tp.cache_k)
+                member = CachedSource(hot=hot, cold=member)
+            members.append(member)
+            specs.append(sp)
+        return TableGroupSource(members=tuple(members),
+                                specs=tuple(specs))
+
 
 # ---------------------------------------------------------------------------
 # Versioned broadcast artifact — any source + a monotone version
 # ---------------------------------------------------------------------------
+
+def _encode_meta(v):
+    """JSON-encode a meta-field value (plain scalars pass through;
+    ArenaSpec and nested tuples get self-describing wrappers)."""
+    if isinstance(v, se.ArenaSpec):
+        return {"__arena_spec__": dataclasses.asdict(v)}
+    if isinstance(v, TablePlan):
+        return {"__table_plan__": dataclasses.asdict(v)}
+    if isinstance(v, (tuple, list)):
+        return {"__seq__": [_encode_meta(x) for x in v]}
+    return v
+
+
+def _decode_meta(v):
+    if isinstance(v, dict) and "__arena_spec__" in v:
+        return se.ArenaSpec(**v["__arena_spec__"])
+    if isinstance(v, dict) and "__table_plan__" in v:
+        return TablePlan(**v["__table_plan__"])
+    if isinstance(v, dict) and "__seq__" in v:
+        return tuple(_decode_meta(x) for x in v["__seq__"])
+    return v
+
 
 def _encode(obj, arrays: dict, counter: list):
     if isinstance(obj, (jax.Array, np.ndarray)):
@@ -525,6 +862,11 @@ def _encode(obj, arrays: dict, counter: list):
         counter[0] += 1
         arrays[key] = np.asarray(obj)
         return {"kind": "array", "key": key}
+    if isinstance(obj, (tuple, list)):
+        # the per-table member tuple of a TableGroupSource (and any
+        # future source holding a sequence of sub-sources)
+        return {"kind": "seq",
+                "items": [_encode(x, arrays, counter) for x in obj]}
     name = type(obj).__name__
     if name not in _SOURCE_REGISTRY:
         raise TypeError(f"cannot serialize {name}: not a registered "
@@ -540,13 +882,16 @@ def _encode(obj, arrays: dict, counter: list):
             # its own at deserialize time
             node["fields"][f] = {"kind": "mesh"}
         else:
-            node["fields"][f] = {"kind": "meta", "value": v}
+            node["fields"][f] = {"kind": "meta",
+                                 "value": _encode_meta(v)}
     return node
 
 
 def _decode(node, z, mesh):
     if node["kind"] == "array":
         return jnp.asarray(z[node["key"]])
+    if node["kind"] == "seq":
+        return tuple(_decode(x, z, mesh) for x in node["items"])
     assert node["kind"] == "node", node
     cls, data_fields, meta_fields = _SOURCE_REGISTRY[node["type"]]
     kw = {}
@@ -555,7 +900,7 @@ def _decode(node, z, mesh):
         if sub["kind"] == "mesh":
             kw[f] = mesh
         elif sub["kind"] == "meta":
-            kw[f] = sub["value"]
+            kw[f] = _decode_meta(sub["value"])
         else:
             kw[f] = _decode(sub, z, mesh)
     if cls is ShardedArena and mesh is None:

@@ -165,6 +165,18 @@ def ragged_segment_ids(offsets: jax.Array, n: int) -> jax.Array:
                             side="right")
 
 
+def ragged_position_tables(offsets: jax.Array, n: int, n_tables: int):
+    """(owning table, validity) per flat stream position — THE single
+    encoding of the (sample, table) row-major bag convention. Every
+    consumer that routes stream positions to tables (the grouped lookup,
+    its per-table row grads, touched-row accounting for cache patching)
+    must share this one definition or they silently desync."""
+    n_bags = offsets.shape[0] - 1
+    seg = ragged_segment_ids(offsets, n)
+    table = jnp.minimum(seg, n_bags - 1) % n_tables
+    return table, seg < n_bags
+
+
 def flatten_ragged_indices(spec: ArenaSpec, indices: jax.Array,
                            offsets: jax.Array) -> jax.Array:
     """Per-table row ids (N,) -> arena row ids (N,) (base + offset).
@@ -173,12 +185,10 @@ def flatten_ragged_indices(spec: ArenaSpec, indices: jax.Array,
     positions are routed to the always-zero null row so every downstream
     consumer (kernel, cache, quantized reduce) stays mask-free.
     """
-    n = indices.shape[0]
-    n_bags = offsets.shape[0] - 1
-    seg = ragged_segment_ids(offsets, n)
-    table = jnp.minimum(seg, n_bags - 1) % spec.n_tables
+    table, valid = ragged_position_tables(offsets, indices.shape[0],
+                                          spec.n_tables)
     flat = indices + table.astype(indices.dtype) * spec.rows_per_table
-    return jnp.where(seg < n_bags, flat,
+    return jnp.where(valid, flat,
                      jnp.asarray(spec.null_row, indices.dtype))
 
 

@@ -27,14 +27,28 @@ class DLRMSynthetic:
     def batch(self, batch_size: int) -> Dict[str, np.ndarray]:
         c = self.cfg
         dense = self.rng.randn(batch_size, c.dense_features).astype(np.float32)
-        raw = self.rng.zipf(self.alpha,
-                            size=(batch_size, c.n_tables,
-                                  c.lookups_per_table))
-        indices = ((raw - 1) % c.rows_per_table).astype(np.int32)
+        if c.heterogeneous:
+            # per-table vocab and skew: table t draws Zipf(alpha_t) ids
+            # folded into its own [0, rows_t) range
+            indices = np.empty((batch_size, c.n_tables,
+                                c.lookups_per_table), np.int32)
+            for t in range(c.n_tables):
+                raw = self.rng.zipf(self._alpha_of(t),
+                                    size=(batch_size, c.lookups_per_table))
+                indices[:, t, :] = (raw - 1) % c.resolved_table_rows[t]
+        else:
+            raw = self.rng.zipf(self.alpha,
+                                size=(batch_size, c.n_tables,
+                                      c.lookups_per_table))
+            indices = ((raw - 1) % c.rows_per_table).astype(np.int32)
         logit = dense @ self._w * 0.5
         labels = (self.rng.rand(batch_size)
                   < 1.0 / (1.0 + np.exp(-logit))).astype(np.float32)
         return {"dense": dense, "indices": indices, "labels": labels}
+
+    def _alpha_of(self, t: int) -> float:
+        alphas = self.cfg.table_alphas
+        return self.alpha if alphas is None else alphas[t]
 
     def stream(self, batch_size: int) -> Iterator[Dict[str, np.ndarray]]:
         while True:
@@ -79,8 +93,19 @@ class DLRMSynthetic:
         offsets = np.zeros(n_bags + 1, np.int32)
         np.cumsum(lens, out=offsets[1:])
         n = int(offsets[-1])
-        raw = self.rng.zipf(self.alpha, size=n)
-        indices = ((raw - 1) % c.rows_per_table).astype(np.int32)
+        if c.heterogeneous:
+            # bags are (sample, table) row-major: position p belongs to
+            # table seg(p) % T and draws from that table's Zipf + vocab
+            seg = np.searchsorted(offsets[1:], np.arange(n), side="right")
+            table = seg % c.n_tables
+            indices = np.empty(n, np.int32)
+            for t in range(c.n_tables):
+                m = table == t
+                raw = self.rng.zipf(self._alpha_of(t), size=int(m.sum()))
+                indices[m] = (raw - 1) % c.resolved_table_rows[t]
+        else:
+            raw = self.rng.zipf(self.alpha, size=n)
+            indices = ((raw - 1) % c.rows_per_table).astype(np.int32)
         if pad_to is not None:
             assert pad_to >= n, (pad_to, n)
             indices = np.concatenate(
@@ -93,6 +118,38 @@ class DLRMSynthetic:
                   < 1.0 / (1.0 + np.exp(-logit))).astype(np.float32)
         return {"dense": dense, "indices": indices, "offsets": offsets,
                 "lengths": lens, "labels": labels, "max_l": max_l}
+
+    @staticmethod
+    def ragged_per_table(batch: Dict[str, np.ndarray], n_tables: int,
+                         pad_to=None):
+        """Split one interleaved ragged batch into per-table streams.
+
+        Returns (indices_list, offsets_list): table t's flat id stream
+        (its bags concatenated in sample order) and its own (B+1,)
+        offsets — the layout ``lookup_bags_per_table`` and the per-table
+        ``forward_ragged`` path consume. `pad_to` (int or per-table list)
+        pads each table's stream with zeros to a static size.
+        """
+        off = batch["offsets"]
+        idx = batch["indices"]
+        n_bags = len(off) - 1
+        idx_t, off_t = [], []
+        for t in range(n_tables):
+            bags = [idx[off[k]:off[k + 1]]
+                    for k in range(t, n_bags, n_tables)]
+            o = np.zeros(len(bags) + 1, np.int32)
+            np.cumsum([len(x) for x in bags], out=o[1:])
+            stream = (np.concatenate(bags).astype(np.int32) if o[-1]
+                      else np.zeros(0, np.int32))
+            if pad_to is not None:
+                p = pad_to[t] if isinstance(pad_to, (tuple, list)) \
+                    else pad_to
+                assert p >= o[-1], (t, p, int(o[-1]))
+                stream = np.concatenate(
+                    [stream, np.zeros(p - len(stream), np.int32)])
+            idx_t.append(stream)
+            off_t.append(o)
+        return idx_t, off_t
 
     @staticmethod
     def ragged_to_fixed(batch: Dict[str, np.ndarray],

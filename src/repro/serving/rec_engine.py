@@ -131,7 +131,12 @@ class RecEngine:
         the thin aliases onto a ``SourceSpec`` (cache_k / quantize_cold /
         mesh feed the plan);
       * a ``SourceSpec`` — the declarative plan, built against
-        ``params['arena']`` (+ ``cache_trace`` for the hot ranking);
+        ``params['arena']`` (+ ``cache_trace`` for the hot ranking); a
+        plan with ``tables=`` (per-table ``TablePlan``s) builds a
+        heterogeneous ``TableGroupSource`` from ``params['tables']`` and
+        a *list* of per-table trace histograms, and ``stats()`` reports
+        ``cache_hit_rate`` as a per-table mapping (None for members
+        without a hot cache);
       * an ``EmbeddingSource`` — served as-is (ragged layout).
     """
 
@@ -169,7 +174,7 @@ class RecEngine:
         self.batch_sizes: List[int] = []     # observed micro-batch sizes
         self.latencies: List[float] = []
         self.served = 0
-        self._hits = 0.0
+        self._hits = 0.0                     # per-table arrays for groups
         self._lookups = 0
         self.source_version = 0
 
@@ -180,8 +185,11 @@ class RecEngine:
                 source, cache_k=cache_k, quantize_cold=quantize_cold,
                 mesh=mesh)
             self.path = self.plan.path_name()
-            self.source = self.plan.build(params["arena"], self.spec,
-                                          cache_trace)
+            # a table-group plan builds from the per-table arenas (and a
+            # LIST of per-table trace histograms)
+            arena = (params["tables"] if self.plan.tables is not None
+                     else params["arena"])
+            self.source = self.plan.build(arena, self.spec, cache_trace)
         else:
             assert isinstance(source, es.EmbeddingSource), source
             assert not cache_k and cache_trace is None \
@@ -207,8 +215,29 @@ class RecEngine:
             step = dlrm.make_ragged_serve_step(cfg, max_l=self.max_l,
                                                mesh=mesh)
             self._serve = jax.jit(step)
-        self._hit_rate = jax.jit(
-            lambda c, i, o: se.cache_hit_rate(c, self.spec, i, o))
+        if self.grouped:
+            # the whole source is the jit argument, so per-table hit
+            # accounting survives every no-recompile member swap
+            self._hit_rate = jax.jit(
+                lambda s, i, o: es.group_hit_counts(s, i, o))
+        else:
+            self._hit_rate = jax.jit(
+                lambda c, i, o: se.cache_hit_rate(c, self.spec, i, o))
+        self._reset_hit_counters()
+
+    @property
+    def grouped(self) -> bool:
+        """Serving a heterogeneous TableGroupSource?"""
+        return isinstance(self.source, es.TableGroupSource)
+
+    def _reset_hit_counters(self) -> None:
+        if self.grouped:
+            t = len(self.source.members)
+            self._hits = np.zeros(t, np.int64)
+            self._lookups = np.zeros(t, np.int64)
+        else:
+            self._hits = 0.0
+            self._lookups = 0
 
     # -- the swap boundary --------------------------------------------------
 
@@ -224,7 +253,10 @@ class RecEngine:
         rebound source has identical leaf shapes, so no recompile."""
         self._params = params
         if getattr(self, "source", None) is not None:
-            self.source = es.rebind_arena(self.source, params["arena"])
+            arena = (params["tables"]
+                     if isinstance(self.source, es.TableGroupSource)
+                     else params["arena"])
+            self.source = es.rebind_arena(self.source, arena)
 
     @property
     def cache(self) -> Optional[se.HotRowCache]:
@@ -275,12 +307,11 @@ class RecEngine:
              "cache_k / arena shapes equal")
         new_version = (version if version is not None
                        else self.source_version + 1)
+        self.source = source
         if new_version > self.source_version:
             # per-path-correct accounting: the old cache's hits must not
             # dilute the post-swap hit rate
-            self._hits = 0.0
-            self._lookups = 0
-        self.source = source
+            self._reset_hit_counters()
         self.source_version = new_version
 
     def update_cache(self, cache: se.HotRowCache,
@@ -316,7 +347,11 @@ class RecEngine:
         for bucket in self.buckets:
             batch = self._assemble(dummy, bucket)
             np.asarray(self._run_serve(batch))
-            if self.cache is not None:
+            if self.grouped:
+                h, _ = self._hit_rate(self.source, batch["indices"],
+                                      batch["offsets"])
+                h.block_until_ready()
+            elif self.cache is not None:
                 self._hit_rate(self.cache, batch["indices"],
                                batch["offsets"]).block_until_ready()
 
@@ -391,7 +426,13 @@ class RecEngine:
         bucket = _bucket(len(reqs), self.buckets)
         batch = self._assemble(reqs, bucket)
         probs = np.asarray(self._run_serve(batch))
-        if self.cache is not None:
+        if self.grouped:
+            if int(batch["offsets"][-1]):
+                h, lk = self._hit_rate(self.source, batch["indices"],
+                                       batch["offsets"])
+                self._hits += np.asarray(h, np.int64)
+                self._lookups += np.asarray(lk, np.int64)
+        elif self.cache is not None:
             n = int(batch["offsets"][-1])
             if n:
                 hr = float(self._hit_rate(self.cache, batch["indices"],
@@ -422,13 +463,25 @@ class RecEngine:
         out = {"n": len(arr),
                "path": self.path,
                "source": es.describe_source(self.source),
+               # nested compositions one-per-line (the compact label above
+               # is unreadable for deep/grouped sources)
+               "source_tree": es.describe_source(self.source,
+                                                 multiline=True),
                "p50_ms": float(np.percentile(arr, 50) * 1e3),
                "p95_ms": float(np.percentile(arr, 95) * 1e3),
                "p99_ms": float(np.percentile(arr, 99) * 1e3),
                "mean_ms": float(arr.mean() * 1e3)}
         # per-path-correct: None (not a fake 0.0) when no hot cache is
         # serving, or when no lookups have hit the live cache version yet
-        if self.cache is None:
+        if self.grouped:
+            # per-table mapping; None preserved for non-cached members
+            out["cache_hit_rate"] = {
+                t: (float(self._hits[t] / self._lookups[t])
+                    if self._lookups[t] else None)
+                if es.hot_cache_of(m) is not None else None
+                for t, m in enumerate(self.source.members)}
+            out["cache_version"] = self.source_version
+        elif self.cache is None:
             out["cache_hit_rate"] = None
         else:
             out["cache_hit_rate"] = (self._hits / self._lookups

@@ -89,6 +89,18 @@ quantization has no cross-row state); the patched mirror rides in the
 same version as the rebuilt hot cache, so ``sync_engine`` pushes (hot,
 int8 cold) as one consistent swap.
 
+5. **Per-table refresh under ONE version (``OnlineGroupTrainer``).** A
+   heterogeneous ``TableGroupSource`` multiplies the protocol state per
+   table — per-table decayed histograms, per-table hot caches (only the
+   skewed tables carry one), per-table int8 mirrors with per-table dirty
+   masks — but NOT the version: every rebuild re-ranks all cached tables
+   and bumps one group-wide version, and ``publish_source()`` ships the
+   whole group in one ``VersionedSource`` blob. Tables therefore refresh
+   atomically together; a replica can never serve table 0 at version k
+   next to table 1 at version k+1. All step-1..4 guarantees apply member-
+   wise (write-through patches each table's hot copies from ITS arena;
+   the swap is still one structural-equality-checked pytree replace).
+
 Sharding note: all steps are unchanged by the row-sharded arena — the
 hot cache is a *replicated* copy of top-K rows wherever the cold rows
 live, and the sharded train step returns the same global touched-row ids
@@ -96,13 +108,17 @@ the write-through patch consumes (``make_train_step_ragged(sharded=True)``
 updates each arena shard locally; see ``sparse_optim.shard_local_rows``).
 """
 from repro.core.embedding_source import VersionedSource
-from repro.training.online import (OnlineCacheConfig, OnlineTrainer,
-                                   VersionedHotCache, make_drifting_zipf)
-from repro.training.sparse_optim import (SparseOptimizer, ragged_row_grads,
+from repro.training.online import (OnlineCacheConfig, OnlineGroupTrainer,
+                                   OnlineTrainer, VersionedHotCache,
+                                   make_drifting_zipf)
+from repro.training.sparse_optim import (SparseOptimizer, group_row_grads,
+                                         group_rowwise_adagrad,
+                                         ragged_row_grads,
                                          source_row_grads,
                                          sparse_rowwise_adagrad)
 
-__all__ = ["OnlineCacheConfig", "OnlineTrainer", "SparseOptimizer",
-           "VersionedHotCache", "VersionedSource", "make_drifting_zipf",
-           "ragged_row_grads", "source_row_grads",
+__all__ = ["OnlineCacheConfig", "OnlineGroupTrainer", "OnlineTrainer",
+           "SparseOptimizer", "VersionedHotCache", "VersionedSource",
+           "group_row_grads", "group_rowwise_adagrad",
+           "make_drifting_zipf", "ragged_row_grads", "source_row_grads",
            "sparse_rowwise_adagrad"]

@@ -314,6 +314,156 @@ class OnlineTrainer:
         return cold_like(engine_source)
 
 
+class OnlineGroupTrainer:
+    """Per-table online trainer for heterogeneous table groups.
+
+    The group sibling of ``OnlineTrainer``: every piece of protocol state
+    goes per-table — one decayed row-frequency histogram, one hot cache
+    (only for the tables whose ``TablePlan.cache_k`` > 0: hot-caching a
+    near-uniform table buys nothing), one optional int8 mirror (only for
+    ``TablePlan.quantize`` tables), and one Adagrad accumulator per
+    member arena (inside the group train step). Publication is ONE
+    ``VersionedSource`` carrying the whole ``TableGroupSource``, so a
+    replica adopts every table's refresh in a single atomic, versioned,
+    no-recompile swap — the swap protocol of ``repro.training`` step 4,
+    unchanged, just over a bigger pytree.
+
+    Structure stability: caches and int8 mirrors are materialized at
+    construction (uniform histogram) rather than at the first rebuild, so
+    ``serving_source()`` has the same treedef from step 0 and every
+    ``sync_engine`` push hits the engine's compiled executable.
+    """
+
+    def __init__(self, cfg: DLRMConfig, params: Dict, *, max_l: int,
+                 plans, lr: float = 1e-3, refresh_every: int = 50,
+                 decay: float = 0.98):
+        assert cfg.heterogeneous, \
+            "OnlineGroupTrainer needs a heterogeneous config"
+        assert len(plans) == cfg.n_tables, (len(plans), cfg.n_tables)
+        self.cfg = cfg
+        self.spec = dlrm.arena_spec(cfg)
+        self.specs = dlrm.member_specs(cfg)
+        self.plans = tuple(plans)
+        self.params = params
+        self.max_l = max_l
+        self.refresh_every = refresh_every
+        self.decay = decay
+        opt, step = dlrm.make_train_step_ragged(cfg, max_l=max_l, lr=lr,
+                                                sparse=True)
+        self.opt_state = opt.init(params)
+        self._step = jax.jit(step, donate_argnums=(1,))
+        self._patch = jax.jit(_patch_hot_rows, static_argnums=(2,))
+        self.hists = [np.zeros(sp.total_rows, np.float64)
+                      for sp in self.specs]
+        self.steps = 0
+        self.version = 0
+        self.losses: list = []
+        self.caches = []
+        self.cold_q = []
+        self._dirty_q = []
+        for plan, sp, arena in zip(self.plans, self.specs,
+                                   params["tables"]):
+            self.caches.append(
+                se.build_hot_cache(arena, sp, np.ones(sp.total_rows),
+                                   plan.cache_k)
+                if plan.cache_k > 0 else None)
+            self.cold_q.append(es.QuantizedArena.from_arena(arena)
+                               if plan.quantize else None)
+            self._dirty_q.append(np.zeros(arena.shape[0], bool)
+                                 if plan.quantize else None)
+
+    # -- histogram ---------------------------------------------------------
+
+    def observe(self, batch: Dict) -> None:
+        """Fold one interleaved batch into the per-table histograms."""
+        counts = es.group_trace_counts(self.specs, batch["indices"],
+                                       batch["offsets"])
+        for t, c in enumerate(counts):
+            self.hists[t] = self.decay * self.hists[t] + c
+
+    # -- training ----------------------------------------------------------
+
+    def train_step(self, batch: Dict) -> float:
+        """One optimizer step; per-table write-through patch rides along."""
+        self.observe(batch)
+        batch_dev = {k: jnp.asarray(v) for k, v in batch.items()
+                     if k in ("dense", "indices", "offsets", "labels")}
+        self.params, self.opt_state, loss, touched = self._step(
+            self.params, self.opt_state, batch_dev)
+        self.steps += 1
+        for t, rows in enumerate(touched):
+            if self._dirty_q[t] is not None:
+                self._dirty_q[t][np.asarray(rows)] = True
+            if self.caches[t] is not None:
+                self.caches[t] = self._patch(
+                    self.caches[t], self.params["tables"][t],
+                    self.specs[t].null_row, rows)
+        if self.steps % self.refresh_every == 0:
+            self.rebuild()
+        loss = float(loss)
+        self.losses.append(loss)
+        return loss
+
+    def train(self, batches: Iterable[Dict]) -> list:
+        for batch in batches:
+            self.train_step(batch)
+        return self.losses
+
+    # -- publication -------------------------------------------------------
+
+    def rebuild(self) -> int:
+        """Re-rank every cached table from its decayed histogram, patch
+        every int8 mirror (only the rows dirtied since the last rebuild),
+        and bump ONE version for the whole group — tables refresh
+        together or not at all, so a replica can never serve a torn mix
+        of table versions."""
+        for t, (plan, sp) in enumerate(zip(self.plans, self.specs)):
+            if plan.cache_k > 0:
+                self.caches[t] = se.build_hot_cache(
+                    self.params["tables"][t], sp, self.hists[t],
+                    plan.cache_k)
+            if self.cold_q[t] is not None:
+                rows = np.nonzero(self._dirty_q[t])[0]
+                if rows.size:
+                    self.cold_q[t] = self.cold_q[t].quantize_rows(
+                        self.params["tables"][t],
+                        jnp.asarray(rows, jnp.int32))
+                    self._dirty_q[t][:] = False
+        self.version += 1
+        return self.version
+
+    def serving_source(self) -> es.TableGroupSource:
+        """The group a replica should serve right now (same structure at
+        every step — see the class docstring)."""
+        members = []
+        for t, plan in enumerate(self.plans):
+            cold = (self.cold_q[t] if self.cold_q[t] is not None
+                    else es.FpArena(self.params["tables"][t]))
+            members.append(es.CachedSource(hot=self.caches[t], cold=cold)
+                           if self.caches[t] is not None else cold)
+        return es.TableGroupSource(members=tuple(members),
+                                   specs=self.specs)
+
+    def publish_source(self) -> bytes:
+        """One ``VersionedSource`` blob carrying every table's sparse
+        params (hot rows + cold arenas) under the group's single
+        version."""
+        return es.VersionedSource(source=self.serving_source(),
+                                  version=self.version).serialize()
+
+    def sync_engine(self, engine) -> bool:
+        """Push the live group into a RecEngine if it is behind (same
+        step-gate as ``OnlineTrainer.sync_engine``; params and source
+        swap together)."""
+        if getattr(engine, "_trainer_step", -1) >= self.steps \
+                and engine.source_version >= self.version:
+            return False
+        engine.params = self.params
+        engine.update_source(self.serving_source(), version=self.version)
+        engine._trainer_step = self.steps
+        return True
+
+
 def make_drifting_zipf(cfg: DLRMConfig, *, batch_size: int, mean_l: int,
                        max_l: int, drift_per_batch: int = 0,
                        alpha: float = 1.05, seed: int = 0):
@@ -336,8 +486,16 @@ def make_drifting_zipf(cfg: DLRMConfig, *, batch_size: int, mean_l: int,
         np.cumsum(lens, out=offsets[1:])
         n = int(offsets[-1])
         raw = rng.zipf(alpha, size=n)
-        indices = (((raw - 1) + t * drift_per_batch)
-                   % cfg.rows_per_table).astype(np.int32)
+        shifted = (raw - 1) + t * drift_per_batch
+        if cfg.heterogeneous:
+            # fold each position into its own table's vocab (per-table
+            # skew comes from table_alphas at generation time elsewhere;
+            # here the drift scenario keeps one shared alpha)
+            seg = np.searchsorted(offsets[1:], np.arange(n), side="right")
+            rows = np.asarray(cfg.resolved_table_rows)
+            indices = (shifted % rows[seg % cfg.n_tables]).astype(np.int32)
+        else:
+            indices = (shifted % cfg.rows_per_table).astype(np.int32)
         indices = np.concatenate([indices, np.zeros(pad_to - n, np.int32)])
         dense = rng.randn(batch_size, cfg.dense_features).astype(np.float32)
         logit = dense @ w * 0.5

@@ -84,6 +84,57 @@ def source_row_grads(spec, d_bags: jax.Array, indices: jax.Array,
                             fill_row=spec.null_row)
 
 
+def group_row_grads(specs, d_bags: jax.Array, indices: jax.Array,
+                    offsets: jax.Array):
+    """Per-table row gradients of a ``TableGroupSource`` lookup.
+
+    The group sibling of ``source_row_grads``: `specs` are the group's
+    per-table ArenaSpecs, `d_bags` (n_bags, dmax) is d loss / d padded
+    bag output, `indices`/`offsets` the interleaved ragged batch exactly
+    as passed to ``lookup_bags``. Returns a list of per-table
+    (rows (N,), grads (N, dim_t)) pairs — table t's touched rows in ITS
+    OWN arena and their summed gradients (only the leading dim_t lanes of
+    `d_bags` reach table t; the padded tail's cotangent is structurally
+    zero). Stream positions of other tables are routed to table t's null
+    row, whose gradient ``ragged_row_grads`` forces to zero — so each
+    pair equals the row grads of that member's own per-table-stream
+    lookup exactly.
+    """
+    table, valid = se.ragged_position_tables(offsets, indices.shape[0],
+                                             len(specs))
+    out = []
+    for t, sp in enumerate(specs):
+        mine = valid & (table == t)
+        idx_t = jnp.where(mine, indices,
+                          jnp.asarray(sp.null_row, indices.dtype))
+        rows, grads = ragged_row_grads(d_bags[:, :sp.dim], idx_t, offsets,
+                                       fill_row=sp.null_row)
+        out.append((rows, grads))
+    return out
+
+
+def group_rowwise_adagrad(lr, eps: float = 1e-8) -> SparseOptimizer:
+    """``sparse_rowwise_adagrad`` over a tuple of per-table arenas: one
+    independent accumulator per table, updates applied per (rows_t,
+    grads_t) pair from ``group_row_grads``. Exact per table vs the
+    single-arena sparse optimizer by construction (it IS that optimizer,
+    applied per member)."""
+    leaf = sparse_rowwise_adagrad(lr, eps)
+
+    def init(arenas):
+        return tuple(leaf.init(a) for a in arenas)
+
+    def update(arenas, states, per_table):
+        new_arenas, new_states = [], []
+        for a, s, (rows, grads) in zip(arenas, states, per_table):
+            na, ns = leaf.update(a, s, rows, grads)
+            new_arenas.append(na)
+            new_states.append(ns)
+        return tuple(new_arenas), tuple(new_states)
+
+    return SparseOptimizer(init, update)
+
+
 def shard_local_rows(rows: jax.Array, row_grads: jax.Array, *, lo,
                      vlocal: int, null_row: int
                      ) -> Tuple[jax.Array, jax.Array]:

@@ -1,0 +1,507 @@
+"""Property suite for heterogeneous per-table sources (TableGroupSource).
+
+THE composition law this file pins: a ``TableGroupSource`` lookup — and
+its gradient — is bit-for-bit the per-table loop of its members' own
+lookups, for every mix of member kinds (fp / int8 / hot-cached / cached
+over int8), heterogeneous vocabs and dims (including vocab 1 and dim 1),
+and shard counts {1, 2, 4} (real shard_map in a subprocess with fake host
+devices). Also locked down here: the degenerate table-group shapes, the
+group plan (``SourceSpec.tables``), per-table hit-rate accounting in
+``RecEngine.stats()``, stale-version rejection of a single-member swap,
+the group broadcast artifact, and the heterogeneous train step.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.dlrm import DLRM_HET_SMOKE
+from repro.core import dlrm
+from repro.core import embedding_source as es
+from repro.core import sparse_engine as se
+from repro.data import DLRMSynthetic
+from repro.training import group_row_grads
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+# (vocabs, dims) inventories exercising the hard shapes: a vocab-1 table,
+# a dim-1 table, a single-table group, wildly uneven sizes
+INVENTORIES = (
+    ((40, 7, 1), (8, 4, 1)),
+    ((1, 300, 12), (1, 16, 8)),
+    ((25,), (8,)),                    # single-table group
+    ((13, 13, 13, 13), (4, 8, 16, 2)),
+)
+# member-kind assignment patterns, cycled over the group's tables
+KIND_PATTERNS = (("fp",), ("int8", "fp"), ("cached", "fp", "int8"),
+                 ("cached_int8", "cached", "fp"))
+
+
+def _specs_of(vocabs, dims):
+    return tuple(se.ArenaSpec(1, v, d) for v, d in zip(vocabs, dims))
+
+
+def _het_case(rng, vocabs, b, max_l, pad=0):
+    """Interleaved (sample, table) ragged batch with the hard edges in:
+    an empty bag, a full bag, an ALL-EMPTY table (every bag of table 0
+    empty) while another table is dense, a duplicate index, and a padded
+    tail."""
+    t_count = len(vocabs)
+    n_bags = b * t_count
+    lens = rng.randint(0, max_l + 1, n_bags).astype(np.int32)
+    if t_count > 1:
+        lens[0::t_count] = 0                   # table 0: all bags empty
+        lens[1::t_count] = max_l               # another table: dense
+    else:
+        lens[0], lens[-1] = 0, max_l           # an empty and a full bag
+    off = np.zeros(n_bags + 1, np.int32)
+    np.cumsum(lens, out=off[1:])
+    n = int(off[-1])
+    seg = np.searchsorted(off[1:], np.arange(n), side="right")
+    table = seg % t_count
+    idx = np.empty(n, np.int32)
+    for t in range(t_count):
+        m = table == t
+        idx[m] = rng.randint(0, vocabs[t], int(m.sum()))
+    if n >= 2:
+        idx[n - 1] = idx[n - 2] if table[n - 1] == table[n - 2] else idx[n - 1]
+    idx = np.concatenate([idx, np.zeros(pad, np.int32)])
+    return idx, off
+
+
+def _member(kind, arena, sp, rng):
+    if kind == "fp":
+        return es.FpArena(arena)
+    if kind == "int8":
+        return es.QuantizedArena.from_arena(arena)
+    counts = rng.rand(sp.total_rows)
+    hot = se.build_hot_cache(arena, sp, counts, k=min(4, sp.rows_per_table))
+    cold = (es.QuantizedArena.from_arena(arena) if kind == "cached_int8"
+            else es.FpArena(arena))
+    return es.CachedSource(hot=hot, cold=cold)
+
+
+def _mixed_group(vocabs, dims, kinds, seed):
+    specs = _specs_of(vocabs, dims)
+    arenas = [se.init_arena(jax.random.PRNGKey(seed + t), sp, scale=1.0)
+              for t, sp in enumerate(specs)]
+    rng = np.random.RandomState(seed)
+    members = tuple(_member(kinds[t % len(kinds)], a, sp, rng)
+                    for t, (a, sp) in enumerate(zip(arenas, specs)))
+    return es.TableGroupSource(members=members, specs=specs)
+
+
+def _streams(idx, off, t_count):
+    batch = {"indices": idx, "offsets": off}
+    idx_t, off_t = DLRMSynthetic.ragged_per_table(batch, t_count)
+    return (tuple(jnp.asarray(i) for i in idx_t),
+            tuple(jnp.asarray(o) for o in off_t))
+
+
+# ---------------------------------------------------------------------------
+# the tentpole law: grouped dispatch == per-table loop, bit for bit
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=12)
+@given(st.sampled_from(INVENTORIES), st.sampled_from(KIND_PATTERNS),
+       st.integers(0, 2**31 - 1))
+def test_group_lookup_equals_per_table_loop(inventory, kinds, seed):
+    vocabs, dims = inventory
+    rng = np.random.RandomState(seed % (2**32 - 1))
+    group = _mixed_group(vocabs, dims, kinds, seed % 997)
+    max_l = 5
+    idx, off = _het_case(rng, vocabs, b=3, max_l=max_l, pad=4)
+    idxj, offj = jnp.asarray(idx), jnp.asarray(off)
+    spec = group.envelope_spec
+
+    got = np.asarray(es.lookup_bags(group, spec, idxj, offj, max_l=max_l))
+
+    # reference 1: the per-table-stream entry point
+    idx_t, off_t = _streams(idx, off, len(vocabs))
+    loop = np.asarray(es.lookup_bags_per_table(group, idx_t, off_t,
+                                               max_l=max_l))
+    np.testing.assert_array_equal(got, loop)
+
+    # reference 2: a hand-written loop of each member's OWN lookup over
+    # only its stream (independent of lookup_bags_per_table)
+    for t, (m, sp) in enumerate(zip(group.members, group.specs)):
+        own = np.asarray(es.lookup_bags(m, sp, idx_t[t], off_t[t],
+                                        max_l=max_l))[:, 0, :]
+        np.testing.assert_array_equal(got[:, t, :sp.dim],
+                                      own.astype(got.dtype))
+        # padded tail lanes are exactly zero
+        assert (got[:, t, sp.dim:] == 0).all()
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.sampled_from(INVENTORIES), st.sampled_from(KIND_PATTERNS),
+       st.integers(0, 2**31 - 1))
+def test_group_grads_equal_per_table_loop(inventory, kinds, seed):
+    """jax.grad through grouped dispatch == jax.grad through the
+    per-table loop, leaf for leaf, over mixed member kinds (hot rows,
+    cold arenas, and int8 scale leaves all receive identical
+    cotangents)."""
+    vocabs, dims = inventory
+    rng = np.random.RandomState(seed % (2**32 - 1))
+    group = _mixed_group(vocabs, dims, kinds, seed % 997)
+    max_l = 4
+    idx, off = _het_case(rng, vocabs, b=2, max_l=max_l, pad=3)
+    idxj, offj = jnp.asarray(idx), jnp.asarray(off)
+    idx_t, off_t = _streams(idx, off, len(vocabs))
+    spec = group.envelope_spec
+    b = (off.shape[0] - 1) // len(vocabs)
+    w = jnp.asarray(rng.randn(b, len(vocabs), spec.dim), jnp.float32)
+
+    def loss_grouped(g):
+        out = es.lookup_bags(g, spec, idxj, offj, max_l=max_l)
+        return jnp.sum(out.astype(jnp.float32) * w)
+
+    def loss_loop(g):
+        out = es.lookup_bags_per_table(g, idx_t, off_t, max_l=max_l)
+        return jnp.sum(out.astype(jnp.float32) * w)
+
+    g1 = jax.grad(loss_grouped, allow_int=True)(group)
+    g2 = jax.grad(loss_loop, allow_int=True)(group)
+    leaves1 = jax.tree_util.tree_leaves(g1)
+    leaves2 = jax.tree_util.tree_leaves(g2)
+    assert len(leaves1) == len(leaves2) and leaves1
+    for a, b_ in zip(leaves1, leaves2):
+        if np.issubdtype(np.asarray(a).dtype, np.floating):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+def test_group_fixed_layout_matches_ragged(rng):
+    """lookup_fixed over a group == lookup_bags over the equivalent
+    uniform ragged encoding."""
+    vocabs, dims = (30, 9, 1), (8, 2, 1)
+    group = _mixed_group(vocabs, dims, ("cached", "int8", "fp"), 5)
+    spec = group.envelope_spec
+    b, t, l = 3, len(vocabs), 4
+    idx = np.stack([rng.randint(0, vocabs[j], (b, l))
+                    for j in range(t)], axis=1).astype(np.int32)
+    fixed = np.asarray(es.lookup_fixed(group, spec, jnp.asarray(idx)))
+    off = jnp.asarray(np.arange(b * t + 1, dtype=np.int32) * l)
+    ragged = np.asarray(es.lookup_bags(group, spec,
+                                       jnp.asarray(idx.reshape(-1)), off,
+                                       max_l=l))
+    np.testing.assert_array_equal(fixed, ragged)
+
+
+def test_group_degenerate_shapes():
+    """Single-table group; vocab-1 table; one table all-empty while
+    another is dense; a dim-1 member — all against the per-table loop."""
+    for vocabs, dims in (((7,), (4,)), ((1, 50), (8, 8)),
+                         ((5, 5), (1, 16))):
+        rng = np.random.RandomState(0)
+        group = _mixed_group(vocabs, dims, ("fp", "int8"), 3)
+        idx, off = _het_case(rng, vocabs, b=2, max_l=3, pad=2)
+        got = np.asarray(es.lookup_bags(group, group.envelope_spec,
+                                        jnp.asarray(idx),
+                                        jnp.asarray(off), max_l=3))
+        idx_t, off_t = _streams(idx, off, len(vocabs))
+        loop = np.asarray(es.lookup_bags_per_table(group, idx_t, off_t,
+                                                   max_l=3))
+        np.testing.assert_array_equal(got, loop)
+        if len(vocabs) > 1:
+            # table 0's bags are all empty by construction: exact zeros
+            assert (got[:, 0, :] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# per-table training contract
+# ---------------------------------------------------------------------------
+
+def test_group_row_grads_match_autodiff(rng):
+    """group_row_grads scatters == jax.grad of the group lookup w.r.t.
+    each member arena (null rows pinned at zero) — the O(N) per-table
+    training contract."""
+    vocabs, dims = (20, 6, 1), (8, 4, 1)
+    specs = _specs_of(vocabs, dims)
+    arenas = [se.init_arena(jax.random.PRNGKey(t), sp, scale=1.0)
+              for t, sp in enumerate(specs)]
+    group = es.TableGroupSource(
+        members=tuple(es.FpArena(a) for a in arenas), specs=specs)
+    spec = group.envelope_spec
+    idx, off = _het_case(np.random.RandomState(2), vocabs, b=3, max_l=4,
+                         pad=2)
+    idxj, offj = jnp.asarray(idx), jnp.asarray(off)
+    n_bags = off.shape[0] - 1
+    w = jnp.asarray(rng.randn(n_bags // len(vocabs), len(vocabs),
+                              spec.dim), jnp.float32)
+
+    def loss(g):
+        return jnp.sum(es.lookup_bags(g, spec, idxj, offj, max_l=4) * w)
+
+    g_auto = jax.grad(loss)(group)
+    per_table = group_row_grads(specs, w.reshape(n_bags, spec.dim),
+                                idxj, offj)
+    for t, (sp, (rows, row_g)) in enumerate(zip(specs, per_table)):
+        dense = np.zeros(arenas[t].shape, np.float32)
+        for r, gr in zip(np.asarray(rows), np.asarray(row_g)):
+            if r != sp.null_row:
+                dense[r] += gr
+        want = np.asarray(g_auto.members[t].arena).copy()
+        want[sp.null_row] = 0.0
+        np.testing.assert_allclose(dense, want, rtol=1e-5, atol=1e-5)
+
+
+def test_group_train_step_sparse_equals_dense_grad():
+    """The per-table row-wise sparse step == the dense-grad baseline,
+    bit for bit over 3 steps (per-table Adagrad accumulators included)."""
+    cfg = DLRM_HET_SMOKE
+    params = dlrm.init(jax.random.PRNGKey(0), cfg)
+    data = DLRMSynthetic(cfg, seed=1)
+    rb = data.ragged_batch(4, dist="poisson", mean_l=3, max_l=6)
+    batch = {k: jnp.asarray(rb[k])
+             for k in ("dense", "indices", "offsets", "labels")}
+    opt_s, step_s = dlrm.make_train_step_ragged(cfg, max_l=6, lr=1e-2,
+                                                sparse=True)
+    opt_d, step_d = dlrm.make_train_step_ragged(cfg, max_l=6, lr=1e-2,
+                                                sparse=False)
+    ps, ss = params, opt_s.init(params)
+    pd, sd = params, opt_d.init(params)
+    step_s, step_d = jax.jit(step_s), jax.jit(step_d)
+    for _ in range(3):
+        ps, ss, loss_s, touched = step_s(ps, ss, batch)
+        pd, sd, loss_d, _ = step_d(pd, sd, batch)
+        np.testing.assert_allclose(float(loss_s), float(loss_d),
+                                   rtol=1e-6)
+    assert isinstance(touched, tuple) and len(touched) == cfg.n_tables
+    for a, b in zip(jax.tree_util.tree_leaves(ps),
+                    jax.tree_util.tree_leaves(pd)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+    # sharded group training is refused loudly, not silently wrong
+    from repro.launch.mesh import make_mesh
+    if len(jax.devices()) >= 2:
+        mesh = make_mesh((2,), ("model",))
+        with pytest.raises(ValueError, match="heterogeneous"):
+            dlrm.make_train_step_ragged(cfg, max_l=6, mesh=mesh,
+                                        sharded=True)
+
+
+def test_online_group_trainer_protocol():
+    """Per-table refresh under one version: caches stay write-through
+    exact between rebuilds, the int8 mirror matches a full requant at
+    every rebuild, and publish_source round-trips into an engine."""
+    from repro.serving import RecEngine
+    from repro.training import OnlineGroupTrainer
+    cfg = DLRM_HET_SMOKE
+    params = dlrm.init(jax.random.PRNGKey(0), cfg)
+    plans = dlrm.table_plans(cfg, cache_k=(16, 8, 0),
+                             quantize_rows_above=1000)
+    assert plans[0].quantize and not plans[1].quantize
+    tr = OnlineGroupTrainer(cfg, params, max_l=6, plans=plans, lr=1e-2,
+                            refresh_every=3)
+    data = DLRMSynthetic(cfg, seed=5)
+    pad = 4 * cfg.n_tables * 6
+    for _ in range(7):
+        tr.train_step(data.ragged_batch(4, dist="poisson", mean_l=3,
+                                        max_l=6, pad_to=pad))
+    assert tr.version == 2 and len(tr.losses) == 7
+    for t, plan in enumerate(plans):
+        if plan.cache_k == 0:
+            assert tr.caches[t] is None
+            continue
+        # write-through exactness: every pinned hot row equals its
+        # live arena row right now
+        cache = tr.caches[t]
+        hot_ids = np.asarray(cache.hot_ids)
+        np.testing.assert_array_equal(
+            np.asarray(cache.hot_rows[:-1]),
+            np.asarray(tr.params["tables"][t])[hot_ids])
+        assert not np.asarray(cache.hot_rows[-1]).any()
+    # int8 mirror == full requant at the last rebuild... after which one
+    # more step may have dirtied rows again; force a rebuild to compare
+    tr.rebuild()
+    full = es.QuantizedArena.from_arena(tr.params["tables"][0])
+    np.testing.assert_array_equal(np.asarray(tr.cold_q[0].q),
+                                  np.asarray(full.q))
+
+    blob = tr.publish_source()
+    back = es.VersionedSource.deserialize(blob)
+    assert isinstance(back.source, es.TableGroupSource)
+    eng = RecEngine(cfg, tr.params, source=tr.serving_source(), max_l=6,
+                    max_batch=4, max_wait_ms=0.0, buckets=(4,))
+    assert back.apply(eng) and eng.source_version == back.version
+    assert not back.apply(eng)            # idempotent re-delivery
+    assert tr.sync_engine(eng)            # step-gate push
+    assert not tr.sync_engine(eng)
+
+
+# ---------------------------------------------------------------------------
+# plans, serving, stats
+# ---------------------------------------------------------------------------
+
+def test_group_plan_validation():
+    plans = (es.TablePlan(rows=10, dim=4),)
+    with pytest.raises(ValueError, match="TablePlan"):
+        es.SourceSpec(tables=plans, cache_k=8)
+    with pytest.raises(ValueError, match="fixed"):
+        es.SourceSpec(tables=plans, layout="fixed")
+    spec = es.SourceSpec(tables=(es.TablePlan(rows=10, dim=4, cache_k=2),
+                                 es.TablePlan(rows=5, dim=8,
+                                              quantize=True)))
+    assert spec.cached and spec.path_name() == "grouped"
+    arenas = [se.init_arena(jax.random.PRNGKey(t), tp.arena_spec)
+              for t, tp in enumerate(spec.tables)]
+    src = spec.build(arenas, None)
+    assert isinstance(src, es.TableGroupSource)
+    assert isinstance(src.members[0], es.CachedSource)
+    assert isinstance(src.members[1], es.QuantizedArena)
+    # one-per-line rendering: every member gets its own indented line
+    tree = es.describe_source(src, multiline=True)
+    assert len(tree.splitlines()) >= 5 and "table[1]" in tree
+    assert es.describe_source(src) == "group[cached(fp),int8]"
+
+
+def test_group_engine_serves_with_per_table_hit_stats():
+    """RecEngine over a group plan: per-table hit-rate mapping (None for
+    non-cached members), correct probabilities vs forward_ragged, stale
+    single-member swaps rejected, fresh member swap without recompile."""
+    from repro.serving import RecEngine, requests_from_ragged_batch
+    cfg = DLRM_HET_SMOKE
+    spec = dlrm.arena_spec(cfg)
+    specs = dlrm.member_specs(cfg)
+    params = dlrm.init(jax.random.PRNGKey(0), cfg)
+    data = DLRMSynthetic(cfg, seed=3)
+    rb = data.ragged_batch(4, dist="poisson", mean_l=3, max_l=6)
+    counts = es.group_trace_counts(specs, rb["indices"], rb["offsets"])
+    plans = dlrm.table_plans(cfg, cache_k=(16, 8, 0))
+    eng = RecEngine(cfg, params, source=es.SourceSpec(tables=plans),
+                    cache_trace=counts, max_l=6, max_batch=8,
+                    max_wait_ms=0.0, buckets=(4, 8))
+    eng.warmup()
+    compiled = (eng._serve._cache_size()
+                if hasattr(eng._serve, "_cache_size") else None)
+    reqs = requests_from_ragged_batch(rb, cfg.n_tables)
+    for r in reqs:
+        eng.submit(r)
+    eng.step(force=True)
+    eng.drain()
+    s = eng.stats()
+    assert s["path"] == "grouped"
+    hr = s["cache_hit_rate"]
+    assert set(hr) == {0, 1, 2}
+    assert hr[2] is None                      # non-cached member
+    assert hr[0] is not None and 0.0 <= hr[0] <= 1.0
+    assert "table[2]" in s["source_tree"]
+    # probabilities match the direct group forward
+    want = np.asarray(jax.nn.sigmoid(dlrm.forward_ragged(
+        params, cfg, jnp.asarray(rb["dense"]), jnp.asarray(rb["indices"]),
+        jnp.asarray(rb["offsets"]), max_l=6, source=eng.source)))
+    got = np.asarray([r.prob for r in reqs])
+    np.testing.assert_allclose(got, want[:len(got)], rtol=1e-4, atol=1e-5)
+
+    # swap ONE member's hot cache under a bumped version: no recompile,
+    # counters reset
+    new_hot = se.build_hot_cache(params["tables"][0], specs[0], counts[0],
+                                 16)
+    fresh = es.replace_member(eng.source, 0,
+                              es.CachedSource(new_hot,
+                                              eng.source.members[0].cold))
+    eng.update_source(fresh, version=2)
+    assert eng.stats()["cache_hit_rate"][0] is None   # no post-swap data
+    for r in requests_from_ragged_batch(rb, cfg.n_tables):
+        eng.submit(r)
+    eng.step(force=True)
+    eng.drain()
+    if compiled is not None:
+        assert eng._serve._cache_size() == compiled, \
+            "a single-member swap recompiled the serve step"
+    # a stale single-member swap is rejected at the same boundary
+    stale = es.replace_member(eng.source, 0, eng.source.members[0])
+    with pytest.raises(ValueError, match="stale"):
+        eng.update_source(stale, version=1)
+    # structure-changing swaps are refused (they would recompile)
+    with pytest.raises(AssertionError):
+        eng.update_source(es.replace_member(
+            eng.source, 0, eng.source.members[0].cold), version=3)
+
+
+def test_group_artifact_roundtrip_mixed_members(rng):
+    group = _mixed_group((12, 5, 1), (8, 4, 1),
+                         ("cached_int8", "fp", "int8"), 9)
+    blob = es.VersionedSource(group, 11).serialize()
+    back = es.VersionedSource.deserialize(blob)
+    assert back.version == 11
+    assert isinstance(back.source, es.TableGroupSource)
+    assert back.source.specs == group.specs
+    for a, b in zip(jax.tree_util.tree_leaves(group),
+                    jax.tree_util.tree_leaves(back.source)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# sharded members through the REAL shard_map entry point
+# ---------------------------------------------------------------------------
+
+def _run_with_devices(code: str, n: int = 4, timeout: int = 480) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = SRC
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    prelude = textwrap.dedent("""
+        import json, jax, jax.numpy as jnp, numpy as np
+        from repro.core import embedding_source as es
+        from repro.core import sparse_engine as se
+        from repro.launch.mesh import make_mesh
+    """)
+    out = subprocess.run([sys.executable, "-c", prelude + code],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_group_sharded_members_match_replicated_shard_map():
+    """A group whose members are row-sharded (ShardedArena) over
+    {1, 2, 4}-way meshes == the replicated group, through the real
+    shard_map entry point, for fp and cached members."""
+    r = _run_with_devices("""
+vocabs, dims = (37, 9), (8, 4)
+specs = tuple(se.ArenaSpec(1, v, d) for v, d in zip(vocabs, dims))
+rng = np.random.RandomState(0)
+errs = {}
+for shards in (1, 2, 4):
+    mesh = make_mesh((shards,), ("model",))
+    arenas = [se.init_arena(jax.random.PRNGKey(t), sp, shards, scale=1.0)
+              for t, sp in enumerate(specs)]
+    n_bags = 3 * len(vocabs)
+    lens = rng.randint(0, 5, n_bags).astype(np.int32)
+    off = np.zeros(n_bags + 1, np.int32); off[1:] = np.cumsum(lens)
+    n = int(off[-1])
+    seg = np.searchsorted(off[1:], np.arange(n), side="right")
+    idx = np.empty(n, np.int32)
+    for t, v in enumerate(vocabs):
+        m = (seg % len(vocabs)) == t
+        idx[m] = rng.randint(0, v, int(m.sum()))
+    idxj = jnp.asarray(np.concatenate([idx, np.zeros(3, np.int32)]))
+    offj = jnp.asarray(off)
+    counts = rng.rand(specs[0].total_rows)
+    hot = se.build_hot_cache(arenas[0], specs[0], counts, 4)
+    repl = es.TableGroupSource(
+        (es.CachedSource(hot, es.FpArena(arenas[0])),
+         es.FpArena(arenas[1])), specs)
+    shrd = es.TableGroupSource(
+        (es.CachedSource(hot, es.ShardedArena(es.FpArena(arenas[0]),
+                                              mesh)),
+         es.ShardedArena(es.FpArena(arenas[1]), mesh)), specs)
+    env = repl.envelope_spec
+    want = es.lookup_bags(repl, env, idxj, offj, max_l=4)
+    got = jax.jit(lambda i, o: es.lookup_bags(shrd, env, i, o,
+                                              max_l=4))(idxj, offj)
+    errs[shards] = float(jnp.abs(got - want).max())
+print(json.dumps({str(k): v for k, v in errs.items()}))
+""")
+    for shards, err in r.items():
+        assert err < 1e-5, (shards, err)
