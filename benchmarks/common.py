@@ -54,6 +54,34 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
                                         iters=iters)))
 
 
+def time_fns_interleaved(fns_args, *, warmup: int = 2,
+                         iters: int = 10) -> list:
+    """Median wall-times (seconds) of several callables, sampled
+    round-robin: iteration i times every candidate once before moving
+    on. Sequential `time_fn` calls expose whichever candidate runs last
+    to any machine-load ramp; interleaving spreads that drift equally,
+    which matters when the candidates are within noise of each other.
+    `fns_args` is a list of (fn, args_tuple).
+    """
+    import jax
+
+    def block(out):
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready() if hasattr(
+                x, "block_until_ready") else x, out)
+
+    for fn, args in fns_args:
+        for _ in range(warmup):
+            block(fn(*args))
+    samples = [[] for _ in fns_args]
+    for _ in range(iters):
+        for j, (fn, args) in enumerate(fns_args):
+            t0 = time.perf_counter()
+            block(fn(*args))
+            samples[j].append(time.perf_counter() - t0)
+    return [float(np.median(s)) for s in samples]
+
+
 def time_percentiles(fn: Callable, *args, warmup: int = 2,
                      iters: int = 20) -> dict:
     """{'p50_us', 'p95_us'} of fn(*args) — the serving-style summary."""
@@ -62,18 +90,26 @@ def time_percentiles(fn: Callable, *args, warmup: int = 2,
             "p95_us": float(np.percentile(s, 95))}
 
 
-def csv_row(name: str, us_per_call: float, derived: str) -> str:
+def csv_row(name: str, us_per_call, derived: str) -> str:
+    """One CSV line; us_per_call=None marks a derived-only scenario (a
+    static/analytic table with no timed call) — its timing field is left
+    empty and downstream parsing emits NO timing keys for it."""
+    if us_per_call is None:
+        return f"{name},,{derived}"
     return f"{name},{us_per_call:.1f},{derived}"
 
 
 def parse_csv_rows(rows) -> dict:
     """'name,us,k=v;k=v' rows -> {name: {p50_us, derived:{...}}} — the
     machine-readable mirror of the printed CSV (numbers parsed where they
-    parse; '3.10x' style ratios kept as strings)."""
+    parse; '3.10x' style ratios kept as strings). Rows with an empty
+    timing field (derived-only scenarios) carry only 'derived' — no
+    p50_us key, so timing aggregators never see a fake 0.0."""
     out = {}
     for row in rows:
         name, us, derived = row.split(",", 2)
-        rec = {"p50_us": float(us), "derived": {}}
+        rec = {"derived": {}} if us == "" else {"p50_us": float(us),
+                                                "derived": {}}
         for kv in filter(None, derived.split(";")):
             k, _, v = kv.partition("=")
             try:

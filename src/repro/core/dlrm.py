@@ -549,7 +549,7 @@ def _make_train_step_group(cfg: DLRMConfig, spec: se.ArenaSpec, *,
 
         d_bags = d_emb.reshape(n_bags, spec.dim)
         per_table = so.group_row_grads(specs, d_bags, batch["indices"],
-                                       batch["offsets"])
+                                       batch["offsets"], max_l=max_l)
         new_tables, tables_state = arena_opt.update(
             params["tables"], opt_state["tables"], per_table)
         new_head, mlp_state = mlp_opt.update(d_head, opt_state["mlp"],

@@ -110,15 +110,22 @@ class EmbeddingSource:
     """Base protocol for embedding sources.
 
     Subclasses implement ``reduce_flat`` (ragged reduction over
-    pre-flattened arena row ids -> f32 partial bags) and ``out_dtype``;
-    the fixed-L path falls back to a uniform-offset ragged reduction
-    unless a subclass provides a specialized ``reduce_fixed``. The
-    shard-local hooks (``shard_reduce_flat`` / ``shard_reduce_fixed``)
-    are only required of sources that can sit inside ``ShardedArena``.
-    ``reduce_bags`` / ``reduce_fixed_ids`` are the per-table-id halves of
-    the two entry points; their defaults flatten against the uniform
-    arena layout, and only ``TableGroupSource`` (whose tables have no
-    shared layout to flatten into) overrides them.
+    pre-flattened arena row ids -> f32 partial bags) and ``out_dtype``.
+    The production entry points route through ``reduce_dense``: the
+    ragged stream is relayouted ONCE into a static (n_bags, max_l) id
+    matrix (``se.ragged_dense_ids``) and reduced in a single fused
+    gather + per-bag sum — the fused segmented dispatch that keeps every
+    flexible path (grouped, cached, sharded) on one pass over the batch.
+    ``reduce_dense`` has a default that falls back to ``reduce_flat``
+    with uniform offsets, so a new source is still ONE dataclass
+    implementing ``reduce_flat``; the built-in sources override it with
+    their fused forms. The shard-local hooks (``shard_reduce_flat`` /
+    ``shard_reduce_fixed``) are only required of sources that can sit
+    inside ``ShardedArena``. ``reduce_bags`` / ``reduce_fixed_ids`` are
+    the per-table-id halves of the two entry points; their defaults
+    flatten against the uniform arena layout, and only
+    ``TableGroupSource`` (whose tables have no shared layout to flatten
+    into) overrides them.
     """
 
     @property
@@ -128,10 +135,12 @@ class EmbeddingSource:
     def reduce_bags(self, spec: se.ArenaSpec, indices: jax.Array,
                     offsets: jax.Array, *, max_l: int) -> jax.Array:
         """(N,) per-table row ids + (n_bags+1,) offsets -> f32
-        (n_bags, D). Default: flatten into the uniform arena layout and
-        reduce."""
+        (n_bags, D). Default: flatten into the uniform arena layout,
+        relayout once, reduce fused."""
         flat = se.flatten_ragged_indices(spec, indices, offsets)
-        return self.reduce_flat(spec, flat, offsets, max_l=max_l)
+        dense = se.ragged_dense_ids(flat, offsets, max_l=max_l,
+                                    fill=spec.null_row)
+        return self.reduce_dense(spec, dense)
 
     def reduce_fixed_ids(self, spec: se.ArenaSpec,
                          indices: jax.Array) -> jax.Array:
@@ -143,13 +152,23 @@ class EmbeddingSource:
         """(N,) arena row ids + (n_bags+1,) offsets -> f32 (n_bags, D)."""
         raise NotImplementedError
 
+    def reduce_dense(self, spec: se.ArenaSpec,
+                     dense: jax.Array) -> jax.Array:
+        """(n_bags, max_l) arena row ids (``se.ragged_dense_ids``
+        relayout; short/padded slots point at the zero null row) -> f32
+        (n_bags, D). THE fused hook. Default: fall back to the ragged
+        reduction with uniform offsets, so reduce_flat-only sources keep
+        working unchanged."""
+        n_bags, l = dense.shape
+        offsets = (jnp.arange(n_bags + 1, dtype=jnp.int32) * l)
+        return self.reduce_flat(spec, dense.reshape(-1), offsets, max_l=l)
+
     def reduce_fixed(self, spec: se.ArenaSpec,
                      flat: jax.Array) -> jax.Array:
-        """(B*T, L) arena row ids -> f32 (B*T, D). Default: route through
-        the ragged reduction with uniform offsets."""
-        n_bags, l = flat.shape
-        offsets = (jnp.arange(n_bags + 1, dtype=jnp.int32) * l)
-        return self.reduce_flat(spec, flat.reshape(-1), offsets, max_l=l)
+        """(B*T, L) arena row ids -> f32 (B*T, D). A fixed-L batch IS
+        already a dense id matrix, so this routes straight through the
+        fused hook."""
+        return self.reduce_dense(spec, flat)
 
     def shard_reduce_flat(self, spec: se.ArenaSpec, flat: jax.Array,
                           offsets: jax.Array, axis: str) -> jax.Array:
@@ -181,6 +200,10 @@ class FpArena(EmbeddingSource):
         return ops.sparse_lengths_sum(
             self.arena, flat, offsets, max_l=max_l).astype(jnp.float32)
 
+    def reduce_dense(self, spec, dense):
+        return ops.fused_segment_sum(self.arena, dense,
+                                     null_row=spec.null_row)
+
     def reduce_fixed(self, spec, flat):
         # fused EB-Streamer pass (one kernel over all tables)
         return ops.embedding_bag(self.arena, flat).astype(jnp.float32)
@@ -189,10 +212,8 @@ class FpArena(EmbeddingSource):
         return se.ragged_partial_reduce(self.arena, flat, offsets, axis)
 
     def shard_reduce_fixed(self, spec, flat, axis):
-        lo, vlocal = se.shard_row_range(self.arena, axis)
-        return se._masked_fixed_partial_reduce(
-            lambda safe: jnp.take(self.arena, safe, axis=0)
-            .astype(jnp.float32), lo, vlocal, flat, axis)
+        return se.dense_partial_reduce(self.arena, flat, axis,
+                                       null_row=spec.null_row)
 
 
 @register_source(("q", "scales"))
@@ -231,10 +252,15 @@ class QuantizedArena(EmbeddingSource):
             * jnp.take(self.scales, flat, axis=0)
         return jax.ops.segment_sum(rows, seg, num_segments=n_bags)
 
-    def reduce_fixed(self, spec, flat):
-        rows = jnp.take(self.q, flat, axis=0).astype(jnp.float32)
-        s = jnp.take(self.scales, flat, axis=0)
+    def reduce_dense(self, spec, dense):
+        # dequantize-in-the-gather, one per-bag sum, no scatter (the
+        # null row's zero scale keeps fill slots inert)
+        rows = jnp.take(self.q, dense, axis=0).astype(jnp.float32)
+        s = jnp.take(self.scales, dense, axis=0)
         return (rows * s).sum(axis=1)
+
+    def reduce_fixed(self, spec, flat):
+        return self.reduce_dense(spec, flat)
 
     def shard_reduce_flat(self, spec, flat, offsets, axis):
         return se.ragged_partial_reduce_q(self.q, self.scales, flat,
@@ -246,7 +272,7 @@ class QuantizedArena(EmbeddingSource):
             lambda safe: jnp.take(self.q, safe, axis=0)
             .astype(jnp.float32)
             * jnp.take(self.scales, safe, axis=0), lo, vlocal, flat,
-            axis)
+            axis, null_row=spec.null_row)
 
 
 @register_source(("inner",), ("mesh", "axis"))
@@ -315,6 +341,20 @@ class ShardedArena(EmbeddingSource):
         # kernel does, so both partitions stay bit-comparable
         return part.astype(self.inner.out_dtype).astype(jnp.float32)
 
+    def reduce_dense(self, spec, dense):
+        from jax.sharding import PartitionSpec as P
+        if self.n_shards == 1:
+            return self.inner.reduce_dense(spec, dense)
+        # the fused sharded cold pass: the gather happens INSIDE
+        # shard_map (each shard gathers only the rows it owns, masked,
+        # and reduces its partial bags in the same op) — no per-shard
+        # ragged partials are ever materialized, one psum of reduced
+        # (n_bags, D) vectors crosses chips
+        part = self._shard_map(
+            lambda src, d: src.shard_reduce_fixed(spec, d, self.axis),
+            (dense,), (P(None, None),), P(None, None))
+        return part.astype(self.inner.out_dtype).astype(jnp.float32)
+
     def reduce_fixed(self, spec, flat):
         from jax.sharding import PartitionSpec as P
         if self.n_shards == 1:
@@ -331,7 +371,7 @@ class ShardedArena(EmbeddingSource):
         return part.astype(self.inner.out_dtype).astype(jnp.float32)
 
 
-@register_source(("hot", "cold"))
+@register_source(("hot", "cold"), ("coherent",))
 @dataclass(frozen=True)
 class CachedSource(EmbeddingSource):
     """Replicated top-K hot rows + ANY cold source for the tail.
@@ -342,9 +382,20 @@ class CachedSource(EmbeddingSource):
     exactly the complement — hot + cold == uncached, for every cold
     source. Cold may itself be sharded or quantized (or, later, another
     CachedSource — a two-level cache is this dataclass nested).
+
+    ``coherent=True`` is the construction site's declaration that the
+    hot copies equal their cold arena rows at serve time (§2 law 1 held
+    as an invariant, e.g. a plan built from the live arena). It licenses
+    the XLA lowering to serve an FpArena cold straight from the arena —
+    one gather, the uncached op histogram — while gradients keep the
+    exact hot/cold split and the Pallas kernel keeps the two-table walk.
+    Leave it False (the default) when staleness between the hot copies
+    and the arena must be observable, i.e. the write-through
+    invalidation protocol between an arena update and its hot patch.
     """
     hot: se.HotRowCache
     cold: EmbeddingSource
+    coherent: bool = False
 
     @property
     def out_dtype(self):
@@ -359,6 +410,38 @@ class CachedSource(EmbeddingSource):
                                             flat, offsets, max_l)
         return hot + self.cold.reduce_flat(spec, cold_idx, offsets,
                                            max_l=max_l)
+
+    def reduce_dense(self, spec, dense):
+        # ONE pass with the hit test folded into the walk: per position
+        # exactly one of hot_rows[slot] (miss -> zero null slot) and
+        # cold[cold_id] (hit -> zero null row) is nonzero, so a single
+        # merged reduction equals the uncached lookup bit-for-bit —
+        # replacing the old hot pass + full cold pass.
+        slots = jnp.take(self.hot.slot_of, dense, axis=0)
+        cold_ids = jnp.where(slots < self.k,
+                             jnp.asarray(spec.null_row, dense.dtype),
+                             dense)
+        cold = self.cold
+        if isinstance(cold, FpArena):
+            # dense_ids= opts into the coherence-law lowering (see the
+            # class docstring): on XLA the forward collapses to the
+            # plain arena reduction, while the backward keeps the exact
+            # hot/cold grad split and Pallas keeps the two-table walk.
+            return ops.fused_cached_segment_sum(
+                self.hot.hot_rows, cold.arena, slots, cold_ids,
+                dense_ids=dense if self.coherent else None,
+                null_row=spec.null_row)
+        if isinstance(cold, QuantizedArena):
+            rows = jnp.take(self.hot.hot_rows, slots, axis=0) \
+                .astype(jnp.float32) \
+                + jnp.take(cold.q, cold_ids, axis=0).astype(jnp.float32) \
+                * jnp.take(cold.scales, cold_ids, axis=0)
+            return rows.sum(axis=1)
+        # sharded (or any other) cold source: fused hot pass + the cold
+        # source's own fused pass over the redirected ids
+        hot = ops.fused_segment_sum(self.hot.hot_rows, slots,
+                                    null_row=self.k)
+        return hot + cold.reduce_dense(spec, cold_ids)
 
 
 @register_source(("members",), ("specs",))
@@ -432,19 +515,33 @@ class TableGroupSource(EmbeddingSource):
         assert spec.n_tables == t_count, (spec.n_tables, t_count)
         assert spec.dim == self.dmax, (spec.dim, self.dmax)
         n_bags = offsets.shape[0] - 1
+        if n_bags % t_count:
+            raise ValueError(
+                f"lookup_bags over a TableGroupSource needs the bag "
+                f"count to cover whole (sample, table) rows: got "
+                f"n_bags={n_bags} bags for t_count={t_count} tables "
+                f"(n_bags % t_count == {n_bags % t_count}). Pass "
+                f"offsets with B*t_count+1 entries (one bag per sample "
+                f"per table, row-major).")
         b = n_bags // t_count
-        table, valid = self._position_tables(indices, offsets)
+        # ONE relayout of the interleaved stream, then each member
+        # reduces only its own (B, max_l) bag slice — total work is N
+        # positions, not T*N (the old per-member full-stream walk). -1
+        # marks short/padded slots so each table can redirect them to
+        # its OWN always-zero null row below.
+        dense = se.ragged_dense_ids(indices, offsets, max_l=max_l,
+                                    fill=-1)
+        dense = dense.reshape(b, t_count, max_l)
         cols = []
         for t, (m, sp) in enumerate(zip(self.members, self.specs)):
-            mine = valid & (table == t)
-            flat_t = jnp.where(mine, indices,
-                               jnp.asarray(sp.null_row, indices.dtype))
-            red = m.reduce_flat(sp, flat_t, offsets, max_l=max_l)
+            ids_t = dense[:, t, :]
+            ids_t = jnp.where(ids_t >= 0, ids_t,
+                              jnp.asarray(sp.null_row, ids_t.dtype))
+            red = m.reduce_dense(sp, ids_t)
             # round through the member dtype exactly like the member's
             # own lookup_bags does, so grouped dispatch stays bit-equal
             # to the per-table loop on low-precision members too
             red = red.astype(m.out_dtype).astype(jnp.float32)
-            red = red.reshape(b, t_count, sp.dim)[:, t, :]
             if sp.dim < spec.dim:
                 red = jnp.pad(red, ((0, 0), (0, spec.dim - sp.dim)))
             cols.append(red)
@@ -457,6 +554,12 @@ class TableGroupSource(EmbeddingSource):
                                 max_l=l)
 
     def reduce_flat(self, spec, flat, offsets, *, max_l):
+        raise TypeError(
+            "TableGroupSource has no shared arena layout to reduce over "
+            "— call lookup_bags / lookup_fixed (per-table ids) or "
+            "lookup_bags_per_table (per-table streams) instead")
+
+    def reduce_dense(self, spec, dense):
         raise TypeError(
             "TableGroupSource has no shared arena layout to reduce over "
             "— call lookup_bags / lookup_fixed (per-table ids) or "
@@ -552,7 +655,8 @@ def with_hot_cache(source: CachedSource,
                    cache: se.HotRowCache) -> CachedSource:
     """Same cold source, new hot cache — the write-through/rebuild swap."""
     assert isinstance(source, CachedSource), source
-    return CachedSource(hot=cache, cold=source.cold)
+    return CachedSource(hot=cache, cold=source.cold,
+                        coherent=source.coherent)
 
 
 def replace_member(source: TableGroupSource, t: int,
@@ -588,7 +692,8 @@ def rebind_arena(source: EmbeddingSource,
         return ShardedArena(rebind_arena(source.inner, arena),
                             source.mesh, source.axis)
     if isinstance(source, CachedSource):
-        return CachedSource(source.hot, rebind_arena(source.cold, arena))
+        return CachedSource(source.hot, rebind_arena(source.cold, arena),
+                            coherent=source.coherent)
     return source
 
 
@@ -644,13 +749,36 @@ def _describe_lines(source, depth: int) -> list:
 # ---------------------------------------------------------------------------
 
 def group_hit_counts(source: TableGroupSource, indices: jax.Array,
-                     offsets: jax.Array):
+                     offsets: jax.Array, *, max_l: Optional[int] = None):
     """Per-table (hits, lookups) over one interleaved ragged batch.
 
     Returns two (T,) int32 arrays; a table whose member serves no hot
     cache reports 0 hits (the consumer maps it to None — membership is
     static structure, not data). Jit-friendly: the member walk happens at
-    trace time."""
+    trace time. With ``max_l`` (the lookup's static bound) the stream is
+    relayouted once and each table scans only its own (B, max_l) bag
+    slice — the same fused dispatch the lookup itself uses — instead of
+    T full-stream walks."""
+    t_count = len(source.members)
+    if max_l is not None:
+        n_bags = offsets.shape[0] - 1
+        dense = se.ragged_dense_ids(indices, offsets, max_l=max_l,
+                                    fill=-1)
+        dense = dense.reshape(n_bags // t_count, t_count, max_l)
+        hits, looks = [], []
+        for t, m in enumerate(source.members):
+            ids_t = dense[:, t, :]
+            mine = ids_t >= 0
+            looks.append(jnp.sum(mine.astype(jnp.int32)))
+            cache = hot_cache_of(m)
+            if cache is None:
+                hits.append(jnp.zeros((), jnp.int32))
+            else:
+                slots = jnp.take(cache.slot_of,
+                                 jnp.where(mine, ids_t, 0))
+                hits.append(jnp.sum((mine & (slots < cache.k))
+                                    .astype(jnp.int32)))
+        return jnp.stack(hits), jnp.stack(looks)
     table, valid = source._position_tables(indices, offsets)
     hits, looks = [], []
     for t, m in enumerate(source.members):
@@ -804,7 +932,9 @@ class SourceSpec:
         if counts is None:
             counts = np.ones(spec.total_rows)
         hot = se.build_hot_cache(arena, spec, counts, self.cache_k)
-        return CachedSource(hot=hot, cold=cold)
+        # the hot cache is built from the live arena right here, so the
+        # plan declares coherence — serving gets the fast lowering
+        return CachedSource(hot=hot, cold=cold, coherent=True)
 
     def _build_group(self, arenas, counts=None) -> "TableGroupSource":
         assert len(arenas) == len(self.tables), \
@@ -823,7 +953,7 @@ class SourceSpec:
                 if c is None:
                     c = np.ones(sp.total_rows)
                 hot = se.build_hot_cache(arena, sp, c, tp.cache_k)
-                member = CachedSource(hot=hot, cold=member)
+                member = CachedSource(hot=hot, cold=member, coherent=True)
             members.append(member)
             specs.append(sp)
         return TableGroupSource(members=tuple(members),

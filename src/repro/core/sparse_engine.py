@@ -177,6 +177,48 @@ def ragged_position_tables(offsets: jax.Array, n: int, n_tables: int):
     return table, seg < n_bags
 
 
+def ragged_dense_ids(indices: jax.Array, offsets: jax.Array, *,
+                     max_l: int, fill) -> jax.Array:
+    """Relayout a ragged id stream into a static (n_bags, max_l) matrix.
+
+    ``dense[b, j] = indices[offsets[b] + j]`` for j inside bag b, `fill`
+    elsewhere (short bags and the padded tail). This is THE layout step of
+    the fused segmented dispatch: done once per batch, it turns every
+    downstream reduction into a mask-free gather + per-bag sum — no
+    scatter ever appears in the forward HLO, and the hot/cold and grouped
+    paths all consume the same matrix. `max_l` must bound every bag's
+    length (the same contract the Pallas grid already imposes); with
+    `fill` pointing at an always-zero row the result needs no masking.
+    """
+    n = indices.shape[0]
+    n_bags = offsets.shape[0] - 1
+    if n == 0 or max_l == 0:
+        return jnp.full((n_bags, max_l), fill, indices.dtype)
+    pos = offsets[:-1, None] + jnp.arange(max_l, dtype=offsets.dtype)
+    valid = pos < offsets[1:, None]
+    safe = jnp.minimum(jnp.where(valid, pos, 0), n - 1)
+    dense = jnp.take(indices, safe, axis=0)
+    return jnp.where(valid, dense, jnp.asarray(fill, indices.dtype))
+
+
+def dense_partial_reduce(arena_shard: jax.Array, dense: jax.Array,
+                         axis: str, *, null_row=None) -> jax.Array:
+    """Shard-local half of the fused dense reduce (inside shard_map):
+    gather the owned rows of a ``ragged_dense_ids`` matrix, zero-mask the
+    foreign ones, one per-bag sum, one psum — the sharded cold pass
+    without per-shard segment scatters. Returns f32 (n_bags, D).
+
+    Pass ``null_row`` so the always-zero sentinel the relayout's fill
+    slots point at is masked like a foreign row: the forward is unchanged
+    (the row is zero) but autodiff then gives it zero gradient, matching
+    the ragged path where fill lived past offsets[-1]."""
+    lo, vlocal = shard_row_range(arena_shard, axis)
+    return _masked_fixed_partial_reduce(
+        lambda safe: jnp.take(arena_shard, safe, axis=0)
+        .astype(jnp.float32), lo, vlocal, dense, axis,
+        null_row=null_row)
+
+
 def flatten_ragged_indices(spec: ArenaSpec, indices: jax.Array,
                            offsets: jax.Array) -> jax.Array:
     """Per-table row ids (N,) -> arena row ids (N,) (base + offset).
@@ -229,14 +271,19 @@ def _masked_partial_reduce(gather_f32, lo, vlocal: int, flat: jax.Array,
 
 
 def _masked_fixed_partial_reduce(gather_f32, lo, vlocal: int,
-                                 flat: jax.Array, axis: str) -> jax.Array:
+                                 flat: jax.Array, axis: str, *,
+                                 null_row=None) -> jax.Array:
     """Fixed-L sibling of ``_masked_partial_reduce`` — the same ownership
     protocol over (B*T, L) row blocks: foreign rows gathered as local row
     0 and zero-masked, per-bag sum, one psum. One body, so the fp and
     int8 fixed-path shard reduces can never diverge on the masking edge
-    either. Returns f32 (B*T, D)."""
+    either. When ``null_row`` is given, references to that always-zero
+    sentinel are masked too (same forward, no gradient leaks into the
+    sentinel on the shard that owns it). Returns f32 (B*T, D)."""
     rel = flat - lo
     mine = (rel >= 0) & (rel < vlocal)
+    if null_row is not None:
+        mine = mine & (flat != null_row)
     safe = jnp.where(mine, rel, 0)
     rows = jnp.where(mine[..., None], gather_f32(safe), 0)
     return jax.lax.psum(rows.sum(axis=1), axis)
@@ -310,9 +357,9 @@ def lookup_ragged_quantized(q: jax.Array, scales: jax.Array,
     from repro.core import embedding_source as es
     _deprecated("lookup_ragged_quantized",
                 "lookup_bags(QuantizedArena(q, scales), ...)")
-    # the segment-sum reduction does not consume max_l; any bound works
+    # this shim predates max_l; the stream length is the safe static bound
     return es.lookup_bags(es.QuantizedArena(q, scales), spec, indices,
-                          offsets, max_l=1)
+                          offsets, max_l=int(indices.shape[0]))
 
 
 def null_indices(spec: ArenaSpec, shape) -> jax.Array:

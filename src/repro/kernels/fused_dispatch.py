@@ -1,0 +1,156 @@
+"""Fused segmented dispatch — ONE kernel for grouped / cached / sharded
+lookups.
+
+The flexible sparse paths (heterogeneous table groups, the hot-row cache,
+the row-sharded cold pass) all used to re-walk the full interleaved index
+stream once per component: T full-stream reductions for a T-table group,
+two full passes for a hot/cold split. This module is the kernel half of
+the fix: the stream is relayouted ONCE into a dense (n_bags, max_l) id
+matrix (``se.ragged_dense_ids`` — position j of bag b, short/padded slots
+pointing at an always-zero row), and each consumer walks only its own
+bags' rows, accumulating every bag's reduction in a VMEM register tile.
+
+Two kernels:
+
+* ``fused_segment_sum`` — the segmented gather-reduce over a dense id
+  matrix. Per-table base offsets are already folded into the ids (the
+  BPregs add happens at relayout time), so a table group runs one of
+  these per member over a (B, max_l) *slice* of the shared matrix
+  instead of a full-stream reduction each.
+* ``fused_cached_segment_sum`` — the same walk with the hot/cold hit
+  test *inside* the kernel: each step gathers the hot slot row (miss ->
+  zero null slot) and the cold arena row (hit -> zero null row) and
+  accumulates their sum, so hot + cold costs ONE pass and equals the
+  uncached reduction bit-for-bit (exactly one term per step is nonzero).
+
+The custom VJP lives in ``ops``: a dense id matrix is a uniform-offset
+ragged stream, so the backward IS the existing ``sls_grad_table`` fused
+segment scatter-add — training through the fused path reuses the proven
+gradient kernel unchanged.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+
+
+def _fused_kernel(ids_ref, table_ref, o_ref, acc_ref, *, max_l: int):
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # One gathered row per grid step, row chosen by the prefetched dense
+    # id; fill slots point at the always-zero null row, so the reduction
+    # needs no validity mask at all.
+    acc_ref[...] += table_ref[...].astype(jnp.float32)
+
+    @pl.when(l == max_l - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_segment_sum(table: jax.Array, dense_ids: jax.Array, *,
+                      interpret: bool = False) -> jax.Array:
+    """Segmented gather-reduce over a ``ragged_dense_ids`` matrix.
+
+    table (V, D); dense_ids (B, max_l) int32 with short/padded slots
+    pointing at an always-zero row. Returns f32 (B, D):
+    ``out[b] = sum_j table[dense_ids[b, j]]``.
+    """
+    v, d = table.shape
+    b, max_l = dense_ids.shape
+    if max_l == 0:
+        return jnp.zeros((b, d), jnp.float32)
+    grid = (b, 1, max_l)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda bb, dd, ll, ids: (ids[bb, ll], dd)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda bb, dd, ll, ids: (bb, dd)),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_fused_kernel, max_l=max_l),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )
+    return fn(dense_ids, table)
+
+
+def _cached_kernel(slots_ref, cold_ref, hot_ref, arena_ref, o_ref, acc_ref,
+                   *, max_l: int):
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # The in-kernel hit test: per step exactly one of the two gathered
+    # rows is nonzero (a miss reads the hot arena's zero null slot, a hit
+    # reads the cold arena's zero null row), so accumulating their sum is
+    # bit-for-bit the uncached reduction — in ONE pass.
+    acc_ref[...] += hot_ref[...].astype(jnp.float32) \
+        + arena_ref[...].astype(jnp.float32)
+
+    @pl.when(l == max_l - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_cached_segment_sum(hot_rows: jax.Array, arena: jax.Array,
+                             slots: jax.Array, cold_ids: jax.Array, *,
+                             interpret: bool = False) -> jax.Array:
+    """One-pass hot/cold segmented reduce (the in-kernel hit test).
+
+    hot_rows (K+1, D) with slot K always zero; arena (V, D) with the null
+    row always zero; slots/cold_ids (B, max_l) the dense hot-slot and
+    redirected cold-row matrices of the same bags. Returns f32 (B, D)
+    equal to ``fused_segment_sum(hot_rows, slots) +
+    fused_segment_sum(arena, cold_ids)`` computed in a single walk.
+    """
+    d = arena.shape[1]
+    b, max_l = slots.shape
+    assert cold_ids.shape == slots.shape, (cold_ids.shape, slots.shape)
+    assert hot_rows.shape[1] == d, (hot_rows.shape, arena.shape)
+    if max_l == 0:
+        return jnp.zeros((b, d), jnp.float32)
+    grid = (b, 1, max_l)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d),
+                         lambda bb, dd, ll, sl, co: (sl[bb, ll], dd)),
+            pl.BlockSpec((1, d),
+                         lambda bb, dd, ll, sl, co: (co[bb, ll], dd)),
+        ],
+        out_specs=pl.BlockSpec((1, d),
+                               lambda bb, dd, ll, sl, co: (bb, dd)),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_cached_kernel, max_l=max_l),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )
+    return fn(slots, cold_ids, hot_rows, arena)

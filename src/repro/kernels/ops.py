@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.kernels import embedding_gather as _eg
 from repro.kernels import feature_interaction as _fi
+from repro.kernels import fused_dispatch as _fd
 from repro.kernels import gemm as _gm
 from repro.kernels import ref as _ref
 
@@ -155,6 +156,183 @@ def sparse_lengths_sum(table: jax.Array, indices: jax.Array,
     """
     return _sls(table, indices, offsets, max_l, table.shape[0],
                 str(table.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Fused segmented dispatch (sparse engine, dense id-matrix form)
+# ---------------------------------------------------------------------------
+
+def _dense_offsets(dense_ids: jax.Array) -> jax.Array:
+    # A dense (B, L) id matrix IS a uniform-offset ragged stream, so the
+    # fused backward can reuse the proven sls_grad_table scatter-add.
+    b, l = dense_ids.shape
+    return jnp.arange(b + 1, dtype=jnp.int32) * l
+
+
+def _dense_grad_table(g, dense_ids, vocab, null_row):
+    impl = get_impl()
+    offsets = _dense_offsets(dense_ids)
+    if impl == "xla":
+        d = _ref.sls_grad_table(g, dense_ids.reshape(-1), offsets, vocab)
+    else:
+        d = _eg.sls_grad_table(g, dense_ids.reshape(-1), offsets,
+                               n_rows=vocab,
+                               interpret=(impl == "interpret"))
+    if null_row is None:
+        return d
+    # null_row is the always-zero sentinel every short/padded dense slot
+    # points at. The ragged backward never trained it (fill lived past
+    # offsets[-1] and was masked); the dense relayout moves fill INSIDE
+    # the stream, so pin its gradient to zero here or the dense optimizer
+    # would break the sentinel's always-zero invariant on the first step.
+    return d.at[null_row].set(0.0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _fused(table: jax.Array, dense_ids: jax.Array, vocab: int,
+           dtype_name: str, null_row) -> jax.Array:
+    impl = get_impl()
+    if impl == "xla":
+        return _ref.fused_segment_sum(table, dense_ids)
+    return _fd.fused_segment_sum(table, dense_ids,
+                                 interpret=(impl == "interpret"))
+
+
+def _fused_fwd(table, dense_ids, vocab, dtype_name, null_row):
+    return _fused(table, dense_ids, vocab, dtype_name, null_row), dense_ids
+
+
+def _fused_bwd(vocab, dtype_name, null_row, dense_ids, g):
+    d = _dense_grad_table(g, dense_ids, vocab, null_row)
+    return d.astype(dtype_name), None
+
+
+_fused.defvjp(_fused_fwd, _fused_bwd)
+
+
+def fused_segment_sum(table: jax.Array, dense_ids: jax.Array, *,
+                      null_row=None) -> jax.Array:
+    """Segmented reduce over a dense id matrix: out[b] = sum_j table[ids[b,j]].
+
+    ``dense_ids`` is a ``se.ragged_dense_ids`` relayout — (B, max_l) with
+    short/padded slots pointing at an always-zero row — so the whole
+    reduction is one gather + one per-bag sum with NO scatter in the
+    forward. Returns f32 (B, D). Differentiable: the custom VJP is the
+    same fused segment scatter-add backing ``sparse_lengths_sum``; pass
+    ``null_row`` (the sentinel the relayout's fill slots point at) so the
+    backward pins its gradient to zero like the ragged tail mask did.
+    """
+    return _fused(table, dense_ids, table.shape[0], str(table.dtype),
+                  None if null_row is None else int(null_row))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _fused_cached(hot_rows: jax.Array, arena: jax.Array, slots: jax.Array,
+                  cold_ids: jax.Array, k_slots: int, vocab: int,
+                  hot_dtype: str, arena_dtype: str,
+                  null_row) -> jax.Array:
+    impl = get_impl()
+    if impl == "xla":
+        return _ref.fused_cached_segment_sum(hot_rows, arena, slots, cold_ids)
+    return _fd.fused_cached_segment_sum(hot_rows, arena, slots, cold_ids,
+                                        interpret=(impl == "interpret"))
+
+
+def _fused_cached_fwd(hot_rows, arena, slots, cold_ids, k_slots, vocab,
+                      hot_dtype, arena_dtype, null_row):
+    out = _fused_cached(hot_rows, arena, slots, cold_ids, k_slots, vocab,
+                        hot_dtype, arena_dtype, null_row)
+    return out, (slots, cold_ids)
+
+
+def _fused_cached_bwd(k_slots, vocab, hot_dtype, arena_dtype, null_row,
+                      res, g):
+    slots, cold_ids = res
+    # the hot arena's null slot is its last row by HotRowCache
+    # construction (k real slots + one zero miss slot)
+    d_hot = _dense_grad_table(g, slots, k_slots,
+                              k_slots - 1).astype(hot_dtype)
+    d_arena = _dense_grad_table(g, cold_ids, vocab,
+                                null_row).astype(arena_dtype)
+    return d_hot, d_arena, None, None
+
+
+_fused_cached.defvjp(_fused_cached_fwd, _fused_cached_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def _fused_cached_coh(hot_rows, arena, dense_ids, slots, cold_ids,
+                      k_slots, vocab, hot_dtype, arena_dtype, null_row):
+    impl = get_impl()
+    if impl == "xla":
+        # Coherence law (docs/ARCHITECTURE.md §2): hot copies equal their
+        # arena rows, so hot_rows[slot] + arena[cold_id] == arena[id] per
+        # position. XLA's gather cost ignores locality, which makes the
+        # plain arena reduction the fastest correct lowering — the hit
+        # test survives only in the backward, where the hot/cold grad
+        # split is real state.
+        return _ref.fused_segment_sum(arena, dense_ids)
+    # On the accelerator the two-table walk IS the win: hot rows live in
+    # SRAM, so the in-kernel hit test turns arena HBM traffic into
+    # on-chip loads for every cached row.
+    return _fd.fused_cached_segment_sum(hot_rows, arena, slots, cold_ids,
+                                        interpret=(impl == "interpret"))
+
+
+def _fused_cached_coh_fwd(hot_rows, arena, dense_ids, slots, cold_ids,
+                          k_slots, vocab, hot_dtype, arena_dtype, null_row):
+    out = _fused_cached_coh(hot_rows, arena, dense_ids, slots, cold_ids,
+                            k_slots, vocab, hot_dtype, arena_dtype, null_row)
+    return out, (slots, cold_ids)
+
+
+def _fused_cached_coh_bwd(k_slots, vocab, hot_dtype, arena_dtype, null_row,
+                          res, g):
+    slots, cold_ids = res
+    d_hot = _dense_grad_table(g, slots, k_slots,
+                              k_slots - 1).astype(hot_dtype)
+    d_arena = _dense_grad_table(g, cold_ids, vocab,
+                                null_row).astype(arena_dtype)
+    return d_hot, d_arena, None, None, None
+
+
+_fused_cached_coh.defvjp(_fused_cached_coh_fwd, _fused_cached_coh_bwd)
+
+
+def fused_cached_segment_sum(hot_rows: jax.Array, arena: jax.Array,
+                             slots: jax.Array, cold_ids: jax.Array, *,
+                             dense_ids=None, null_row=None) -> jax.Array:
+    """One-pass hot/cold segmented reduce with the hit test in the kernel.
+
+    Per position exactly one of ``hot_rows[slots]`` (miss -> the zero
+    null slot) and ``arena[cold_ids]`` (hit -> the zero null row) is
+    nonzero, so accumulating their sum in a single walk equals the
+    uncached reduction bit-for-bit — replacing CachedSource's two full
+    passes. slots/cold_ids are (B, max_l) dense matrices over the same
+    bags. Returns f32 (B, D); gradients flow to both arenas via the
+    fused segment scatter-add, with the miss slot's and (when
+    ``null_row`` is given) the arena sentinel's gradients pinned to zero.
+
+    When ``dense_ids`` (the pre-split id matrix) is also given, the op
+    additionally assumes the cache coherence law — hot copies equal
+    their arena rows — and on the XLA substrate lowers the forward to
+    the plain arena reduction (one gather, identical to the uncached
+    path), since per-row gather cost there is locality-blind. The
+    backward is unchanged: gradients still split onto hot slots and
+    cold ids exactly. The Pallas lowering always runs the real
+    two-table walk. Omit ``dense_ids`` when coherence is not
+    guaranteed (e.g. deliberately stale hot rows).
+    """
+    if dense_ids is not None:
+        return _fused_cached_coh(hot_rows, arena, dense_ids, slots,
+                                 cold_ids, hot_rows.shape[0],
+                                 arena.shape[0], str(hot_rows.dtype),
+                                 str(arena.dtype),
+                                 None if null_row is None else int(null_row))
+    return _fused_cached(hot_rows, arena, slots, cold_ids,
+                         hot_rows.shape[0], arena.shape[0],
+                         str(hot_rows.dtype), str(arena.dtype),
+                         None if null_row is None else int(null_row))
 
 
 # ---------------------------------------------------------------------------

@@ -48,6 +48,33 @@ def sls_grad_table(g: jax.Array, indices: jax.Array, offsets: jax.Array,
     return out.astype(g.dtype)
 
 
+def fused_segment_sum(table: jax.Array, dense_ids: jax.Array) -> jax.Array:
+    """Fused segmented reduce over a pre-relayouted id matrix.
+
+    dense_ids (B, max_l) holds each bag's row ids with padding/short slots
+    pointing at an always-zero row (``se.ragged_dense_ids``); the result
+    is one gather + one per-bag sum — the scatter-free form of
+    ``sparse_lengths_sum``. Returns f32 (B, D).
+    """
+    return table[dense_ids].astype(jnp.float32).sum(axis=1)
+
+
+def fused_cached_segment_sum(hot_rows: jax.Array, arena: jax.Array,
+                             slots: jax.Array,
+                             cold_ids: jax.Array) -> jax.Array:
+    """One-pass hot/cold reduce: the in-kernel hit test as XLA.
+
+    Per position, exactly one of ``hot_rows[slots]`` (miss -> zero null
+    slot) and ``arena[cold_ids]`` (hit -> zero null row) is nonzero, so
+    their sum is bit-for-bit the uncached row and ONE reduction covers
+    both passes. slots/cold_ids are (B, max_l) dense matrices over the
+    same bags. Returns f32 (B, D).
+    """
+    rows = hot_rows[slots].astype(jnp.float32) \
+        + arena[cold_ids].astype(jnp.float32)
+    return rows.sum(axis=1)
+
+
 def interaction(x: jax.Array) -> jax.Array:
     """Pairwise dot products: x (B, F, D) -> (B, F, F) = X X^T per sample."""
     out = jnp.einsum("bfd,bgd->bfg", x, x,

@@ -153,6 +153,23 @@ def _parse(hlo_text: str):
     return comps, entry
 
 
+def count_ops(hlo_text: str) -> Dict[str, int]:
+    """Opcode histogram over every computation in the module (fusion and
+    called sub-computations included). This is the timing-free structural
+    signal the perf gates assert on — e.g. "the fused forward lowers
+    scatter-free" or "the cached path walks the stream once" hold or fail
+    regardless of how noisy the host's clock is."""
+    comps_lines, _ = _parse(hlo_text)
+    counts: Dict[str, int] = {}
+    for lines in comps_lines.values():
+        for ls in lines:
+            dm = _DEF_RE.match(ls)
+            if dm:
+                op = dm.group(3)
+                counts[op] = counts.get(op, 0) + 1
+    return counts
+
+
 def analyze(hlo_text: str) -> Dict[str, object]:
     comps_lines, entry = _parse(hlo_text)
     comps: Dict[str, _Comp] = {}

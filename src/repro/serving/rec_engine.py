@@ -217,9 +217,12 @@ class RecEngine:
             self._serve = jax.jit(step)
         if self.grouped:
             # the whole source is the jit argument, so per-table hit
-            # accounting survives every no-recompile member swap
+            # accounting survives every no-recompile member swap; the
+            # engine's static max_l lets the counters ride the same
+            # one-relayout fused dispatch as the lookup itself
             self._hit_rate = jax.jit(
-                lambda s, i, o: es.group_hit_counts(s, i, o))
+                lambda s, i, o: es.group_hit_counts(s, i, o,
+                                                    max_l=self.max_l))
         else:
             self._hit_rate = jax.jit(
                 lambda c, i, o: se.cache_hit_rate(c, self.spec, i, o))

@@ -242,7 +242,10 @@ class OnlineTrainer:
             cold = es.ShardedArena(cold, self.mesh)
         if self.cache is None:
             return cold
-        return es.CachedSource(hot=self.cache, cold=cold)
+        # published at a write-through/rebuild boundary, where the hot
+        # copies equal their arena rows by protocol — declare coherence
+        # so replicas serve with the fast lowering
+        return es.CachedSource(hot=self.cache, cold=cold, coherent=True)
 
     def publish_source(self) -> Optional[bytes]:
         """Serialize the full serving source as a ``VersionedSource``
@@ -309,8 +312,11 @@ class OnlineTrainer:
                 return es.FpArena(self.params["arena"])
             raise TypeError(f"cannot sync cold source {type(c).__name__}")
         if isinstance(engine_source, es.CachedSource):
+            # mirror the engine's coherence declaration: the flag is
+            # pytree structure, and a structure mismatch would recompile
             return es.CachedSource(hot=cache,
-                                   cold=cold_like(engine_source.cold))
+                                   cold=cold_like(engine_source.cold),
+                                   coherent=engine_source.coherent)
         return cold_like(engine_source)
 
 
@@ -439,7 +445,8 @@ class OnlineGroupTrainer:
         for t, plan in enumerate(self.plans):
             cold = (self.cold_q[t] if self.cold_q[t] is not None
                     else es.FpArena(self.params["tables"][t]))
-            members.append(es.CachedSource(hot=self.caches[t], cold=cold)
+            members.append(es.CachedSource(hot=self.caches[t], cold=cold,
+                                           coherent=True)
                            if self.caches[t] is not None else cold)
         return es.TableGroupSource(members=tuple(members),
                                    specs=self.specs)

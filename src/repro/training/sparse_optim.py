@@ -85,29 +85,55 @@ def source_row_grads(spec, d_bags: jax.Array, indices: jax.Array,
 
 
 def group_row_grads(specs, d_bags: jax.Array, indices: jax.Array,
-                    offsets: jax.Array):
+                    offsets: jax.Array, *, max_l=None):
     """Per-table row gradients of a ``TableGroupSource`` lookup.
 
     The group sibling of ``source_row_grads``: `specs` are the group's
     per-table ArenaSpecs, `d_bags` (n_bags, dmax) is d loss / d padded
     bag output, `indices`/`offsets` the interleaved ragged batch exactly
     as passed to ``lookup_bags``. Returns a list of per-table
-    (rows (N,), grads (N, dim_t)) pairs — table t's touched rows in ITS
-    OWN arena and their summed gradients (only the leading dim_t lanes of
-    `d_bags` reach table t; the padded tail's cotangent is structurally
-    zero). Stream positions of other tables are routed to table t's null
-    row, whose gradient ``ragged_row_grads`` forces to zero — so each
-    pair equals the row grads of that member's own per-table-stream
-    lookup exactly.
+    (rows, grads (rows.shape + (dim_t,))) pairs — table t's touched rows
+    in ITS OWN arena and their summed gradients (only the leading dim_t
+    lanes of `d_bags` reach table t; the padded tail's cotangent is
+    structurally zero). Fill slots are routed to table t's null row,
+    whose gradient ``ragged_row_grads`` forces to zero — so each pair
+    equals the row grads of that member's own per-table-stream lookup
+    exactly.
+
+    With ``max_l`` (the same static bound the lookup used), the stream
+    is relayouted ONCE into the dense (n_bags, max_l) matrix of the
+    fused dispatch and each table walks only its own (B, max_l) bag
+    slice — rows are (B*max_l,) per table instead of T walks over the
+    full N-position stream. Without it, the legacy full-stream walk runs
+    (rows are (N,) per table).
     """
-    table, valid = se.ragged_position_tables(offsets, indices.shape[0],
-                                             len(specs))
+    t_count = len(specs)
+    if max_l is None:
+        table, valid = se.ragged_position_tables(offsets,
+                                                 indices.shape[0],
+                                                 t_count)
+        out = []
+        for t, sp in enumerate(specs):
+            mine = valid & (table == t)
+            idx_t = jnp.where(mine, indices,
+                              jnp.asarray(sp.null_row, indices.dtype))
+            rows, grads = ragged_row_grads(d_bags[:, :sp.dim], idx_t,
+                                           offsets, fill_row=sp.null_row)
+            out.append((rows, grads))
+        return out
+    n_bags = offsets.shape[0] - 1
+    b = n_bags // t_count
+    dense = se.ragged_dense_ids(indices, offsets, max_l=max_l, fill=-1)
+    dense = dense.reshape(b, t_count, max_l)
+    uni = jnp.arange(b + 1, dtype=jnp.int32) * max_l
     out = []
     for t, sp in enumerate(specs):
-        mine = valid & (table == t)
-        idx_t = jnp.where(mine, indices,
-                          jnp.asarray(sp.null_row, indices.dtype))
-        rows, grads = ragged_row_grads(d_bags[:, :sp.dim], idx_t, offsets,
+        ids_t = dense[:, t, :]
+        ids_t = jnp.where(ids_t >= 0, ids_t,
+                          jnp.asarray(sp.null_row, ids_t.dtype))
+        # bag (s, t) sits at row s*t_count + t of the interleaved batch
+        rows, grads = ragged_row_grads(d_bags[t::t_count, :sp.dim],
+                                       ids_t.reshape(-1), uni,
                                        fill_row=sp.null_row)
         out.append((rows, grads))
     return out

@@ -200,6 +200,37 @@ def test_grad_through_source_matches_row_grads(rng):
     np.testing.assert_allclose(got, dense, rtol=1e-5, atol=1e-5)
 
 
+def test_cached_coherent_flag_semantics(rng):
+    """The coherence declaration is a real fork in serving semantics:
+    with the default ``coherent=False`` a stale hot copy is SERVED (the
+    write-through protocol's observability requirement), while
+    ``coherent=True`` licenses serving straight from the arena — fresh
+    values, identical op histogram to uncached. Gradients split hot/cold
+    the same way under both."""
+    spec = se.ArenaSpec(2, 15, 4)
+    arena = se.init_arena(jax.random.PRNGKey(3), spec)
+    idx, off = _ragged_case(np.random.RandomState(4), spec, b=3, max_l=3)
+    counts = se.trace_row_counts(spec, idx, off)
+    cache = se.build_hot_cache(arena, spec, counts, k=4)
+    # "train" the arena under the cache without patching it
+    arena2 = arena.at[:spec.null_row].add(0.5)
+    fresh = es.lookup_bags(es.FpArena(arena2), spec, idx, off, max_l=3)
+    stale = es.lookup_bags(es.CachedSource(cache, es.FpArena(arena2)),
+                           spec, idx, off, max_l=3)
+    coh = es.lookup_bags(
+        es.CachedSource(cache, es.FpArena(arena2), coherent=True),
+        spec, idx, off, max_l=3)
+    assert not np.allclose(np.asarray(stale), np.asarray(fresh))
+    np.testing.assert_array_equal(np.asarray(coh), np.asarray(fresh))
+    for flag in (False, True):
+        src = es.CachedSource(cache, es.FpArena(arena2), coherent=flag)
+        g = jax.grad(
+            lambda s: jnp.sum(es.lookup_bags(s, spec, idx, off, max_l=3)),
+            allow_int=True)(src)
+        assert np.abs(np.asarray(g.hot.hot_rows)[:-1]).max() > 0
+        assert np.abs(np.asarray(g.cold.arena)[:spec.null_row]).max() > 0
+
+
 def test_grad_through_cached_source_splits_hot_cold(rng):
     """Grads through a CachedSource land on the hot rows AND the cold
     arena leaves — the whole source is differentiable state."""
@@ -347,11 +378,15 @@ def test_engine_source_swaps_never_recompile():
     serve_round()
     # 2) quantized-cold swap
     new_q = es.QuantizedArena.from_arena(params["arena"])
-    eng.update_source(es.CachedSource(eng.source.hot, new_q), version=3)
+    eng.update_source(es.CachedSource(eng.source.hot, new_q,
+                                      coherent=eng.source.coherent),
+                      version=3)
     serve_round()
-    # 3) full fp-arena swap (via a rebuilt source of the same structure)
+    # 3) full fp-arena swap (via a rebuilt source of the same structure
+    # — incl. the coherence flag, which is pytree structure)
     eng.update_source(es.CachedSource(
-        old.hot, es.QuantizedArena(new_q.q, new_q.scales)), version=4)
+        old.hot, es.QuantizedArena(new_q.q, new_q.scales),
+        coherent=old.coherent), version=4)
     probs = serve_round()
     assert eng._serve._cache_size() == compiled, "a source swap recompiled"
     assert np.isfinite(probs).all()
@@ -372,7 +407,8 @@ def test_engine_source_swaps_never_recompile():
     compiled_fp = fp_eng._serve._cache_size()
     new_arena = (params["arena"] + 0.125).at[spec.null_row:].set(0.0)
     new_hot = se.build_hot_cache(new_arena, spec, counts, 16)
-    fp_eng.update_source(es.CachedSource(new_hot, es.FpArena(new_arena)),
+    fp_eng.update_source(es.CachedSource(new_hot, es.FpArena(new_arena),
+                                         coherent=fp_eng.source.coherent),
                          version=2)
     reqs = requests_from_ragged_batch(rb, cfg.n_tables)
     for r in reqs:

@@ -200,3 +200,214 @@ def test_flash_attention_gqa_matches_repeat(rng):
     for h in range(8):
         want = _ref_attn(q[:, :, h], kk[:, :, h], vv[:, :, h], True, None)
         _close(got[:, :, h], want, 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Fused segmented dispatch (the one-walk grouped/cached/sharded kernel)
+# ---------------------------------------------------------------------------
+
+from repro.kernels import fused_dispatch  # noqa: E402
+
+
+def _dense_case(rng, v, b, l, null=None):
+    """A dense (b, l) id matrix with ragged structure baked in: each bag
+    is cut short at a random length, fill slots pointing at `null`."""
+    ids = rng.randint(0, v, (b, l))
+    if null is not None:
+        lens = rng.randint(0, l + 1, b)
+        for i in range(b):
+            ids[i, lens[i]:] = null
+    return jnp.asarray(ids, jnp.int32)
+
+
+@pytest.mark.parametrize("v,d,b,l", [(100, 32, 4, 1), (257, 16, 8, 6),
+                                     (64, 128, 3, 9), (1, 1, 2, 3),
+                                     (50, 1, 5, 4), (1, 48, 4, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_segment_sum_matches_oracle(rng, v, d, b, l, dtype):
+    table = jnp.asarray(rng.randn(v, d), dtype)
+    ids = _dense_case(rng, v, b, l, null=v - 1)
+    got = fused_dispatch.fused_segment_sum(table, ids, interpret=True)
+    want = ref.fused_segment_sum(table, ids)
+    _close(got, want, 1e-5 if dtype == jnp.float32 else 5e-2)
+
+
+@pytest.mark.parametrize("v,k,d,b,l", [(120, 9, 8, 4, 5), (64, 1, 16, 3, 3),
+                                       (256, 33, 32, 6, 7)])
+def test_fused_cached_segment_sum_matches_oracle(rng, v, k, d, b, l):
+    arena = jnp.asarray(rng.randn(v, d), jnp.float32)
+    hot = jnp.asarray(rng.randn(k + 1, d), jnp.float32)
+    slots = _dense_case(rng, k + 1, b, l)
+    cold = _dense_case(rng, v, b, l)
+    got = fused_dispatch.fused_cached_segment_sum(hot, arena, slots, cold,
+                                                  interpret=True)
+    want = ref.fused_cached_segment_sum(hot, arena, slots, cold)
+    _close(got, want, 1e-5)
+
+
+def test_fused_ops_pallas_equals_xla_lookup_and_grad(rng):
+    """ops.fused_segment_sum / fused_cached_segment_sum agree between the
+    Pallas kernel body (interpret) and the XLA reference — outputs AND
+    the custom-VJP gradients, including the pinned-to-zero null rows."""
+    v, d, b, l, k, null = 90, 16, 6, 5, 12, 89
+    table = jnp.asarray(rng.randn(v, d), jnp.float32)
+    ids = _dense_case(rng, v, b, l, null=null)
+    hot = jnp.asarray(rng.randn(k + 1, d), jnp.float32).at[k].set(0.0)
+    slots = _dense_case(rng, k + 1, b, l, null=k)
+    cold = _dense_case(rng, v, b, l, null=null)
+    outs, grads = [], []
+    for impl in ("xla", "interpret"):
+        ops.set_impl(impl)
+        try:
+            f = lambda t: ops.fused_segment_sum(t, ids, null_row=null)
+            outs.append(np.asarray(f(table)))
+            g = jax.grad(lambda t: f(t).sum())(table)
+            fc = lambda h, a: ops.fused_cached_segment_sum(
+                h, a, slots, cold, null_row=null)
+            outs.append(np.asarray(fc(hot, table)))
+            gh, ga = jax.grad(lambda h, a: fc(h, a).sum(),
+                              argnums=(0, 1))(hot, table)
+            grads.append((np.asarray(g), np.asarray(gh), np.asarray(ga)))
+        finally:
+            ops.set_impl("auto")
+    _close(outs[0], outs[2], 1e-5)
+    _close(outs[1], outs[3], 1e-5)
+    for a, bb in zip(grads[0], grads[1]):
+        _close(a, bb, 1e-5)
+    # the sentinel rows never receive gradient (the ragged tail-mask law)
+    g, gh, ga = grads[0]
+    assert (g[null] == 0).all() and (gh[k] == 0).all() \
+        and (ga[null] == 0).all()
+
+
+def test_fused_degenerate_bags(rng):
+    """Degenerate shapes the relayout must survive: empty bags,
+    all-duplicate bags, all-null bags, vocab-1/dim-1 tables, max_l=0."""
+    d = 8
+    table = jnp.asarray(rng.randn(40, d), jnp.float32).at[39].set(0.0)
+    null = 39
+    # empty bags: every slot is fill -> exact zeros
+    empty = jnp.full((3, 4), null, jnp.int32)
+    assert (np.asarray(ops.fused_segment_sum(table, empty)) == 0).all()
+    # all-duplicate bag: L * row, bit-for-bit against the closed form
+    dup = jnp.full((1, 6), 7, jnp.int32)
+    got = np.asarray(ops.fused_segment_sum(table, dup))
+    want = np.asarray(table[7], np.float32)[None, :] * 6.0
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    # max_l == 0: (B, 0) ids -> zeros, on both backends
+    zero_ids = jnp.zeros((4, 0), jnp.int32)
+    assert ops.fused_segment_sum(table, zero_ids).shape == (4, d)
+    assert (np.asarray(
+        fused_dispatch.fused_segment_sum(table, zero_ids,
+                                         interpret=True)) == 0).all()
+    # vocab-1 / dim-1
+    t1 = jnp.asarray(rng.randn(1, 1), jnp.float32)
+    ids1 = jnp.zeros((2, 3), jnp.int32)
+    got1 = np.asarray(ops.fused_segment_sum(t1, ids1))
+    np.testing.assert_allclose(got1, np.full((2, 1), 3 * float(t1[0, 0]),
+                                             np.float32), rtol=1e-6)
+    # all-null bags still take zero gradient on the sentinel
+    g = jax.grad(lambda t: ops.fused_segment_sum(
+        t, empty, null_row=null).sum())(table)
+    assert (np.asarray(g) == 0).all()
+
+
+def test_fused_cached_one_pass_equals_uncached_bitwise(rng):
+    """The in-kernel hit-test law: splitting any dense id matrix into
+    (hot slots, cold redirects) and running the one-pass cached reduce is
+    BIT-FOR-BIT the uncached reduce, and the hot/cold gradients recombine
+    to exactly the uncached gradient."""
+    v, d, b, l, k, null = 80, 8, 5, 6, 10, 79
+    table = jnp.asarray(rng.randn(v, d), jnp.float32).at[null].set(0.0)
+    ids = _dense_case(rng, v, b, l, null=null)
+    # hot set: the k most frequent ids (never the sentinel, matching
+    # build_hot_cache); hot_rows copies arena rows
+    counts = np.bincount(np.asarray(ids).ravel(), minlength=v)
+    counts[null] = -1
+    hot_ids = np.argsort(counts)[-k:]
+    slot_of = np.full(v, k, np.int32)
+    slot_of[hot_ids] = np.arange(k)
+    slot_of = jnp.asarray(slot_of)
+    hot_rows = jnp.concatenate([table[jnp.asarray(hot_ids)],
+                                jnp.zeros((1, d), jnp.float32)])
+    slots = jnp.take(slot_of, ids)
+    cold = jnp.where(slots < k, jnp.asarray(null, ids.dtype), ids)
+    got = np.asarray(ops.fused_cached_segment_sum(hot_rows, table, slots,
+                                                  cold, null_row=null))
+    want = np.asarray(ops.fused_segment_sum(table, ids, null_row=null))
+    np.testing.assert_array_equal(got, want)
+    # gradient law: scatter d_hot back onto its arena rows + d_arena
+    # == the uncached arena gradient, exactly
+    g_un = jax.grad(lambda t: ops.fused_segment_sum(
+        t, ids, null_row=null).sum())(table)
+    gh, ga = jax.grad(
+        lambda h, a: ops.fused_cached_segment_sum(
+            h, a, slots, cold, null_row=null).sum(),
+        argnums=(0, 1))(hot_rows, table)
+    recomb = np.array(ga)
+    recomb[hot_ids] += np.asarray(gh)[:k]
+    np.testing.assert_array_equal(recomb, np.asarray(g_un))
+
+
+def test_fused_cached_coherent_lowering_same_value_same_split(rng):
+    """Passing dense_ids= opts into the coherence-law lowering: the
+    forward equals both the uncached reduce (bitwise, on xla) and the
+    two-table walk (which it replaces on xla but not on the kernel
+    path), while the gradients still split onto hot slots / cold ids
+    exactly as the explicit two-pass op's do."""
+    v, d, b, l, k, null = 70, 8, 5, 6, 9, 69
+    table = jnp.asarray(rng.randn(v, d), jnp.float32).at[null].set(0.0)
+    ids = _dense_case(rng, v, b, l, null=null)
+    counts = np.bincount(np.asarray(ids).ravel(), minlength=v)
+    counts[null] = -1
+    hot_ids = np.argsort(counts)[-k:]
+    slot_of = np.full(v, k, np.int32)
+    slot_of[hot_ids] = np.arange(k)
+    slots = jnp.take(jnp.asarray(slot_of), ids)
+    cold = jnp.where(slots < k, jnp.asarray(null, ids.dtype), ids)
+    hot_rows = jnp.concatenate([table[jnp.asarray(hot_ids)],
+                                jnp.zeros((1, d), jnp.float32)])
+    for impl in ("xla", "interpret"):
+        ops.set_impl(impl)
+        try:
+            coh = lambda h, a: ops.fused_cached_segment_sum(
+                h, a, slots, cold, dense_ids=ids, null_row=null)
+            split = lambda h, a: ops.fused_cached_segment_sum(
+                h, a, slots, cold, null_row=null)
+            got = np.asarray(coh(hot_rows, table))
+            np.testing.assert_allclose(
+                got, np.asarray(split(hot_rows, table)), rtol=1e-5,
+                atol=1e-6)
+            if impl == "xla":
+                np.testing.assert_array_equal(
+                    got, np.asarray(ops.fused_segment_sum(
+                        table, ids, null_row=null)))
+            g_coh = jax.grad(lambda h, a: coh(h, a).sum(),
+                             argnums=(0, 1))(hot_rows, table)
+            g_split = jax.grad(lambda h, a: split(h, a).sum(),
+                               argnums=(0, 1))(hot_rows, table)
+            for a, bb in zip(g_coh, g_split):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(bb))
+            assert np.abs(np.asarray(g_coh[0])[:-1]).max() > 0
+        finally:
+            ops.set_impl("auto")
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4, 8])
+def test_fused_sharded_partial_equals_replicated(rng, shards):
+    """The sharded law over the dense id matrix: every shard's masked
+    partial reduce psums back to the replicated fused reduce (vmap-
+    emulated mesh), for shard counts {1, 2, 4, 8}."""
+    from repro.core import sparse_engine as se
+    v, d, b, l = 8 * 13, 16, 6, 5
+    null = v - 1
+    table = jnp.asarray(rng.randn(v, d), jnp.float32).at[null].set(0.0)
+    ids = _dense_case(rng, v, b, l, null=null)
+    want = np.asarray(ops.fused_segment_sum(table, ids, null_row=null))
+    outs = jax.vmap(
+        lambda a: se.dense_partial_reduce(a, ids, "x", null_row=null),
+        axis_name="x")(table.reshape(shards, -1, d))
+    for s in range(shards):
+        np.testing.assert_allclose(np.asarray(outs[s]), want, rtol=1e-5,
+                                   atol=1e-5)

@@ -216,6 +216,20 @@ def test_group_degenerate_shapes():
             assert (got[:, 0, :] == 0).all()
 
 
+def test_group_non_divisible_bag_count_raises():
+    """A single-stream lookup whose bag count doesn't cover whole
+    (sample, table) rows must fail loudly, naming the counts and the
+    calling entry point — not silently mis-assign bags to tables."""
+    group = _mixed_group((7, 9), (4, 4), ("fp", "fp"), 1)
+    idx = jnp.asarray([0, 1, 2], jnp.int32)
+    off = jnp.asarray([0, 1, 2, 3], jnp.int32)   # 3 bags, 2 tables
+    with pytest.raises(ValueError) as exc:
+        es.lookup_bags(group, group.envelope_spec, idx, off, max_l=2)
+    msg = str(exc.value)
+    assert "n_bags=3" in msg and "t_count=2" in msg
+    assert "lookup_bags" in msg
+
+
 # ---------------------------------------------------------------------------
 # per-table training contract
 # ---------------------------------------------------------------------------
@@ -406,9 +420,9 @@ def test_group_engine_serves_with_per_table_hit_stats():
     # counters reset
     new_hot = se.build_hot_cache(params["tables"][0], specs[0], counts[0],
                                  16)
-    fresh = es.replace_member(eng.source, 0,
-                              es.CachedSource(new_hot,
-                                              eng.source.members[0].cold))
+    fresh = es.replace_member(
+        eng.source, 0,
+        es.with_hot_cache(eng.source.members[0], new_hot))
     eng.update_source(fresh, version=2)
     assert eng.stats()["cache_hit_rate"][0] is None   # no post-swap data
     for r in requests_from_ragged_batch(rb, cfg.n_tables):
