@@ -631,6 +631,104 @@ def bench_table_group(batch_size: int = 32) -> List[str]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Beyond-paper: telemetry overhead + the live Fig-5 characterization
+# ---------------------------------------------------------------------------
+
+def bench_obs(batch_size: int = 16,
+              assert_overhead: "float | None" = None) -> List[str]:
+    """Full telemetry (metrics + tracing + deferred hit probe) vs the
+    genuinely uninstrumented engine (``Telemetry.disabled()``) on the
+    serve hot path, plus the live Fig-5 characterization
+    (``Telemetry(device_stages=True)``) on the same traffic.
+
+    The two serve loops are timed interleaved — the instrumented path is
+    designed to be within noise of the bare one (no device syncs, ring
+    writes only), so sequential timing would hand either side any
+    machine-load drift. ``assert_overhead`` (used by ``--smoke``) turns
+    the emitted ratio into a hard bound.
+
+    Two overhead rows, because they answer different questions:
+
+    * ``obs_overhead`` — fp source, so BOTH engines run the identical
+      device program and the ratio isolates what the telemetry layer
+      itself adds (span objects, histogram ring writes, counters). This
+      is the asserted ≤5% claim.
+    * ``obs_overhead_cached`` — cached source, where the instrumented
+      engine also dispatches the per-batch hit-rate probe (accounting
+      that predates obs; this PR made its collection deferred instead
+      of a hot-path sync). On a 1-core host the probe's device work has
+      nowhere to hide, so this ratio is dominated by probe compute, not
+      instrumentation — emitted for visibility, not asserted.
+
+    The ``obs_live_fig5`` row is the paper's Fig-5 embedding-vs-MLP
+    split measured on served traffic (per-stage jit + sync); its
+    ``emb_frac`` is directly comparable to the offline ``fig5_*`` rows.
+    """
+    from repro import obs
+    from repro.serving import RecEngine, requests_from_ragged_batch
+
+    rows = []
+    cfg = scaled_configs()["dlrm4"]
+    params = dlrm.init(jax.random.PRNGKey(0), cfg)
+    spec = dlrm.arena_spec(cfg)
+    data = DLRMSynthetic(cfg, seed=11)
+    max_l = 2 * cfg.lookups_per_table
+    rb = data.ragged_batch(batch_size, dist="poisson",
+                           mean_l=cfg.lookups_per_table, max_l=max_l)
+    counts = se.trace_row_counts(spec, rb["indices"], rb["offsets"])
+    reqs = requests_from_ragged_batch(rb, cfg.n_tables)
+
+    def engine(telemetry, source="cached"):
+        kw = ({"cache_k": 2048, "cache_trace": counts}
+              if source == "cached" else {})
+        eng = RecEngine(cfg, params, source=source, max_l=max_l,
+                        max_batch=batch_size, max_wait_ms=0.0,
+                        buckets=(batch_size,), telemetry=telemetry, **kw)
+        eng.warmup()
+        return eng
+
+    def serve(eng):
+        for r in reqs:
+            eng.submit(r)
+        while eng.step(force=True):
+            pass
+        # settle any deferred hit probe INSIDE the timed unit: its
+        # device work is async by design, so without this it would drift
+        # out of the instrumented window and land on whichever candidate
+        # the interleaving runs next (observed as the bare engine timing
+        # *slower* than the instrumented one)
+        eng._collect_pending()
+
+    for tag, src, bound in (("", "ragged", assert_overhead),
+                            ("_cached", "cached", None)):
+        inst = engine(obs.Telemetry(tracing=True), src)
+        bare = engine(obs.Telemetry.disabled(), src)
+        t_i, t_b = time_fns_interleaved(
+            [(serve, (inst,)), (serve, (bare,))], warmup=3, iters=30)
+        ratio = t_i / t_b
+        if bound is not None:
+            assert ratio <= bound, (
+                f"telemetry overhead {ratio:.2f}x exceeds the "
+                f"{bound:.2f}x bound — instrumentation leaked onto the "
+                f"serve hot path")
+        rows.append(csv_row(
+            f"obs_overhead{tag}_b{batch_size}", t_i * 1e6,
+            f"uninstrumented_us={t_b * 1e6:.1f};overhead={ratio:.2f}x"))
+
+    fig5_eng = engine(obs.Telemetry(device_stages=True))
+    for _ in range(10):
+        serve(fig5_eng)
+    fig5 = fig5_eng.live_fig5()
+    rows.append(csv_row(
+        f"obs_live_fig5_b{batch_size}", fig5["total_ms"] * 1e3,
+        f"emb_frac={fig5['emb_frac']:.2f};"
+        f"sparse_ms={fig5['sparse_lookup_ms']:.3f};"
+        f"interact_ms={fig5['interaction_ms']:.3f};"
+        f"mlp_ms={fig5['mlp_ms']:.3f}"))
+    return rows
+
+
 def write_json(rows: List[str], path: str = "BENCH_paper.json") -> str:
     """Persist the run as scenario -> {p50_us, p95_us?, derived{...}} —
     the machine-readable trajectory artifact (the printed CSV is for
@@ -661,6 +759,7 @@ def run_all() -> List[str]:
     rows += bench_sharded_cached()
     rows += bench_source_dispatch()
     rows += bench_table_group()
+    rows += bench_obs()
     return rows
 
 
@@ -668,12 +767,14 @@ if __name__ == "__main__":
     import sys
 
     if "--smoke" in sys.argv[1:]:
-        # CI smoke: the derived-only table plus the one timed scenario
-        # family that asserts fused-vs-unified agreement internally —
+        # CI smoke: the derived-only table, the one timed scenario
+        # family that asserts fused-vs-unified agreement internally, and
+        # the telemetry scenario with its overhead bound asserted —
         # proves the harness runs end-to-end without paying for the full
         # sweep; no JSON is written (smoke timings are not trajectory
         # data).
-        all_rows = bench_table1() + bench_source_dispatch()
+        all_rows = (bench_table1() + bench_source_dispatch()
+                    + bench_obs(assert_overhead=1.05))
         print("name,us_per_call,derived")
         for r in all_rows:
             print(r)

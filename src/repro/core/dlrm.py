@@ -20,6 +20,7 @@ from repro.configs.base import DLRMConfig
 from repro.core import dense_engine as de
 from repro.core import embedding_source as es
 from repro.core import sparse_engine as se
+from repro.obs.tracing import stage as obs_stage
 from repro.optim import Optimizer, adamw, partitioned, rowwise_adagrad
 
 
@@ -117,10 +118,17 @@ def head_logits(mlp_params: Dict, dense: jax.Array,
                 emb: jax.Array) -> jax.Array:
     """The DLRM head shared by every forward AND training path: reduced
     embeddings (B, T, D) + dense features -> logits (B,). One definition,
-    so the trained network and the served network cannot drift apart."""
-    bot = de.mlp_apply(mlp_params["bottom"], dense)
-    x, _ = de.feature_interaction(bot, emb.astype(bot.dtype))
-    return de.mlp_apply(mlp_params["top"], x)[:, 0]
+    so the trained network and the served network cannot drift apart.
+
+    The ``obs_stage`` scopes are metadata-only (jax.named_scope +
+    profiler TraceAnnotation when enabled, a shared null context when
+    not) — the compiled HLO is identical either way, pinned by
+    tests/test_obs.py."""
+    with obs_stage("interaction"):
+        bot = de.mlp_apply(mlp_params["bottom"], dense)
+        x, _ = de.feature_interaction(bot, emb.astype(bot.dtype))
+    with obs_stage("mlp"):
+        return de.mlp_apply(mlp_params["top"], x)[:, 0]
 
 
 def _legacy_source(params: Dict, mesh, cache, quantized,
@@ -171,9 +179,10 @@ def forward(params: Dict, cfg: DLRMConfig, dense: jax.Array,
     if source is None:
         source = (group_source(params, cfg, mesh) if cfg.heterogeneous
                   else es.resolve_source(params["arena"], mesh))
-    emb = es.lookup_fixed(source, spec, indices)      # sparse stage
-    if cfg.heterogeneous:
-        emb = project_tables(params["proj"], emb)
+    with obs_stage("sparse_lookup"):
+        emb = es.lookup_fixed(source, spec, indices)  # sparse stage
+        if cfg.heterogeneous:
+            emb = project_tables(params["proj"], emb)
     return head_logits(params, dense, emb)            # dense stage
 
 
@@ -223,16 +232,18 @@ def forward_ragged(params: Dict, cfg: DLRMConfig, dense: jax.Array,
             "forward_ragged got BOTH source= and the deprecated cache=/"
             "quantized= kwargs — the legacy kwargs would be silently "
             "ignored; compose them into the source instead")
-    if per_table:
-        assert isinstance(source, es.TableGroupSource), (
-            "per-table index/offset streams are the table-group layout; "
-            f"got a {type(source).__name__} source")
-        emb = es.lookup_bags_per_table(source, indices, offsets,
-                                      max_l=max_l)
-    else:
-        emb = es.lookup_bags(source, spec, indices, offsets, max_l=max_l)
-    if cfg.heterogeneous:
-        emb = project_tables(params["proj"], emb)
+    with obs_stage("sparse_lookup"):
+        if per_table:
+            assert isinstance(source, es.TableGroupSource), (
+                "per-table index/offset streams are the table-group "
+                f"layout; got a {type(source).__name__} source")
+            emb = es.lookup_bags_per_table(source, indices, offsets,
+                                           max_l=max_l)
+        else:
+            emb = es.lookup_bags(source, spec, indices, offsets,
+                                 max_l=max_l)
+        if cfg.heterogeneous:
+            emb = project_tables(params["proj"], emb)
     return head_logits(params, dense, emb)
 
 
@@ -611,3 +622,53 @@ def make_ragged_serve_step(cfg: DLRMConfig, *, max_l: int,
             params, cfg, batch["dense"], batch["indices"],
             batch["offsets"], max_l=max_l, mesh=mesh, source=source))
     return serve_step
+
+
+def make_ragged_serve_stages(cfg: DLRMConfig, *, max_l: int,
+                             mesh: Optional[jax.sharding.Mesh] = None):
+    """The serve step split at its pipeline-stage boundaries — the live
+    Fig-5 characterization mode.
+
+    Returns ``(sparse_stage, interact_stage, top_stage)``; composed they
+    compute exactly what ``make_ragged_serve_step`` computes (pinned by
+    tests/test_obs.py), but jitting each separately lets the serving
+    engine sync between stages and attribute *device* time to the
+    embedding stage vs. the dense stages — the paper's Fig-5
+    embedding-vs-MLP split, measured on live traffic instead of offline
+    microbenchmarks:
+
+      * ``sparse_stage(params, batch, source)`` -> (B, T, D) reduced
+        bags (plus the per-table projections on heterogeneous configs —
+        the same scope ``obs_stage('sparse_lookup')`` covers in the
+        fused step);
+      * ``interact_stage(params, batch, emb)`` -> interaction features
+        (bottom MLP + feature interaction);
+      * ``top_stage(params, x)`` -> CTR probabilities (top MLP +
+        sigmoid).
+
+    ``mesh`` is accepted for signature symmetry with
+    ``make_ragged_serve_step``; the source is always explicit here so it
+    never feeds a default-source resolution.
+    """
+    del mesh
+    spec = arena_spec(cfg)
+
+    def sparse_stage(params, batch, source):
+        with obs_stage("sparse_lookup"):
+            emb = es.lookup_bags(source, spec, batch["indices"],
+                                 batch["offsets"], max_l=max_l)
+            if cfg.heterogeneous:
+                emb = project_tables(params["proj"], emb)
+        return emb
+
+    def interact_stage(params, batch, emb):
+        with obs_stage("interaction"):
+            bot = de.mlp_apply(params["bottom"], batch["dense"])
+            x, _ = de.feature_interaction(bot, emb.astype(bot.dtype))
+        return x
+
+    def top_stage(params, x):
+        with obs_stage("mlp"):
+            return jax.nn.sigmoid(de.mlp_apply(params["top"], x)[:, 0])
+
+    return sparse_stage, interact_stage, top_stage

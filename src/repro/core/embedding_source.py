@@ -67,6 +67,7 @@ import numpy as np
 from repro import compat
 from repro.core import sparse_engine as se
 from repro.kernels import ops
+from repro.obs.tracing import stage as obs_stage
 
 __all__ = [
     "CachedSource", "EmbeddingSource", "FpArena", "QuantizedArena",
@@ -582,10 +583,11 @@ def lookup_bags(source: EmbeddingSource, spec: se.ArenaSpec,
     ``TableGroupSource``, D is the group's ``dmax`` and table t's slice
     ``[..., :dim_t]`` carries its reduced bags (the tail is zero).
     """
-    n_bags = offsets.shape[0] - 1
-    out = source.reduce_bags(spec, indices, offsets, max_l=max_l)
-    return out.reshape(n_bags // spec.n_tables, spec.n_tables,
-                       spec.dim).astype(source.out_dtype)
+    with obs_stage("emb_lookup"):
+        n_bags = offsets.shape[0] - 1
+        out = source.reduce_bags(spec, indices, offsets, max_l=max_l)
+        return out.reshape(n_bags // spec.n_tables, spec.n_tables,
+                           spec.dim).astype(source.out_dtype)
 
 
 def lookup_fixed(source: EmbeddingSource, spec: se.ArenaSpec,
@@ -594,9 +596,10 @@ def lookup_fixed(source: EmbeddingSource, spec: se.ArenaSpec,
 
     Subsumes lookup / lookup_sharded / lookup_auto / lookup_quantized.
     """
-    b, t, _ = indices.shape
-    out = source.reduce_fixed_ids(spec, indices)
-    return out.reshape(b, t, spec.dim).astype(source.out_dtype)
+    with obs_stage("emb_lookup"):
+        b, t, _ = indices.shape
+        out = source.reduce_fixed_ids(spec, indices)
+        return out.reshape(b, t, spec.dim).astype(source.out_dtype)
 
 
 def lookup_bags_per_table(source: TableGroupSource,

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import CheckpointManager
 from repro.configs.dlrm import DLRM_CONFIGS, DLRM_SMOKE
 from repro.configs.registry import ARCHS, SMOKE_ARCHS
@@ -51,9 +52,13 @@ def train_dlrm_ragged(args) -> float:
         cache_cfg = OnlineCacheConfig(k=args.cache_k,
                                       refresh_every=args.cache_refresh,
                                       quantize_cold=args.quantize_cold)
+    telemetry = obs.Telemetry(tracing=args.trace)
+    if args.trace:
+        obs.enable_stage_annotations(True)
     trainer = OnlineTrainer(cfg, params, max_l=max_l,
                             sparse=not args.dense_grads,
-                            cache_cfg=cache_cfg, mesh=mesh)
+                            cache_cfg=cache_cfg, mesh=mesh,
+                            telemetry=telemetry)
     data = DLRMSynthetic(cfg, seed=args.seed)
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     mon = StragglerMonitor()
@@ -85,7 +90,18 @@ def train_dlrm_ragged(args) -> float:
         ckpt.wait()
     print(f"final loss {loss:.4f} "
           f"(straggler events: {len(mon.events)})")
+    if args.metrics_json:
+        _dump_metrics(telemetry, args.metrics_json)
     return loss
+
+
+def _dump_metrics(telemetry, path: str) -> None:
+    """Write the registry snapshot (+ swap events) as one JSON file."""
+    import json
+
+    with open(path, "w") as f:
+        json.dump(telemetry.snapshot(), f, indent=2, default=str)
+    print(f"metrics snapshot -> {path}")
 
 
 def train_dlrm(args) -> float:
@@ -220,6 +236,13 @@ def main() -> None:
                    help="row-shard the embedding arena over an N-way "
                         "'model' mesh (DLRM; with --ragged the sparse "
                         "optimizer applies shard-local row updates)")
+    p.add_argument("--metrics-json", default=None,
+                   help="with --ragged: write the telemetry registry "
+                        "snapshot (counters/gauges/histograms + swap "
+                        "events) to this path at exit")
+    p.add_argument("--trace", action="store_true",
+                   help="with --ragged: collect host spans and enable "
+                        "jax.profiler stage annotations in jitted code")
     args = p.parse_args()
 
     if args.shards > 1:

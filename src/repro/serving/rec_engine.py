@@ -31,16 +31,39 @@ SLAs) over the ragged production sparse path:
   without recompiling (same treedef + leaf shapes = compiled-cache hit),
   and stale (lower-version) swaps are rejected at this boundary.
 
+  Telemetry is first-class (``repro.obs``): the engine takes a
+  ``Telemetry`` bundle and backs everything observable with it —
+  bounded-memory latency/batch-size histograms (O(1) in requests served;
+  the old unbounded ``latencies``/``batch_sizes`` lists survive only as
+  ring-backed compatibility properties), per-request spans through
+  ``enqueue → batch → bucket_pad → forward → respond`` (or the per-stage
+  split below), and a structured event log of the swap protocol with
+  per-version hit-rate attribution
+  (``telemetry.events.hit_rate_by_version()``).
+
+  Hit-rate accounting never adds a device sync to the hot path: the
+  per-batch probe is *dispatched* in ``step()`` but only *collected*
+  (host conversion of the result futures) at ``stats()`` / ``drain()`` /
+  swap boundaries, or when the pending queue hits ``PENDING_MAX``
+  entries — by which point those futures completed long ago.
+
+  ``Telemetry(device_stages=True)`` serves through separately jitted
+  pipeline stages with a sync between each, attributing *device* time to
+  sparse lookup vs. interaction vs. top MLP — the paper's Fig-5
+  embedding-vs-MLP characterization measured live (``live_fig5()``).
+
   Per-request latency percentiles (p50/p95/p99) are exported by
-  ``stats()``; hit-rate accounting is per-path-correct: a non-cached
-  source reports ``cache_hit_rate=None`` (never a fake 0.0), and the
-  counters reset on version bumps so the post-swap rate reflects the
-  live cache.
+  ``stats()`` — cumulative plus ``since_swap``/``rolling`` windows so a
+  post-swap regression is visible instead of averaged away; hit-rate
+  accounting is per-path-correct: a non-cached source reports
+  ``cache_hit_rate=None`` (never a fake 0.0), and the counters reset on
+  version bumps so the post-swap rate reflects the live cache.
 """
 from __future__ import annotations
 
 import time
 import warnings
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Union
 
@@ -48,6 +71,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import DLRMConfig
 from repro.core import dlrm
 from repro.core import embedding_source as es
@@ -122,6 +146,9 @@ def tune_buckets(sizes: Sequence[int], max_batch: int,
     return tuple(out)
 
 
+_STAGE_NAMES = ("sparse_lookup", "interaction", "mlp")
+
+
 class RecEngine:
     """Batcher-fed DLRM inference; the embedding stage is ONE
     ``lookup_bags`` over a swappable ``EmbeddingSource`` pytree.
@@ -138,9 +165,18 @@ class RecEngine:
         ``cache_hit_rate`` as a per-table mapping (None for members
         without a hot cache);
       * an ``EmbeddingSource`` — served as-is (ragged layout).
+
+    ``telemetry`` is the ``repro.obs.Telemetry`` bundle (default: metrics
+    on, tracing off). ``obs.Telemetry.disabled()`` serves genuinely
+    uninstrumented — nothing recorded, no hit-rate probe dispatched (the
+    ``obs_overhead`` benchmark baseline).
     """
 
     PATHS = SourceSpec.PATH_NAMES
+    # pending hit-rate probes are collected (host-converted) past this
+    # depth; by then the oldest futures completed many batches ago, so
+    # the conversion is a read, not a stall
+    PENDING_MAX = 64
 
     def __init__(self, cfg: DLRMConfig, params: Dict, *,
                  source: Union[str, SourceSpec, es.EmbeddingSource,
@@ -152,6 +188,7 @@ class RecEngine:
                  quantize_cold: bool = False,
                  auto_tune_after: Optional[int] = None,
                  mesh: Optional[jax.sharding.Mesh] = None,
+                 telemetry: Optional[obs.Telemetry] = None,
                  path: Optional[str] = None):
         if path is not None:
             warnings.warn(
@@ -171,12 +208,39 @@ class RecEngine:
         self.buckets = tuple(sorted(set(buckets) | {max_batch}))
         self.auto_tune_after = auto_tune_after
         self._retuned = False
-        self.batch_sizes: List[int] = []     # observed micro-batch sizes
-        self.latencies: List[float] = []
         self.served = 0
         self._hits = 0.0                     # per-table arrays for groups
         self._lookups = 0
+        self._pending: List[tuple] = []      # dispatched, uncollected probes
         self.source_version = 0
+        self._next_swap_kind = "source_swap"
+
+        self.telemetry = telemetry if telemetry is not None \
+            else obs.Telemetry()
+        reg = self.telemetry.registry
+        self._lat_hist = reg.histogram(
+            "rec_request_latency_ms", "end-to-end request latency",
+            lo=1e-3, hi=1e5, ring=4096)
+        self._batch_hist = reg.histogram(
+            "rec_batch_size", "released micro-batch sizes",
+            lo=1.0, hi=4096.0, growth=1.25, ring=256)
+        self._c_served = reg.counter("rec_requests_total",
+                                     "requests served")
+        self._c_batches = reg.counter("rec_batches_total",
+                                      "micro-batches served")
+        self._c_swaps = reg.counter("rec_source_swaps_total",
+                                    "accepted source/cache swaps")
+        self._c_stale = reg.counter("rec_stale_rejected_total",
+                                    "rejected stale broadcasts")
+        self._g_version = reg.gauge("rec_source_version",
+                                    "currently served source version")
+        self._g_queue = reg.gauge("rec_queue_depth",
+                                  "admission-queue depth after drain")
+        # auto-tune sampling is capped at auto_tune_after (satellite of
+        # the unbounded-lists fix): the tuner never needs more history
+        self._batch_ring: deque = deque(
+            maxlen=max(1024, auto_tune_after or 0))
+        self._batches_seen = 0
 
         if source is None:
             source = "ragged"
@@ -215,6 +279,14 @@ class RecEngine:
             step = dlrm.make_ragged_serve_step(cfg, max_l=self.max_l,
                                                mesh=mesh)
             self._serve = jax.jit(step)
+        self._staged = None
+        if self.telemetry.device_stages:
+            assert self.layout != "fixed", \
+                ("device_stages (live Fig-5) characterizes the ragged "
+                 "pipeline; the fixed layout has no staged serve path")
+            sp, it, tp = dlrm.make_ragged_serve_stages(
+                cfg, max_l=self.max_l, mesh=mesh)
+            self._staged = (jax.jit(sp), jax.jit(it), jax.jit(tp))
         if self.grouped:
             # the whole source is the jit argument, so per-table hit
             # accounting survives every no-recompile member swap; the
@@ -227,6 +299,7 @@ class RecEngine:
             self._hit_rate = jax.jit(
                 lambda c, i, o: se.cache_hit_rate(c, self.spec, i, o))
         self._reset_hit_counters()
+        self._g_version.set(self.source_version)
 
     @property
     def grouped(self) -> bool:
@@ -241,6 +314,21 @@ class RecEngine:
         else:
             self._hits = 0.0
             self._lookups = 0
+
+    # -- bounded-memory compatibility views ---------------------------------
+
+    @property
+    def latencies(self) -> List[float]:
+        """Most recent per-request latencies in seconds (ring-backed
+        compatibility view of the old unbounded list; capped at the
+        latency histogram's ring size)."""
+        return [v / 1e3 for v in self._lat_hist.ring_values()]
+
+    @property
+    def batch_sizes(self) -> List[int]:
+        """Most recent observed micro-batch sizes (ring-backed; capped
+        at max(1024, auto_tune_after) — all the tuner ever reads)."""
+        return list(self._batch_ring)
 
     # -- the swap boundary --------------------------------------------------
 
@@ -271,6 +359,20 @@ class RecEngine:
         """Back-compat alias for ``source_version``."""
         return self.source_version
 
+    def _hit_snapshot(self) -> Dict:
+        """Host ints/floats of the live version's hit accounting (for
+        swap-event attribution). Collect pending probes first."""
+        self._collect_pending()
+        if self.grouped:
+            return {"hits": float(np.sum(self._hits)),
+                    "lookups": float(np.sum(self._lookups)),
+                    "per_table": {
+                        str(t): (float(self._hits[t]),
+                                 float(self._lookups[t]))
+                        for t in range(len(self._hits))}}
+        return {"hits": float(self._hits),
+                "lookups": float(self._lookups)}
+
     def update_source(self, source: es.EmbeddingSource,
                       version: Optional[int] = None) -> None:
         """Atomically swap the served embedding source (any component:
@@ -287,13 +389,22 @@ class RecEngine:
         fleet). Equal versions are allowed — between rebuilds the trainer
         republishes the same version with write-through-patched values.
         Hit/lookup counters reset on version bumps so the reported hit
-        rate reflects the live cache, not its predecessors.
+        rate reflects the live cache, not its predecessors — the
+        outgoing version's totals are attributed to it in the swap event
+        (``telemetry.events.hit_rate_by_version()``), and the
+        since-swap latency window restarts.
         """
+        kind = self._next_swap_kind
+        self._next_swap_kind = "source_swap"
         assert self.layout != "fixed", \
             ("a fixed-layout engine serves from params['arena'] and "
              "never reads engine.source — accepting this swap would "
              "bump the version while serving stale embeddings forever")
         if version is not None and version < self.source_version:
+            self._c_stale.inc()
+            self.telemetry.emit("stale_rejected", version=version,
+                                served_version=self.source_version,
+                                swap_kind=kind)
             raise ValueError(
                 f"stale source broadcast: version {version} < served "
                 f"version {self.source_version} — reordered artifact, "
@@ -313,9 +424,21 @@ class RecEngine:
         self.source = source
         if new_version > self.source_version:
             # per-path-correct accounting: the old cache's hits must not
-            # dilute the post-swap hit rate
+            # dilute the post-swap hit rate — snapshot them into the
+            # swap event (per-version attribution), then reset
+            if self.telemetry.enabled:
+                snap = self._hit_snapshot()
+                self.telemetry.emit(kind, version=new_version,
+                                    prev_version=self.source_version,
+                                    **snap)
+                self._lat_hist.reset_window()
+            self._c_swaps.inc()
             self._reset_hit_counters()
+        else:
+            self.telemetry.emit(kind, version=new_version,
+                                republish=True)
         self.source_version = new_version
+        self._g_version.set(new_version)
 
     def update_cache(self, cache: se.HotRowCache,
                      version: Optional[int] = None) -> None:
@@ -324,6 +447,10 @@ class RecEngine:
         assert isinstance(self.source, es.CachedSource), \
             "update_cache needs a cached source"
         if version is not None and version < self.source_version:
+            self._c_stale.inc()
+            self.telemetry.emit("stale_rejected", version=version,
+                                served_version=self.source_version,
+                                swap_kind="cache_swap")
             raise ValueError(
                 f"stale cache broadcast: version {version} < served "
                 f"version {self.source_version} — reordered artifact, "
@@ -332,8 +459,12 @@ class RecEngine:
             ("cache swap changed K/D — this forces a recompile on the "
              "serving hot path; keep trainer and engine cache_k equal",
              cache.hot_rows.shape, self.source.hot.hot_rows.shape)
-        self.update_source(es.with_hot_cache(self.source, cache),
-                           version=version)
+        self._next_swap_kind = "cache_swap"
+        try:
+            self.update_source(es.with_hot_cache(self.source, cache),
+                               version=version)
+        finally:
+            self._next_swap_kind = "source_swap"
 
     def warmup(self):
         """Compile every bucket shape off the SLA clock.
@@ -348,8 +479,14 @@ class RecEngine:
             rid=-1, dense=np.zeros(self.cfg.dense_features, np.float32),
             sparse_ids=[np.zeros(l, np.int32)] * t)]
         for bucket in self.buckets:
-            batch = self._assemble(dummy, bucket)
+            batch, _ = self._assemble(dummy, bucket)
             np.asarray(self._run_serve(batch))
+            if self._staged is not None:
+                sp, it, tp = self._staged
+                emb = sp(self.params, batch, self.source)
+                np.asarray(tp(self.params, it(self.params, batch, emb)))
+            if not self.telemetry.enabled:
+                continue            # uninstrumented: probe never runs
             if self.grouped:
                 h, _ = self._hit_rate(self.source, batch["indices"],
                                       batch["offsets"])
@@ -367,8 +504,12 @@ class RecEngine:
                        warmup: bool = True) -> tuple:
         """Re-pick bucket boundaries from the observed batch-size histogram
         (ROADMAP: dynamic bucket tuning) and pre-compile the new shapes."""
+        old = self.buckets
         self.buckets = tune_buckets(self.batch_sizes, self.max_batch,
                                     n_buckets)
+        self.telemetry.emit("retune", version=self.source_version,
+                            old_buckets=list(old),
+                            new_buckets=list(self.buckets))
         if warmup:
             self.warmup()
         return self.buckets
@@ -378,10 +519,16 @@ class RecEngine:
     def submit(self, req: RecRequest):
         assert len(req.sparse_ids) == self.cfg.n_tables, \
             (len(req.sparse_ids), self.cfg.n_tables)
-        self.batcher.submit(req)
+        with self.telemetry.span("enqueue", {"rid": req.rid}):
+            self.batcher.submit(req)
 
-    def _assemble(self, reqs: List[RecRequest], bucket: int) -> Dict:
-        """Pad a micro-batch to its bucket's static shapes."""
+    def _assemble(self, reqs: List[RecRequest], bucket: int):
+        """Pad a micro-batch to its bucket's static shapes.
+
+        Returns ``(batch, n_valid)`` — n_valid is the real (unpadded)
+        index count, computed host-side from the numpy offsets so the
+        hit-rate probe never has to read a device array to learn it.
+        """
         t = self.cfg.n_tables
         dense = np.zeros((bucket, self.cfg.dense_features), np.float32)
         for i, r in enumerate(reqs):
@@ -395,7 +542,8 @@ class RecEngine:
                         "fixed path requires exact-length bags"
                     idx[i, j] = ids
             # dummy rows gather row 0 — harmless, their outputs are dropped
-            return {"dense": jnp.asarray(dense), "indices": jnp.asarray(idx)}
+            return {"dense": jnp.asarray(dense),
+                    "indices": jnp.asarray(idx)}, 0
         lens = np.zeros(bucket * t, np.int32)
         for i, r in enumerate(reqs):
             for j, ids in enumerate(r.sparse_ids):
@@ -408,46 +556,117 @@ class RecEngine:
             for j, ids in enumerate(r.sparse_ids):
                 o = offsets[i * t + j]
                 flat[o:o + len(ids)] = ids
-        return {"dense": jnp.asarray(dense), "indices": jnp.asarray(flat),
-                "offsets": jnp.asarray(offsets)}
+        return {"dense": jnp.asarray(dense),
+                "indices": jnp.asarray(flat),
+                "offsets": jnp.asarray(offsets)}, int(offsets[-1])
+
+    def _dispatch_hit_probe(self, batch: Dict, n_valid: int) -> None:
+        """Queue the per-batch hit-rate probe WITHOUT reading its result.
+
+        The old accounting called float()/np.asarray() on the probe
+        right here — a device sync on the serve hot path paid purely for
+        bookkeeping. The futures now sit in ``_pending`` until a
+        reporting boundary (stats / drain / swap) or the PENDING_MAX cap
+        collects them, long after they completed.
+        """
+        if n_valid == 0:
+            return
+        if self.grouped:
+            h, lk = self._hit_rate(self.source, batch["indices"],
+                                   batch["offsets"])
+            self._pending.append(("group", h, lk))
+        elif self.cache is not None:
+            hr = self._hit_rate(self.cache, batch["indices"],
+                                batch["offsets"])
+            self._pending.append(("cached", hr, n_valid))
+        else:
+            return
+        if len(self._pending) >= self.PENDING_MAX:
+            self._collect_pending()
+
+    def _collect_pending(self) -> None:
+        """Fold dispatched probe futures into the host-side counters."""
+        if not self._pending:
+            return
+        pend, self._pending = self._pending, []
+        for kind, a, b in pend:
+            if kind == "group":
+                self._hits += np.asarray(a, np.int64)
+                self._lookups += np.asarray(b, np.int64)
+            else:
+                self._hits += float(a) * b
+                self._lookups += b
+
+    def _forward(self, batch: Dict, n_valid: int) -> np.ndarray:
+        """One device forward; staged with per-stage device timing when
+        the live Fig-5 mode is on."""
+        tel = self.telemetry
+        if self._staged is None:
+            with tel.span("forward"):
+                probs = np.asarray(self._run_serve(batch))
+            if tel.enabled and self.layout != "fixed":
+                self._dispatch_hit_probe(batch, n_valid)
+            return probs
+        sp, it, tp = self._staged
+        reg = tel.registry
+        with tel.span("sparse_lookup"):
+            t0 = time.perf_counter()
+            emb = sp(self.params, batch, self.source)
+            emb.block_until_ready()
+            t1 = time.perf_counter()
+        with tel.span("interaction"):
+            x = it(self.params, batch, emb)
+            x.block_until_ready()
+            t2 = time.perf_counter()
+        with tel.span("mlp"):
+            probs = np.asarray(tp(self.params, x))
+            t3 = time.perf_counter()
+        for name, dt in zip(_STAGE_NAMES, (t1 - t0, t2 - t1, t3 - t2)):
+            reg.histogram("rec_stage_ms", "per-stage device time",
+                          labels={"stage": name}).record(dt * 1e3)
+        self._dispatch_hit_probe(batch, n_valid)
+        return probs
 
     def step(self, force: bool = False) -> int:
         """Drain one micro-batch through the engine; returns #served."""
+        tel = self.telemetry
+        t_take0 = time.perf_counter()
         reqs = self.batcher.take(force=force)
+        t_take1 = time.perf_counter()
         if not reqs:
             return 0
         # retune BEFORE the SLA clocks start: compiling the fresh bucket
         # shapes must not land on this micro-batch's recorded latency
         if self.auto_tune_after is not None and not self._retuned \
-                and len(self.batch_sizes) >= self.auto_tune_after:
+                and self._batches_seen >= self.auto_tune_after:
             self._retuned = True
             self.retune_buckets()
         now = time.time()
         for r in reqs:
             r.started_at = now
-        self.batch_sizes.append(len(reqs))
+        self._batches_seen += 1
+        self._batch_ring.append(len(reqs))
         bucket = _bucket(len(reqs), self.buckets)
-        batch = self._assemble(reqs, bucket)
-        probs = np.asarray(self._run_serve(batch))
-        if self.grouped:
-            if int(batch["offsets"][-1]):
-                h, lk = self._hit_rate(self.source, batch["indices"],
-                                       batch["offsets"])
-                self._hits += np.asarray(h, np.int64)
-                self._lookups += np.asarray(lk, np.int64)
-        elif self.cache is not None:
-            n = int(batch["offsets"][-1])
-            if n:
-                hr = float(self._hit_rate(self.cache, batch["indices"],
-                                          batch["offsets"]))
-                self._hits += hr * n
-                self._lookups += n
-        done = time.time()
-        for i, r in enumerate(reqs):
-            r.prob = float(probs[i])
-            r.finished_at = done
-            self.latencies.append(done - r.submitted_at)
+        with tel.span("serve_step", {"batch_size": len(reqs),
+                                     "bucket": bucket}):
+            tel.tracer.record("batch", t_take0, t_take1)
+            with tel.span("bucket_pad"):
+                batch, n_valid = self._assemble(reqs, bucket)
+            probs = self._forward(batch, n_valid)
+            with tel.span("respond"):
+                done = time.time()
+                for i, r in enumerate(reqs):
+                    r.prob = float(probs[i])
+                    r.finished_at = done
+                    if tel.enabled:
+                        self._lat_hist.record((done - r.submitted_at)
+                                              * 1e3)
         self.served += len(reqs)
+        if tel.enabled:
+            self._c_served.inc(len(reqs))
+            self._c_batches.inc()
+            self._batch_hist.record(len(reqs))
+            self._g_queue.set(len(self.batcher))
         return len(reqs)
 
     def drain(self) -> int:
@@ -455,25 +674,44 @@ class RecEngine:
         n = 0
         while len(self.batcher):
             n += self.step(force=True)
+        self._collect_pending()     # reporting boundary: settle accounting
         return n
 
     # -- reporting ----------------------------------------------------------
 
+    def live_fig5(self) -> Dict[str, float]:
+        """The live Fig-5 characterization: mean per-stage device time
+        and the embedding fraction, from real served traffic. Requires
+        ``Telemetry(device_stages=True)``; comparable to the offline
+        ``fig5_*`` rows in BENCH_paper.json."""
+        assert self._staged is not None, \
+            "live_fig5 needs Telemetry(device_stages=True)"
+        reg = self.telemetry.registry
+        means = {n: reg.histogram("rec_stage_ms",
+                                  labels={"stage": n}).mean
+                 for n in _STAGE_NAMES}
+        total = sum(means.values())
+        return {**{f"{n}_ms": means[n] for n in _STAGE_NAMES},
+                "total_ms": total,
+                "emb_frac": (means["sparse_lookup"] / total
+                             if total else 0.0)}
+
     def stats(self) -> Dict[str, float]:
-        if not self.latencies:
+        self._collect_pending()     # reporting boundary: settle accounting
+        h = self._lat_hist
+        if h.count == 0:
             return {"n": 0}
-        arr = np.asarray(self.latencies)
-        out = {"n": len(arr),
+        out = {"n": h.count,
                "path": self.path,
                "source": es.describe_source(self.source),
                # nested compositions one-per-line (the compact label above
                # is unreadable for deep/grouped sources)
                "source_tree": es.describe_source(self.source,
                                                  multiline=True),
-               "p50_ms": float(np.percentile(arr, 50) * 1e3),
-               "p95_ms": float(np.percentile(arr, 95) * 1e3),
-               "p99_ms": float(np.percentile(arr, 99) * 1e3),
-               "mean_ms": float(arr.mean() * 1e3)}
+               "p50_ms": h.percentile(50),
+               "p95_ms": h.percentile(95),
+               "p99_ms": h.percentile(99),
+               "mean_ms": h.mean}
         # per-path-correct: None (not a fake 0.0) when no hot cache is
         # serving, or when no lookups have hit the live cache version yet
         if self.grouped:
@@ -491,6 +729,19 @@ class RecEngine:
                                      if self._lookups else None)
             out["cache_version"] = self.source_version
         out["buckets"] = self.buckets
+        # windowed views (post-swap regressions must not average away):
+        # since_swap restarts at every version bump, rolling covers the
+        # last ring's worth of requests exactly
+        out["since_swap"] = {"n": h.window_count,
+                             "p50_ms": h.percentile(50, "window"),
+                             "p95_ms": h.percentile(95, "window"),
+                             "p99_ms": h.percentile(99, "window")}
+        out["rolling"] = {"n": min(h.count, h.ring_size),
+                          "p50_ms": h.percentile(50, "rolling"),
+                          "p95_ms": h.percentile(95, "rolling"),
+                          "p99_ms": h.percentile(99, "rolling")}
+        if self._staged is not None:
+            out["stages"] = self.live_fig5()
         return out
 
 

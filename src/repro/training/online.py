@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import DLRMConfig
 from repro.core import dlrm
 from repro.core import embedding_source as es
@@ -122,7 +123,23 @@ class OnlineTrainer:
     def __init__(self, cfg: DLRMConfig, params: Dict, *, max_l: int,
                  lr: float = 1e-3, sparse: bool = True,
                  cache_cfg: Optional[OnlineCacheConfig] = None,
-                 mesh: Optional[jax.sharding.Mesh] = None):
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 telemetry: Optional[obs.Telemetry] = None):
+        self.telemetry = telemetry if telemetry is not None \
+            else obs.Telemetry()
+        reg = self.telemetry.registry
+        self._g_loss = reg.gauge("train_loss", "last optimizer-step loss")
+        self._g_version = reg.gauge("train_cache_version",
+                                    "last published rebuild version")
+        self._g_hot_k = reg.gauge("train_rebuild_hot_k",
+                                  "hot rows pinned by the last rebuild")
+        self._g_requant = reg.gauge(
+            "train_requant_rows",
+            "rows re-quantized by the last incremental refresh")
+        self._c_steps = reg.counter("train_steps_total",
+                                    "optimizer steps taken")
+        self._c_rebuilds = reg.counter("train_rebuilds_total",
+                                       "hot-cache rebuilds")
         self.cfg = cfg
         self.spec = dlrm.arena_spec(cfg)
         self.params = params
@@ -185,6 +202,9 @@ class OnlineTrainer:
             self.rebuild_cache()
         loss = float(loss)
         self.losses.append(loss)
+        if self.telemetry.enabled:
+            self._c_steps.inc()
+            self._g_loss.set(loss)
         return loss
 
     def train(self, batches: Iterable[Dict]) -> list:
@@ -205,6 +225,11 @@ class OnlineTrainer:
         if self.cold_q is not None:
             self.refresh_quantized()
         self.version += 1
+        self._c_rebuilds.inc()
+        self._g_version.set(self.version)
+        self._g_hot_k.set(self.cache_cfg.k)
+        self.telemetry.emit("hot_cache_rebuild", version=self.version,
+                            step=self.steps, k=self.cache_cfg.k)
         return self.snapshot()
 
     def refresh_quantized(self) -> es.QuantizedArena:
@@ -219,6 +244,9 @@ class OnlineTrainer:
             self.cold_q = self.cold_q.quantize_rows(
                 self.params["arena"], jnp.asarray(rows, jnp.int32))
             self._dirty_q[:] = False
+        self._g_requant.set(int(rows.size))
+        self.telemetry.emit("quantized_refresh", version=self.version,
+                            step=self.steps, rows=int(rows.size))
         return self.cold_q
 
     def snapshot(self) -> Optional[VersionedHotCache]:
@@ -256,8 +284,11 @@ class OnlineTrainer:
         """
         if self.cache is None:
             return None
-        return VersionedSource(source=self.serving_source(),
+        blob = VersionedSource(source=self.serving_source(),
                                version=self.version).serialize()
+        self.telemetry.emit("publish", version=self.version,
+                            artifact="source", bytes=len(blob))
+        return blob
 
     def publish(self) -> Optional[bytes]:
         """Serialize the current snapshot as a fleet broadcast artifact
@@ -266,7 +297,12 @@ class OnlineTrainer:
         .apply(engine)`` and adopts version k atomically — no recompile
         (K is unchanged), no per-replica rebuild."""
         snap = self.snapshot()
-        return None if snap is None else snap.serialize()
+        if snap is None:
+            return None
+        blob = snap.serialize()
+        self.telemetry.emit("publish", version=snap.version,
+                            artifact="hot_cache", bytes=len(blob))
+        return blob
 
     def sync_engine(self, engine) -> bool:
         """Publish the trained state into a RecEngine if it is behind;
@@ -342,10 +378,21 @@ class OnlineGroupTrainer:
 
     def __init__(self, cfg: DLRMConfig, params: Dict, *, max_l: int,
                  plans, lr: float = 1e-3, refresh_every: int = 50,
-                 decay: float = 0.98):
+                 decay: float = 0.98,
+                 telemetry: Optional[obs.Telemetry] = None):
         assert cfg.heterogeneous, \
             "OnlineGroupTrainer needs a heterogeneous config"
         assert len(plans) == cfg.n_tables, (len(plans), cfg.n_tables)
+        self.telemetry = telemetry if telemetry is not None \
+            else obs.Telemetry()
+        reg = self.telemetry.registry
+        self._g_loss = reg.gauge("train_loss", "last optimizer-step loss")
+        self._g_version = reg.gauge("train_cache_version",
+                                    "last published rebuild version")
+        self._c_steps = reg.counter("train_steps_total",
+                                    "optimizer steps taken")
+        self._c_rebuilds = reg.counter("train_rebuilds_total",
+                                       "hot-cache rebuilds")
         self.cfg = cfg
         self.spec = dlrm.arena_spec(cfg)
         self.specs = dlrm.member_specs(cfg)
@@ -408,6 +455,9 @@ class OnlineGroupTrainer:
             self.rebuild()
         loss = float(loss)
         self.losses.append(loss)
+        if self.telemetry.enabled:
+            self._c_steps.inc()
+            self._g_loss.set(loss)
         return loss
 
     def train(self, batches: Iterable[Dict]) -> list:
@@ -423,6 +473,7 @@ class OnlineGroupTrainer:
         and bump ONE version for the whole group — tables refresh
         together or not at all, so a replica can never serve a torn mix
         of table versions."""
+        requant = {}
         for t, (plan, sp) in enumerate(zip(self.plans, self.specs)):
             if plan.cache_k > 0:
                 self.caches[t] = se.build_hot_cache(
@@ -430,12 +481,20 @@ class OnlineGroupTrainer:
                     plan.cache_k)
             if self.cold_q[t] is not None:
                 rows = np.nonzero(self._dirty_q[t])[0]
+                requant[str(t)] = int(rows.size)
                 if rows.size:
                     self.cold_q[t] = self.cold_q[t].quantize_rows(
                         self.params["tables"][t],
                         jnp.asarray(rows, jnp.int32))
                     self._dirty_q[t][:] = False
         self.version += 1
+        self._c_rebuilds.inc()
+        self._g_version.set(self.version)
+        self.telemetry.emit(
+            "hot_cache_rebuild", version=self.version, step=self.steps,
+            cached_tables=[t for t, c in enumerate(self.caches)
+                           if c is not None],
+            requant_rows=requant)
         return self.version
 
     def serving_source(self) -> es.TableGroupSource:
@@ -455,8 +514,11 @@ class OnlineGroupTrainer:
         """One ``VersionedSource`` blob carrying every table's sparse
         params (hot rows + cold arenas) under the group's single
         version."""
-        return es.VersionedSource(source=self.serving_source(),
+        blob = es.VersionedSource(source=self.serving_source(),
                                   version=self.version).serialize()
+        self.telemetry.emit("publish", version=self.version,
+                            artifact="group_source", bytes=len(blob))
+        return blob
 
     def sync_engine(self, engine) -> bool:
         """Push the live group into a RecEngine if it is behind (same

@@ -30,6 +30,10 @@ MODULES = (
     "repro.training",
     "repro.training.online",
     "repro.training.sparse_optim",
+    "repro.obs",
+    "repro.obs.metrics",
+    "repro.obs.tracing",
+    "repro.obs.events",
 )
 
 

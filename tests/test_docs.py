@@ -1,6 +1,7 @@
 """Docs-sync: the README / ARCHITECTURE code snippets cannot rot.
 
-Every fenced ```python block in README.md and docs/ARCHITECTURE.md must
+Every fenced ```python block in README.md, docs/ARCHITECTURE.md, and
+docs/OBSERVABILITY.md must
 (1) parse, and (2) reference only public names that actually exist:
 `from repro.x import name` imports and attribute accesses on repro-module
 aliases (`es.lookup_bags`, `dlrm.table_plans`, ...) are resolved against
@@ -18,7 +19,8 @@ from pathlib import Path
 import pytest
 
 ROOT = Path(__file__).resolve().parents[1]
-DOCS = (ROOT / "README.md", ROOT / "docs" / "ARCHITECTURE.md")
+DOCS = (ROOT / "README.md", ROOT / "docs" / "ARCHITECTURE.md",
+        ROOT / "docs" / "OBSERVABILITY.md")
 MANIFEST = json.loads((ROOT / "tests" / "api_manifest.json").read_text())
 
 _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
