@@ -156,14 +156,22 @@ def bench_fig14(batch_size: int = 32) -> List[str]:
         pipe = jax.jit(lambda p, d, i, _c=cfg: hybrid.pipelined_forward(
             p, _c, d, i, n_micro=4))
 
-        t_b = time_fn(base, params, batch["dense"], batch["indices"])
-        t_c = time_fn(cent, params, batch["dense"], batch["indices"])
-        t_p = time_fn(pipe, params, batch["dense"], batch["indices"])
+        # the pipelined-vs-fused selection decides from MEASURED
+        # interleaved samples: the two candidates are within noise of
+        # each other on several configs, so sequential timing handed
+        # whichever ran last any machine-load drift — dlrm3 once
+        # selected `pipelined: yes` while measuring 0.90x vs baseline
+        args = (params, batch["dense"], batch["indices"])
+        t_b, t_c, t_p = time_fns_interleaved(
+            [(base, args), (cent, args), (pipe, args)], iters=20)
+        pipelined = t_p < t_c
         best = min(t_c, t_p)
         rows.append(csv_row(
             f"fig14_{name}_b{batch_size}", best * 1e6,
             f"speedup={t_b / best:.2f}x;baseline_us={t_b * 1e6:.1f};"
-            f"pipelined={'yes' if t_p < t_c else 'no'}"))
+            f"pipelined={'yes' if pipelined else 'no'};"
+            f"basis=interleaved;fused_us={t_c * 1e6:.1f};"
+            f"pipelined_us={t_p * 1e6:.1f}"))
     return rows
 
 
@@ -729,6 +737,147 @@ def bench_obs(batch_size: int = 16,
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Beyond-paper: open-loop serving under overload (p50/p99, shed/downgrade)
+# ---------------------------------------------------------------------------
+
+def bench_serve_open_loop(n: int = 3000, max_batch: int = 32,
+                          overload: float = 2.0,
+                          smoke: bool = False) -> List[str]:
+    """Open-loop p50/p99 under overload: the synchronous drain loop vs
+    the SLA-aware continuous-batching scheduler on the SAME Poisson
+    trace (identical seed — identical arrivals and request bodies).
+
+    Capacity is calibrated from a measured full-bucket dispatch+settle,
+    then the trace offers ``overload``x that rate, so the synchronous
+    loop's queue grows without bound (it serves every request no matter
+    how stale — its p99 is the backlog) while the scheduler sheds the
+    hopeless prefix and downgrades to the int8 source near the margin,
+    holding p99 at the SLA. The emitted ``p99_tightening`` is the
+    acceptance ratio (sync p99 / scheduler p99); shed/downgrade
+    fractions ride along, and every shed request must be accounted for
+    by exactly one ``shed`` event (``events_ok``).
+
+    ``--smoke`` runs a short trace and turns the claims into hard
+    bounds: p99 finite, zero requests dropped without a shed event, and
+    the tightening ratio >= 2x. A third (full-run only) scenario drives
+    a diurnal drifting-Zipf trace near capacity, where downgrades — not
+    sheds — absorb the peaks.
+    """
+    from benchmarks import loadgen
+    from repro import obs
+    from repro.serving import RecEngine, SlaPolicy, SlaScheduler
+
+    if smoke:
+        n = 800
+    rows = []
+    cfg = scaled_configs()["dlrm1"]
+    params = dlrm.init(jax.random.PRNGKey(0), cfg)
+    max_l = 2 * cfg.lookups_per_table
+    mean_l = cfg.lookups_per_table
+
+    def make_engine():
+        return RecEngine(cfg, params, source="ragged", max_l=max_l,
+                         max_batch=max_batch, max_wait_ms=1.0,
+                         buckets=(max_batch // 4, max_batch),
+                         telemetry=obs.Telemetry())
+
+    def make_trace(**kw):
+        return loadgen.make_trace(cfg, n, mean_l=mean_l, max_l=max_l,
+                                  seed=17, **kw)
+
+    # calibrate: one full-bucket dispatch+settle (assemble included —
+    # the host-side padding is part of the served cost) sets capacity
+    cal_eng = make_engine()
+    cal_eng.enable_downgrade()
+    cal_eng.warmup()
+    cal_reqs = loadgen.zipf_requests(cfg, max_batch, mean_l=mean_l,
+                                     max_l=max_l, seed=3)
+    t_batch = time_fn(
+        lambda: cal_eng.settle(cal_eng.dispatch(cal_reqs)), iters=10)
+    capacity_qps = max_batch / t_batch
+    sla_ms = 3.0 * t_batch * 1e3
+    rate = overload * capacity_qps
+
+    # -- synchronous drain loop: serves everything, p99 is the backlog --
+    sync_eng = make_engine()
+    sync_eng.warmup()
+    trace = make_trace(kind="poisson", rate_qps=rate)
+    loadgen.replay(trace, sync_eng.submit, sync_eng.step)
+    sync_eng.drain()
+    s_sync = sync_eng.stats()
+    assert s_sync["n"] == n, (s_sync["n"], n)
+
+    # -- SLA-aware scheduler: same trace, bounded p99 -------------------
+    sla_eng = make_engine()
+    sched = SlaScheduler(sla_eng, SlaPolicy(
+        sla_ms=sla_ms, default_service_ms=t_batch * 1e3,
+        max_queue=4 * max_batch))
+    sched.warmup()
+    trace = make_trace(kind="poisson", rate_qps=rate)
+    loadgen.replay(trace, sched.submit, sched.pump)
+    sched.drain()
+    s_sla = sched.stats()
+
+    shed_events = [e for e in sla_eng.telemetry.events.events
+                   if e.kind == "shed"]
+    accounted = (s_sla["served"] + s_sla["shed"] == n
+                 and len(shed_events) == s_sla["shed"]
+                 and sum(1 for r in trace.requests if r.shed)
+                 == s_sla["shed"])
+    tightening = s_sync["p99_ms"] / s_sla["p99_ms"]
+    if smoke:
+        assert np.isfinite(s_sla["p99_ms"]) and s_sla["n"] > 0, s_sla
+        assert accounted, ("open-loop accounting broke: every request "
+                           "must be served or carry a shed event",
+                           n, s_sla["served"], s_sla["shed"],
+                           len(shed_events))
+        assert tightening >= 2.0, (
+            f"SLA scheduling held p99 only {tightening:.2f}x tighter "
+            f"than the synchronous loop under {overload}x overload "
+            f"(sync {s_sync['p99_ms']:.1f}ms vs "
+            f"{s_sla['p99_ms']:.1f}ms, SLA {sla_ms:.1f}ms)")
+
+    rows.append(csv_row(
+        f"serve_open_loop_sync_b{max_batch}",
+        s_sync["p50_ms"] * 1e3,
+        f"p99_ms={s_sync['p99_ms']:.2f};"
+        f"offered_qps={rate:.0f};capacity_qps={capacity_qps:.0f};"
+        f"overload={overload:.1f}x;served={s_sync['n']};shed_frac=0.000"))
+    rows.append(csv_row(
+        f"serve_open_loop_sla_b{max_batch}",
+        s_sla["p50_ms"] * 1e3,
+        f"p99_ms={s_sla['p99_ms']:.2f};sla_ms={sla_ms:.2f};"
+        f"p99_tightening={tightening:.2f}x;"
+        f"shed_frac={s_sla['shed_frac']:.3f};"
+        f"downgrade_frac={s_sla['downgrade_frac']:.3f};"
+        f"events_ok={'yes' if accounted else 'NO'}"))
+
+    if smoke:
+        return rows
+
+    # -- diurnal drifting-Zipf near capacity: downgrades absorb peaks ---
+    peak_eng = make_engine()
+    peak_sched = SlaScheduler(peak_eng, SlaPolicy(
+        sla_ms=sla_ms, downgrade_margin=0.5,
+        default_service_ms=t_batch * 1e3, max_queue=4 * max_batch))
+    peak_sched.warmup()
+    trace = make_trace(kind="diurnal", rate_qps=0.6 * capacity_qps,
+                       peak_ratio=2.5, period_s=max(0.5, n / rate),
+                       drift_per_chunk=64)
+    loadgen.replay(trace, peak_sched.submit, peak_sched.pump)
+    peak_sched.drain()
+    s_peak = peak_sched.stats()
+    rows.append(csv_row(
+        f"serve_open_loop_diurnal_b{max_batch}",
+        s_peak["p50_ms"] * 1e3,
+        f"p99_ms={s_peak['p99_ms']:.2f};sla_ms={sla_ms:.2f};"
+        f"trough_qps={0.6 * capacity_qps:.0f};peak_ratio=2.5;"
+        f"shed_frac={s_peak['shed_frac']:.3f};"
+        f"downgrade_frac={s_peak['downgrade_frac']:.3f}"))
+    return rows
+
+
 def write_json(rows: List[str], path: str = "BENCH_paper.json") -> str:
     """Persist the run as scenario -> {p50_us, p95_us?, derived{...}} —
     the machine-readable trajectory artifact (the printed CSV is for
@@ -760,6 +909,7 @@ def run_all() -> List[str]:
     rows += bench_source_dispatch()
     rows += bench_table_group()
     rows += bench_obs()
+    rows += bench_serve_open_loop()
     return rows
 
 
@@ -768,13 +918,16 @@ if __name__ == "__main__":
 
     if "--smoke" in sys.argv[1:]:
         # CI smoke: the derived-only table, the one timed scenario
-        # family that asserts fused-vs-unified agreement internally, and
-        # the telemetry scenario with its overhead bound asserted —
-        # proves the harness runs end-to-end without paying for the full
-        # sweep; no JSON is written (smoke timings are not trajectory
-        # data).
+        # family that asserts fused-vs-unified agreement internally, the
+        # telemetry scenario with its overhead bound asserted, and the
+        # open-loop serving scenario with its p99/accounting bounds
+        # asserted (p99 finite, >=2x tightening, zero requests dropped
+        # without a shed event) — proves the harness runs end-to-end
+        # without paying for the full sweep; no JSON is written (smoke
+        # timings are not trajectory data).
         all_rows = (bench_table1() + bench_source_dispatch()
-                    + bench_obs(assert_overhead=1.05))
+                    + bench_obs(assert_overhead=1.05)
+                    + bench_serve_open_loop(smoke=True))
         print("name,us_per_call,derived")
         for r in all_rows:
             print(r)

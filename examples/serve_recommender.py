@@ -28,6 +28,16 @@ version, and per-table hit rates in stats().
 
     PYTHONPATH=src python examples/serve_recommender.py --het
 
+With ``--open-loop`` the driver switches from the closed-loop wave above
+to OPEN-LOOP arrivals (requests come on their own Poisson/diurnal clock
+and do not wait for the server) served by the SLA-aware continuous
+batcher (``repro.serving.scheduler``): in-flight refill, overload
+shedding, int8 downgrade under pressure. ``--qps 0`` calibrates the
+offered rate from the engine's measured capacity times ``--overload``.
+
+    PYTHONPATH=src python examples/serve_recommender.py \
+        --open-loop --requests 2000 --overload 2.0 --arrivals poisson
+
 Telemetry (``repro.obs``): ``--metrics-json FILE`` dumps the registry
 snapshot + swap events at exit, ``--trace`` collects per-request spans
 and turns on the jax.profiler stage annotations, and ``--live-fig5``
@@ -79,6 +89,8 @@ def _finish_telemetry(args, telemetry: obs.Telemetry) -> None:
 
 def serve_once(args) -> None:
     """Single-engine SLA serving run (the original driver)."""
+    if args.sla_ms is None:
+        args.sla_ms = 10.0
     cfg = DLRM_CONFIGS["dlrm1"]
     params = dlrm.init(jax.random.PRNGKey(0), cfg)
     data = DLRMSynthetic(cfg, seed=7)
@@ -141,6 +153,73 @@ def serve_once(args) -> None:
               f"{f5['interaction_ms']:.2f} ms | top-MLP "
               f"{f5['mlp_ms']:.2f} ms -> emb_frac "
               f"{f5['emb_frac']:.2f}")
+    _finish_telemetry(args, telemetry)
+
+
+def serve_open_loop(args) -> None:
+    """Open-loop arrivals through the SLA-aware continuous batcher."""
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks import loadgen
+
+    from repro.serving import SlaPolicy, SlaScheduler
+
+    cfg = DLRM_CONFIGS["dlrm1"]
+    params = dlrm.init(jax.random.PRNGKey(0), cfg)
+    max_l = 2 * cfg.lookups_per_table
+    telemetry = _make_telemetry(args)
+    engine = RecEngine(cfg, params, source=args.path, max_l=max_l,
+                       max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+                       buckets=(args.max_batch // 4, args.max_batch),
+                       telemetry=telemetry)
+
+    # calibrate capacity: settled full batches, telemetry off so the
+    # warm-up compile and the stale calibration stamps never pollute the
+    # served-traffic histograms / counters
+    data = DLRMSynthetic(cfg, seed=7)
+    cal = requests_from_ragged_batch(
+        data.ragged_batch(args.max_batch, dist="poisson", max_l=max_l),
+        cfg.n_tables)
+    engine.telemetry = obs.Telemetry.disabled()
+    engine.settle(engine.dispatch(cal))
+    t0 = time.perf_counter()
+    for _ in range(5):
+        engine.settle(engine.dispatch(cal))
+    t_batch = (time.perf_counter() - t0) / 5
+    engine.telemetry = telemetry
+    capacity_qps = args.max_batch / t_batch
+    rate_qps = args.qps or capacity_qps * args.overload
+    sla_ms = args.sla_ms if args.sla_ms is not None else 3 * t_batch * 1e3
+
+    sched = SlaScheduler(engine, SlaPolicy(
+        sla_ms=sla_ms, default_service_ms=t_batch * 1e3,
+        max_queue=4 * args.max_batch))
+    sched.warmup()                       # warm pool + service calibration
+
+    trace = loadgen.make_trace(
+        cfg, args.requests, kind=args.arrivals, rate_qps=rate_qps,
+        mean_l=cfg.lookups_per_table, max_l=max_l, drift_per_chunk=64)
+    print(f"open-loop {args.arrivals} arrivals: offered "
+          f"{trace.offered_qps:.0f} qps vs capacity {capacity_qps:.0f} qps "
+          f"({trace.offered_qps / capacity_qps:.1f}x), SLA {sla_ms:.2f} ms")
+    wall = loadgen.replay(trace, sched.submit, sched.pump)
+    sched.drain()
+
+    s = sched.stats()
+    print(f"submitted {s['submitted']}: served {s['served']}, "
+          f"shed {s['shed']} ({100 * s['shed_frac']:.1f}%), "
+          f"downgraded {s['downgraded']} "
+          f"({100 * s['downgrade_frac']:.1f}%)")
+    if s.get("n"):
+        print(f"latency per served request: p50 {s['p50_ms']:.2f} ms  "
+              f"p99 {s['p99_ms']:.2f} ms (SLA {sla_ms:.2f} ms)")
+    if "queue_wait_p99_ms" in s:
+        print(f"queue wait: p50 {s['queue_wait_p50_ms']:.2f} ms  "
+              f"p99 {s['queue_wait_p99_ms']:.2f} ms")
+    print(f"goodput: {s['served'] / wall:.0f} req/s over {wall:.2f} s; "
+          f"cold compiles after warmup: "
+          f"{int(telemetry.registry.counter('rec_cold_compiles_total').value)}")
     _finish_telemetry(args, telemetry)
 
 
@@ -334,7 +413,9 @@ def main() -> None:
                         default="poisson")
     parser.add_argument("--cache-k", type=int, default=4096)
     parser.add_argument("--quantize-cold", action="store_true")
-    parser.add_argument("--sla-ms", type=float, default=10.0)
+    parser.add_argument("--sla-ms", type=float, default=None,
+                        help="latency SLA; default 10 ms closed-loop, "
+                             "3x one measured batch time open-loop")
     parser.add_argument("--replicas", type=int, default=1,
                         help=">=2: run the trainer -> N-replica versioned "
                              "hot-arena broadcast demo instead")
@@ -344,6 +425,17 @@ def main() -> None:
                         help="heterogeneous table-group demo: per-table "
                              "composition + online per-table refresh "
                              "under one version")
+    parser.add_argument("--open-loop", action="store_true",
+                        help="open-loop arrivals through the SLA-aware "
+                             "continuous batcher (shed/downgrade under "
+                             "overload) instead of the closed-loop wave")
+    parser.add_argument("--qps", type=float, default=0.0,
+                        help="offered arrival rate; 0 = calibrate from "
+                             "measured capacity x --overload")
+    parser.add_argument("--overload", type=float, default=2.0,
+                        help="offered/capacity ratio when --qps is 0")
+    parser.add_argument("--arrivals", choices=("poisson", "diurnal"),
+                        default="poisson")
     parser.add_argument("--metrics-json", default=None,
                         help="write the telemetry registry snapshot "
                              "(+ swap events) to this path at exit")
@@ -359,6 +451,8 @@ def main() -> None:
         serve_heterogeneous(args)
     elif args.replicas > 1:
         serve_broadcast_fleet(args)
+    elif args.open_loop:
+        serve_open_loop(args)
     else:
         serve_once(args)
 

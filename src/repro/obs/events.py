@@ -16,6 +16,9 @@ Event kinds emitted by the engine/trainers:
     ``quantized_refresh``  trainer re-quantized cold rows touched by grads
     ``publish``            trainer stamped + broadcast an artifact
     ``retune``             engine re-derived its padding buckets
+    ``shed``               scheduler dropped a request at admission (SLA)
+    ``downgrade``          scheduler served a batch on the int8 path
+    ``drain``              engine/scheduler flushed the queue (totals)
 
 Every event carries ``version`` where applicable; ``source_swap`` /
 ``cache_swap`` events additionally carry the *outgoing* version's hit

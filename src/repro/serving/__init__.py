@@ -1,7 +1,12 @@
 from repro.core.embedding_source import SourceSpec
 from repro.serving.engine import Batcher, DecodeEngine, Request
-from repro.serving.rec_engine import (RecBatcher, RecEngine, RecRequest,
+from repro.serving.rec_engine import (InflightBatch, RecBatcher, RecEngine,
+                                      RecRequest,
                                       requests_from_ragged_batch)
+from repro.serving.scheduler import (BatchPlan, ServiceEstimator, SlaPolicy,
+                                     SlaScheduler, plan_batch)
 
-__all__ = ["Batcher", "DecodeEngine", "Request", "RecBatcher", "RecEngine",
-           "RecRequest", "SourceSpec", "requests_from_ragged_batch"]
+__all__ = ["BatchPlan", "Batcher", "DecodeEngine", "InflightBatch",
+           "Request", "RecBatcher", "RecEngine", "RecRequest",
+           "ServiceEstimator", "SlaPolicy", "SlaScheduler", "SourceSpec",
+           "plan_batch", "requests_from_ragged_batch"]

@@ -84,19 +84,33 @@ class RecRequest:
     rid: int
     dense: np.ndarray                   # (dense_features,) float32
     sparse_ids: List[np.ndarray]        # per table: (l_t,) int32, l_t<=max_l
+    # wall-clock stamps are USER-FACING only (log lines, dashboards);
+    # every deadline / latency computation runs on submitted_mono — an
+    # NTP step must never flush a batch early or stall it past its wait
+    # budget, and must never corrupt a recorded latency
     submitted_at: float = field(default_factory=time.time)
+    submitted_mono: float = field(default_factory=time.monotonic)
     started_at: Optional[float] = None
     finished_at: Optional[float] = None
     prob: Optional[float] = None        # predicted CTR, set when served
+    shed: bool = False                  # dropped at admission (SLA)
+    downgraded: bool = False            # served on the int8 downgrade path
 
 
 class RecBatcher:
     """Admission queue: release a micro-batch when it is full or when the
-    oldest request has waited max_wait_ms (the SLA knob)."""
+    oldest request has waited max_wait_ms (the SLA knob).
 
-    def __init__(self, max_batch: int = 32, max_wait_ms: float = 2.0):
+    Deadline math runs on the monotonic clock (``clock`` is injectable
+    for tests) against ``RecRequest.submitted_mono`` — wall clock is
+    kept only for the user-facing ``submitted_at`` stamp.
+    """
+
+    def __init__(self, max_batch: int = 32, max_wait_ms: float = 2.0,
+                 clock=time.monotonic):
         self.max_batch = max_batch
         self.max_wait_ms = max_wait_ms
+        self._clock = clock
         self._queue: List[RecRequest] = []
 
     def __len__(self) -> int:
@@ -108,7 +122,7 @@ class RecBatcher:
     def take(self, force: bool = False) -> List[RecRequest]:
         if not self._queue:
             return []
-        oldest = time.time() - self._queue[0].submitted_at
+        oldest = self._clock() - self._queue[0].submitted_mono
         if force or len(self._queue) >= self.max_batch \
                 or oldest * 1e3 >= self.max_wait_ms:
             batch = self._queue[:self.max_batch]
@@ -144,6 +158,19 @@ def tune_buckets(sizes: Sequence[int], max_batch: int,
                  - 1)] for i in range(n_buckets)]
     out = sorted({int(q) for q in qs if q >= 1} | {max_batch})
     return tuple(out)
+
+
+@dataclass
+class InflightBatch:
+    """A dispatched-but-unsettled micro-batch: the device-array future
+    plus just enough host context to account for it at settle time.
+    Produced by ``RecEngine.dispatch``, consumed by ``RecEngine.settle``
+    — the unit of continuous batching (``repro.serving.scheduler``)."""
+    reqs: List[RecRequest]
+    probs: object                       # device array, NOT host-converted
+    bucket: int
+    downgraded: bool
+    dispatched_mono: float
 
 
 _STAGE_NAMES = ("sparse_lookup", "interaction", "mlp")
@@ -235,7 +262,19 @@ class RecEngine:
         self._g_version = reg.gauge("rec_source_version",
                                     "currently served source version")
         self._g_queue = reg.gauge("rec_queue_depth",
-                                  "admission-queue depth after drain")
+                                  "admission-queue depth (set on enqueue "
+                                  "and after every serve/drain)")
+        self._qwait_hist = reg.histogram(
+            "rec_queue_wait_ms", "admission-to-dispatch queue wait",
+            lo=1e-3, hi=1e5, ring=4096)
+        self._c_cold = reg.counter(
+            "rec_cold_compiles_total",
+            "dispatches that hit a cold (path, bucket) compile-cache "
+            "entry — zero after warmup() is the warm-pool claim")
+        # the warm compile-cache pool: (path kind, bucket) pairs whose
+        # compiled entry has been triggered (warmup() or first dispatch)
+        self._warm: set = set()
+        self._down_source: Optional[es.EmbeddingSource] = None
         # auto-tune sampling is capped at auto_tune_after (satellite of
         # the unbounded-lists fix): the tuner never needs more history
         self._batch_ring: deque = deque(
@@ -348,6 +387,10 @@ class RecEngine:
                      if isinstance(self.source, es.TableGroupSource)
                      else params["arena"])
             self.source = es.rebind_arena(self.source, arena)
+        if getattr(self, "_down_source", None) is not None:
+            # the downgrade arena is derived from the live params, so a
+            # params swap requantizes it (same shapes — no recompile)
+            self._down_source = self._build_downgrade_source()
 
     @property
     def cache(self) -> Optional[se.HotRowCache]:
@@ -466,12 +509,50 @@ class RecEngine:
         finally:
             self._next_swap_kind = "source_swap"
 
+    # -- the int8 downgrade path --------------------------------------------
+
+    @property
+    def downgrade_source(self) -> Optional[es.EmbeddingSource]:
+        """The int8 source overload batches serve from (None until
+        ``enable_downgrade``)."""
+        return self._down_source
+
+    def enable_downgrade(self) -> es.EmbeddingSource:
+        """Build (once) the int8 downgrade source the SLA scheduler
+        serves from under overload.
+
+        No second jit: the downgrade source is just another call-time
+        pytree through the SAME ragged serve step, so its treedef gets
+        its own compile-cache entry (pre-triggered by ``warmup()`` —
+        the warm pool covers both treedefs per bucket) and per-batch
+        path selection never recompiles. ``update_source``'s structural
+        no-recompile assert only guards primary-source swaps.
+        """
+        assert self.layout != "fixed", \
+            ("the downgrade path serves through the ragged lookup_bags "
+             "step; the fixed layout reads params['arena'] directly")
+        if self._down_source is None:
+            self._down_source = self._build_downgrade_source()
+        return self._down_source
+
+    def _build_downgrade_source(self) -> es.EmbeddingSource:
+        if self.grouped:
+            return es.TableGroupSource(
+                members=tuple(es.QuantizedArena.from_arena(a)
+                              for a in self.params["tables"]),
+                specs=self.source.specs)
+        return es.QuantizedArena.from_arena(self.params["arena"])
+
     def warmup(self):
-        """Compile every bucket shape off the SLA clock.
+        """Compile every (path, bucket) pair off the SLA clock — the
+        warm compile-cache pool.
 
         Without this the first live request landing in each bucket pays
         that bucket's jit compile (hundreds of ms) — a p99 spike that
-        would show up as an SLA violation in production.
+        would show up as an SLA violation in production. With the
+        downgrade path enabled both source treedefs are pre-compiled
+        per bucket, so in-flight refill never stalls on a compile
+        (``rec_cold_compiles_total`` stays zero).
         """
         t = self.cfg.n_tables
         l = self.cfg.lookups_per_table if self.layout == "fixed" else 0
@@ -481,6 +562,11 @@ class RecEngine:
         for bucket in self.buckets:
             batch, _ = self._assemble(dummy, bucket)
             np.asarray(self._run_serve(batch))
+            self._warm.add(("primary", bucket))
+            if self._down_source is not None:
+                np.asarray(self._serve(self.params, batch,
+                                       self._down_source))
+                self._warm.add(("downgrade", bucket))
             if self._staged is not None:
                 sp, it, tp = self._staged
                 emb = sp(self.params, batch, self.source)
@@ -521,6 +607,10 @@ class RecEngine:
             (len(req.sparse_ids), self.cfg.n_tables)
         with self.telemetry.span("enqueue", {"rid": req.rid}):
             self.batcher.submit(req)
+        if self.telemetry.enabled:
+            # live on enqueue, not only after a serve step — a stalled
+            # serve loop must show its backlog, not the last drained value
+            self._g_queue.set(len(self.batcher))
 
     def _assemble(self, reqs: List[RecRequest], bucket: int):
         """Pad a micro-batch to its bucket's static shapes.
@@ -642,11 +732,15 @@ class RecEngine:
             self._retuned = True
             self.retune_buckets()
         now = time.time()
+        now_m = time.monotonic()
         for r in reqs:
             r.started_at = now
+            if tel.enabled:
+                self._qwait_hist.record((now_m - r.submitted_mono) * 1e3)
         self._batches_seen += 1
         self._batch_ring.append(len(reqs))
         bucket = _bucket(len(reqs), self.buckets)
+        self._warm.add(("primary", bucket))
         with tel.span("serve_step", {"batch_size": len(reqs),
                                      "bucket": bucket}):
             tel.tracer.record("batch", t_take0, t_take1)
@@ -655,11 +749,14 @@ class RecEngine:
             probs = self._forward(batch, n_valid)
             with tel.span("respond"):
                 done = time.time()
+                done_m = time.monotonic()
                 for i, r in enumerate(reqs):
                     r.prob = float(probs[i])
                     r.finished_at = done
                     if tel.enabled:
-                        self._lat_hist.record((done - r.submitted_at)
+                        # latency on the monotonic clock: an NTP step
+                        # must not mint a negative (or week-long) p99
+                        self._lat_hist.record((done_m - r.submitted_mono)
                                               * 1e3)
         self.served += len(reqs)
         if tel.enabled:
@@ -675,7 +772,96 @@ class RecEngine:
         while len(self.batcher):
             n += self.step(force=True)
         self._collect_pending()     # reporting boundary: settle accounting
+        if self.telemetry.enabled:
+            self._g_queue.set(len(self.batcher))
+        self.telemetry.emit("drain", version=self.source_version,
+                            served=n, queue_depth=len(self.batcher))
         return n
+
+    # -- continuous batching: dispatch / settle -----------------------------
+
+    def dispatch(self, reqs: List[RecRequest], *,
+                 downgraded: bool = False) -> InflightBatch:
+        """Assemble and dispatch one micro-batch WITHOUT settling it.
+
+        The device-array result stays a future (no host conversion), so
+        the caller can assemble the NEXT micro-batch while this one
+        computes — continuous batching with in-flight refill, no wave
+        barrier (``repro.serving.scheduler.SlaScheduler`` is the loop).
+        ``downgraded=True`` serves from the int8 downgrade source
+        (``enable_downgrade`` first) through the same jit — a different
+        call-time pytree, its own warm compile-cache entry, no recompile.
+        """
+        assert reqs, "dispatch needs a non-empty micro-batch"
+        assert self._staged is None, \
+            ("device_stages (live Fig-5) syncs between stages — that "
+             "defeats in-flight refill; characterize through step()")
+        if downgraded:
+            assert self._down_source is not None, \
+                "call enable_downgrade() before dispatching a downgrade"
+        tel = self.telemetry
+        if self.auto_tune_after is not None and not self._retuned \
+                and self._batches_seen >= self.auto_tune_after:
+            self._retuned = True
+            self.retune_buckets()
+        now = time.time()
+        now_m = time.monotonic()
+        self._batches_seen += 1
+        self._batch_ring.append(len(reqs))
+        bucket = _bucket(len(reqs), self.buckets)
+        kind = "downgrade" if downgraded else "primary"
+        if tel.enabled and (kind, bucket) not in self._warm:
+            self._c_cold.inc()
+        self._warm.add((kind, bucket))
+        for r in reqs:
+            r.started_at = now
+            r.downgraded = downgraded
+            if tel.enabled:
+                self._qwait_hist.record((now_m - r.submitted_mono) * 1e3)
+        with tel.span("dispatch", {"batch_size": len(reqs),
+                                   "bucket": bucket, "path": kind}):
+            with tel.span("bucket_pad"):
+                batch, n_valid = self._assemble(reqs, bucket)
+            if downgraded:
+                probs = self._serve(self.params, batch, self._down_source)
+            else:
+                probs = self._run_serve(batch)
+                if tel.enabled and self.layout != "fixed":
+                    self._dispatch_hit_probe(batch, n_valid)
+        return InflightBatch(reqs=reqs, probs=probs, bucket=bucket,
+                             downgraded=downgraded, dispatched_mono=now_m)
+
+    def settle(self, ib: InflightBatch) -> int:
+        """Block on an in-flight batch's device result and respond.
+
+        The ``np.asarray`` here is the ONLY host sync of the
+        dispatch/settle pair — by settle time the futures of a deep
+        enough pipeline completed long ago, so it is a read, not a
+        stall. Records end-to-end latency (monotonic) and the
+        dispatch-to-settle service time per path.
+        """
+        tel = self.telemetry
+        with tel.span("settle", {"batch_size": len(ib.reqs)}):
+            probs = np.asarray(ib.probs)
+            done = time.time()
+            done_m = time.monotonic()
+            for i, r in enumerate(ib.reqs):
+                r.prob = float(probs[i])
+                r.finished_at = done
+                if tel.enabled:
+                    self._lat_hist.record((done_m - r.submitted_mono)
+                                          * 1e3)
+        self.served += len(ib.reqs)
+        if tel.enabled:
+            self._c_served.inc(len(ib.reqs))
+            self._c_batches.inc()
+            self._batch_hist.record(len(ib.reqs))
+            tel.registry.histogram(
+                "rec_service_ms", "dispatch-to-settle service time",
+                labels={"path": "downgrade" if ib.downgraded
+                        else "primary"}
+            ).record((done_m - ib.dispatched_mono) * 1e3)
+        return len(ib.reqs)
 
     # -- reporting ----------------------------------------------------------
 

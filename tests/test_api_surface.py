@@ -27,6 +27,7 @@ MODULES = (
     "repro.core.dlrm",
     "repro.serving",
     "repro.serving.rec_engine",
+    "repro.serving.scheduler",
     "repro.training",
     "repro.training.online",
     "repro.training.sparse_optim",
