@@ -9,6 +9,15 @@ work. ``reshard`` is just restore-with-different-shardings.
 Writes go to ``<dir>/tmp.<step>`` and are atomically renamed to
 ``<dir>/step_<step>`` only when complete, so a killed writer never corrupts
 the latest checkpoint (crash-consistent restart).
+
+Serving-source artifacts ride the same machinery: ``save_source`` persists
+a ``VersionedSource`` blob (the self-describing broadcast artifact — hot
+caches, quantized arenas, table groups, tiered sources) under
+``<dir>/src_<step>`` with the same tmp-then-rename crash consistency and
+keep-N GC, and ``restore_source`` rebuilds the full ``EmbeddingSource``
+pytree on any host — ephemeral host state (e.g. a tiered source's live
+``HostStore``) is dropped by the serializer and comes back ``None``; the
+restored source still serves exactly its persisted snapshot.
 """
 from __future__ import annotations
 
@@ -111,6 +120,64 @@ class CheckpointManager:
         steps = sorted(self.steps())
         for s in steps[:-self.keep_n] if self.keep_n else []:
             shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # ------------------------------------------------------- source artifacts
+    def save_source(self, step: int, versioned,
+                    meta: Optional[Dict] = None) -> Path:
+        """Persist a ``VersionedSource`` serving artifact at ``step``.
+
+        The blob is the same self-describing bytes ``publish_source``
+        broadcasts, so a restart can re-adopt the last published serving
+        source without replaying the trainer. Atomic tmp-then-rename like
+        ``save``; GC'd under the same keep-N policy (independently of
+        param checkpoints — ``src_*`` and ``step_*`` are separate
+        namespaces, so a step can have either or both)."""
+        from repro.core.embedding_source import VersionedSource
+        assert isinstance(versioned, VersionedSource), versioned
+        blob = versioned.serialize()
+        tmp = self.dir / f"tmp.src.{step}"
+        final = self.dir / f"src_{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        (tmp / "source.vsrc").write_bytes(blob)
+        manifest = {"step": int(step),
+                    "version": int(versioned.version),
+                    "bytes": len(blob),
+                    "meta": meta or {}}
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)                  # atomic publish
+        self._gc_sources()
+        return final
+
+    def source_steps(self) -> List[int]:
+        return sorted(int(p.name.split("_")[1])
+                      for p in self.dir.glob("src_*"))
+
+    def latest_source_step(self) -> Optional[int]:
+        s = self.source_steps()
+        return s[-1] if s else None
+
+    def restore_source(self, step: Optional[int] = None):
+        """Load the ``VersionedSource`` artifact at ``step`` (default:
+        latest). Returns ``(VersionedSource, manifest)`` — push it into a
+        replica with ``versioned.apply(engine)`` or serve
+        ``versioned.source`` directly."""
+        from repro.core.embedding_source import VersionedSource
+        step = step if step is not None else self.latest_source_step()
+        if step is None:
+            raise FileNotFoundError(f"no source artifacts in {self.dir}")
+        d = self.dir / f"src_{step}"
+        blob = (d / "source.vsrc").read_bytes()
+        manifest = json.loads((d / "manifest.json").read_text())
+        return VersionedSource.deserialize(blob), manifest
+
+    def _gc_sources(self):
+        steps = self.source_steps()
+        for s in steps[:-self.keep_n] if self.keep_n else []:
+            shutil.rmtree(self.dir / f"src_{s}", ignore_errors=True)
 
     # --------------------------------------------------------------- restore
     def steps(self) -> List[int]:

@@ -72,10 +72,11 @@ from repro.obs.tracing import stage as obs_stage
 __all__ = [
     "CachedSource", "EmbeddingSource", "FpArena", "QuantizedArena",
     "ShardedArena", "SourceSpec", "TableGroupSource", "TablePlan",
-    "VersionedSource", "describe_source", "group_hit_counts",
-    "group_trace_counts", "hot_cache_of", "lookup_bags",
-    "lookup_bags_per_table", "lookup_fixed", "rebind_arena",
-    "register_source", "replace_member", "resolve_source",
+    "VersionedSource", "describe_source", "fmt_bytes",
+    "group_hit_counts", "group_trace_counts", "hot_cache_of",
+    "lookup_bags", "lookup_bags_per_table", "lookup_fixed",
+    "rebind_arena", "register_meta_type", "register_source",
+    "replace_member", "resolve_source", "source_bytes",
     "with_hot_cache",
 ]
 
@@ -697,14 +698,41 @@ def rebind_arena(source: EmbeddingSource,
     if isinstance(source, CachedSource):
         return CachedSource(source.hot, rebind_arena(source.cold, arena),
                             coherent=source.coherent)
+    if hasattr(source, "_rebind_arena"):
+        # extension hook (repro.storage.TieredSource refreshes its fp hot
+        # tier; frozen quantized tiers stay put like QuantizedArena does)
+        return source._rebind_arena(arena)
     return source
 
 
+def fmt_bytes(n: int) -> str:
+    """Human byte label for describe/stats lines: 512 B, 4.0 KB, 5.1 MB."""
+    n = float(n)
+    for unit in ("B", "KB", "MB", "GB"):
+        if n < 1024 or unit == "GB":
+            return f"{n:.1f} {unit}" if unit != "B" else f"{int(n)} B"
+        n /= 1024
+    return f"{n:.1f} GB"
+
+
+def source_bytes(source) -> int:
+    """Total device bytes of a source's array leaves (slot maps, scales
+    and all) — the denominator of every capacity-multiplier claim.
+    Sources backed by off-device state (host tiers) count only their
+    device-resident arrays; see their own accounting for host bytes."""
+    if hasattr(source, "device_bytes"):
+        return int(source.device_bytes())
+    leaves = jax.tree_util.tree_leaves(source)
+    return int(sum(getattr(x, "nbytes", 0) for x in leaves))
+
+
 def describe_source(source, *, multiline: bool = False) -> str:
-    """Human/stats label: 'fp', 'int8', 'sharded(4,fp)', 'cached(fp)',
-    'group[...]'… With ``multiline=True`` every nested source renders
-    one-per-line (indented tree; groups get one line per table with that
-    member's vocab/dim) instead of one unreadable nested line."""
+    """Human/stats label: 'fp', 'int8', 'int4', 'sharded(4,fp)',
+    'cached(fp)', 'tiered(host)', 'group[...]'… With ``multiline=True``
+    every nested source renders one-per-line (indented tree; groups get
+    one line per table with that member's vocab/dim, and every member
+    line carries its dtype/tier and device byte size — the REPL view of
+    a capacity claim) instead of one unreadable nested line."""
     if multiline:
         return "\n".join(_describe_lines(source, 0))
     if isinstance(source, FpArena):
@@ -718,6 +746,10 @@ def describe_source(source, *, multiline: bool = False) -> str:
     if isinstance(source, TableGroupSource):
         inner = ",".join(describe_source(m) for m in source.members)
         return f"group[{inner}]"
+    if hasattr(source, "_describe"):
+        # the extension hook sources outside this module implement
+        # (repro.storage: 'int4', 'host', 'tiered(...)')
+        return source._describe()
     return type(source).__name__
 
 
@@ -725,25 +757,34 @@ def _describe_lines(source, depth: int) -> list:
     pad = "  " * depth
     if isinstance(source, FpArena):
         r, d = source.arena.shape
-        return [f"{pad}fp arena ({r}x{d}, {source.arena.dtype})"]
+        return [f"{pad}fp arena ({r}x{d}, {source.arena.dtype}, "
+                f"{fmt_bytes(source.arena.nbytes)})"]
     if isinstance(source, QuantizedArena):
         r, d = source.q.shape
-        return [f"{pad}int8 arena ({r}x{d} + f32 row scales)"]
+        nb = source.q.nbytes + source.scales.nbytes
+        return [f"{pad}int8 arena ({r}x{d} + f32 row scales, "
+                f"{fmt_bytes(nb)})"]
     if isinstance(source, ShardedArena):
         return [f"{pad}sharded over {source.n_shards} x "
                 f"'{source.axis}'"] \
             + _describe_lines(source.inner, depth + 1)
     if isinstance(source, CachedSource):
-        return [f"{pad}cached (k={source.k} hot rows)"] \
+        nb = source.hot.hot_rows.nbytes + source.hot.slot_of.nbytes \
+            + source.hot.hot_ids.nbytes
+        return [f"{pad}cached (k={source.k} hot rows, "
+                f"{source.hot.hot_rows.dtype}, {fmt_bytes(nb)})"] \
             + _describe_lines(source.cold, depth + 1)
     if isinstance(source, TableGroupSource):
         lines = [f"{pad}group ({len(source.members)} tables, "
-                 f"dmax={source.dmax})"]
+                 f"dmax={source.dmax}, "
+                 f"{fmt_bytes(source_bytes(source))} on device)"]
         for t, (m, sp) in enumerate(zip(source.members, source.specs)):
             lines.append(f"{pad}  table[{t}] vocab={sp.rows_per_table} "
                          f"dim={sp.dim}")
             lines += _describe_lines(m, depth + 2)
         return lines
+    if hasattr(source, "_describe_lines"):
+        return source._describe_lines(depth)
     return [f"{pad}{type(source).__name__}"]
 
 
@@ -817,13 +858,23 @@ def group_trace_counts(specs: Sequence[se.ArenaSpec], indices,
 class TablePlan:
     """Per-table slice of a group plan: the table's shape plus its OWN
     composition knobs — hot-cache only the skewed tables (``cache_k``),
-    int8-quantize only the huge ones (``quantize``). A tuple of these in
-    ``SourceSpec.tables`` is the declarative form of a
-    ``TableGroupSource``."""
+    int8-quantize only the huge ones (``quantize``), frequency-tier the
+    bigger-than-memory ones (``tiers``, a ``repro.storage.TierPolicy``).
+    A tuple of these in ``SourceSpec.tables`` is the declarative form of
+    a ``TableGroupSource``."""
     rows: int                            # vocab (real rows, null excluded)
     dim: int
     cache_k: int = 0                     # >0: pin this table's top-K hot
     quantize: bool = False               # int8 this table's (cold) arena
+    tiers: Optional[object] = None       # storage.TierPolicy: hot/warm/cold
+
+    def __post_init__(self):
+        if self.tiers is not None and (self.cache_k or self.quantize):
+            raise ValueError(
+                "a tiered table IS its own caching/quantization story — "
+                "TierPolicy.hot replaces cache_k and the warm/cold tiers "
+                "replace quantize; drop cache_k/quantize on this "
+                "TablePlan")
 
     @property
     def arena_spec(self) -> se.ArenaSpec:
@@ -850,6 +901,7 @@ class SourceSpec:
     axis: str = "model"
     require_mesh: bool = False           # 'sharded': no silent fallback
     tables: Optional[Tuple[TablePlan, ...]] = None   # heterogeneous group
+    tiers: Optional[object] = None       # storage.TierPolicy (single table)
 
     PATH_NAMES = ("fixed", "ragged", "cached", "sharded")
 
@@ -861,17 +913,29 @@ class SourceSpec:
                 f">1 {self.axis!r} axis — a misconfigured replica must "
                 "not silently fall back to the replicated arena")
         if self.layout == "fixed" and (self.cache_k or self.quantize_cold
-                                       or self.tables is not None):
+                                       or self.tables is not None
+                                       or self.tiers is not None):
             raise ValueError(
                 "layout='fixed' serves through the legacy fixed-L step "
-                "and cannot consume a cached/quantized/grouped source — "
-                "drop cache_k/quantize_cold/tables or use the ragged "
-                "layout")
-        if self.tables is not None and (self.cache_k or self.quantize_cold):
+                "and cannot consume a cached/quantized/grouped/tiered "
+                "source — drop cache_k/quantize_cold/tables/tiers or "
+                "use the ragged layout")
+        if self.tables is not None and (self.cache_k or self.quantize_cold
+                                        or self.tiers is not None):
             raise ValueError(
-                "a table-group plan carries cache_k/quantize per "
-                "TablePlan — the top-level cache_k/quantize_cold knobs "
-                "would silently apply to no table")
+                "a table-group plan carries cache_k/quantize/tiers per "
+                "TablePlan — the top-level knobs would silently apply "
+                "to no table")
+        if self.tiers is not None and (self.cache_k or self.quantize_cold):
+            raise ValueError(
+                "a tiered plan IS its own caching/quantization story — "
+                "drop cache_k/quantize_cold")
+        if self.tiers is not None \
+                and se.mesh_shards(self.mesh, self.axis) > 1:
+            raise ValueError(
+                "TieredSource does not row-shard (the staging/slot "
+                "protocol is replicated-only for now) — drop the mesh "
+                "or the tiers")
 
     @staticmethod
     def from_path(path: Union[str, "SourceSpec"], *, cache_k: int = 0,
@@ -910,6 +974,8 @@ class SourceSpec:
         """The nearest legacy shorthand (for stats/back-compat labels)."""
         if self.tables is not None:
             return "grouped"
+        if self.tiers is not None:
+            return "tiered"
         if self.layout == "fixed":
             return "fixed"
         if self.cached:
@@ -926,6 +992,8 @@ class SourceSpec:
         histograms instead."""
         if self.tables is not None:
             return self._build_group(arena, counts)
+        if self.tiers is not None:
+            return self.tiers.build_source(arena, spec, counts)
         cold: EmbeddingSource = (QuantizedArena.from_arena(arena)
                                  if self.quantize_cold else FpArena(arena))
         if se.mesh_shards(self.mesh, self.axis) > 1:
@@ -948,6 +1016,14 @@ class SourceSpec:
         members, specs = [], []
         for tp, arena, c in zip(self.tables, arenas, counts):
             sp = tp.arena_spec
+            if tp.tiers is not None:
+                if sharded:
+                    raise ValueError(
+                        "TieredSource does not row-shard — drop the "
+                        "mesh or this table's tiers")
+                members.append(tp.tiers.build_source(arena, sp, c))
+                specs.append(sp)
+                continue
             member: EmbeddingSource = (QuantizedArena.from_arena(arena)
                                        if tp.quantize else FpArena(arena))
             if sharded:
@@ -967,13 +1043,34 @@ class SourceSpec:
 # Versioned broadcast artifact — any source + a monotone version
 # ---------------------------------------------------------------------------
 
+# meta-field dataclass types the artifact codec can round-trip by name;
+# extension modules add theirs via register_meta_type (repro.storage
+# registers TierPolicy on import)
+_META_TYPES = {}
+
+
+def register_meta_type(cls):
+    """Register a (plain, frozen) dataclass so it can appear inside a
+    source's meta fields and still round-trip through the artifact
+    serializer. Fields are encoded recursively, so registered types may
+    nest (TablePlan carries a TierPolicy)."""
+    _META_TYPES[cls.__name__] = cls
+    return cls
+
+
 def _encode_meta(v):
     """JSON-encode a meta-field value (plain scalars pass through;
-    ArenaSpec and nested tuples get self-describing wrappers)."""
+    dataclasses and nested tuples get self-describing wrappers, encoded
+    per-field so nested meta dataclasses survive the round trip)."""
     if isinstance(v, se.ArenaSpec):
         return {"__arena_spec__": dataclasses.asdict(v)}
     if isinstance(v, TablePlan):
-        return {"__table_plan__": dataclasses.asdict(v)}
+        return {"__table_plan__": {f.name: _encode_meta(getattr(v, f.name))
+                                   for f in dataclasses.fields(v)}}
+    if type(v).__name__ in _META_TYPES:
+        return {"__meta_dc__": type(v).__name__,
+                "fields": {f.name: _encode_meta(getattr(v, f.name))
+                           for f in dataclasses.fields(v)}}
     if isinstance(v, (tuple, list)):
         return {"__seq__": [_encode_meta(x) for x in v]}
     return v
@@ -983,7 +1080,14 @@ def _decode_meta(v):
     if isinstance(v, dict) and "__arena_spec__" in v:
         return se.ArenaSpec(**v["__arena_spec__"])
     if isinstance(v, dict) and "__table_plan__" in v:
-        return TablePlan(**v["__table_plan__"])
+        return TablePlan(**{k: _decode_meta(x)
+                            for k, x in v["__table_plan__"].items()})
+    if isinstance(v, dict) and "__meta_dc__" in v:
+        name = v["__meta_dc__"]
+        if name not in _META_TYPES:
+            import repro.storage  # noqa: F401  (registers its types)
+        return _META_TYPES[name](**{k: _decode_meta(x)
+                                    for k, x in v["fields"].items()})
     if isinstance(v, dict) and "__seq__" in v:
         return tuple(_decode_meta(x) for x in v["__seq__"])
     return v
@@ -1014,6 +1118,11 @@ def _encode(obj, arrays: dict, counter: list):
             # meshes are host topology, not state: the consumer rebinds
             # its own at deserialize time
             node["fields"][f] = {"kind": "mesh"}
+        elif f in getattr(obj, "__ephemeral_meta__", ()):
+            # host-process state (a HostStore's residency bookkeeping):
+            # like a mesh, the consumer rebinds its own — the decoded
+            # source serves exactly the staged snapshot meanwhile
+            node["fields"][f] = {"kind": "ephemeral"}
         else:
             node["fields"][f] = {"kind": "meta",
                                  "value": _encode_meta(v)}
@@ -1026,12 +1135,19 @@ def _decode(node, z, mesh):
     if node["kind"] == "seq":
         return tuple(_decode(x, z, mesh) for x in node["items"])
     assert node["kind"] == "node", node
+    if node["type"] not in _SOURCE_REGISTRY:
+        # storage sources register on import; an artifact written by a
+        # producer that used them must not require the consumer to have
+        # imported the package first
+        import repro.storage  # noqa: F401
     cls, data_fields, meta_fields = _SOURCE_REGISTRY[node["type"]]
     kw = {}
     for f in data_fields + meta_fields:
         sub = node["fields"][f]
         if sub["kind"] == "mesh":
             kw[f] = mesh
+        elif sub["kind"] == "ephemeral":
+            kw[f] = None
         elif sub["kind"] == "meta":
             kw[f] = _decode_meta(sub["value"])
         else:

@@ -336,6 +336,74 @@ def fused_cached_segment_sum(hot_rows: jax.Array, arena: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Int4 cold tier (sparse engine, nibble-packed arena)
+# ---------------------------------------------------------------------------
+
+def int4_pack(a32: jax.Array):
+    """Row-wise symmetric int4 quantize + nibble-pack.
+
+    Per-row scale = amax/7 (the int8 rule at 4 bits), all-zero rows get a
+    zero scale — the null-row masking protocol carries straight through.
+    Returns (packed uint8 (R, ceil(D/2)), scales f32 (R, 1)).
+    """
+    return _ref.int4_pack(a32)
+
+
+def int4_unpack(packed: jax.Array, scales: jax.Array, dim: int) -> jax.Array:
+    """Dequantize an ``int4_pack`` arena back to f32 (R, dim)."""
+    return _ref.int4_unpack(packed, scales, dim)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _fused_int4(packed: jax.Array, scales: jax.Array, dense_ids: jax.Array,
+                dim: int) -> jax.Array:
+    impl = get_impl()
+    if impl == "xla":
+        return _ref.fused_int4_segment_sum(packed, scales, dense_ids, dim)
+    return _fd.fused_int4_segment_sum(packed, scales, dense_ids, dim=dim,
+                                      interpret=(impl == "interpret"))
+
+
+def _fused_int4_fwd(packed, scales, dense_ids, dim):
+    return _fused_int4(packed, scales, dense_ids, dim), \
+        (packed, dense_ids)
+
+
+def _fused_int4_bwd(dim, res, g):
+    packed, dense_ids = res
+    # out[b] = sum_j codes[ids[b,j]] * scales[ids[b,j]], so the only
+    # trainable leaf is scales: d_scales[r] = sum over positions p with
+    # id_p == r of <g[bag(p)], codes[r]>. The packed codes are integers
+    # (None cotangent, like every integer arg in this module), and a null
+    # row's codes are all zero so its scale gradient is automatically
+    # zero — no sentinel pinning needed.
+    b, max_l = dense_ids.shape
+    g32 = g.astype(jnp.float32)                              # (B, dim)
+    codes = _ref._int4_codes(packed[dense_ids], dim)         # (B, L, dim)
+    per_pos = jnp.einsum("bld,bd->bl", codes.astype(jnp.float32), g32)
+    d_scales = jnp.zeros((packed.shape[0], 1), jnp.float32)
+    d_scales = d_scales.at[dense_ids.reshape(-1), 0].add(per_pos.reshape(-1))
+    return None, d_scales, None
+
+
+_fused_int4.defvjp(_fused_int4_fwd, _fused_int4_bwd)
+
+
+def fused_int4_segment_sum(packed: jax.Array, scales: jax.Array,
+                           dense_ids: jax.Array, *, dim: int) -> jax.Array:
+    """Fused int4 dequantize-in-the-gather reduce over a dense id matrix.
+
+    packed (V, ceil(dim/2)) uint8 + scales (V, 1) f32 from ``int4_pack``;
+    dense_ids (B, max_l) with fill slots pointing at a zero-scale row.
+    Returns f32 (B, dim) at an eighth of the fp32 gather bytes.
+    Differentiable in ``scales`` only (the codes are frozen integers) —
+    enough for the tiered property suite; cold-tier rows are trained via
+    the fp shadow in the online trainer, not through this op.
+    """
+    return _fused_int4(packed, scales, dense_ids, int(dim))
+
+
+# ---------------------------------------------------------------------------
 # Feature interaction (dense engine, batched GEMM)
 # ---------------------------------------------------------------------------
 

@@ -75,6 +75,58 @@ def fused_cached_segment_sum(hot_rows: jax.Array, arena: jax.Array,
     return rows.sum(axis=1)
 
 
+def int4_pack(a32: jax.Array):
+    """Row-wise symmetric int4 quantize + nibble-pack (the cold tier).
+
+    Mirrors the int8 rule (``se._rowwise_quantize``) at 4 bits: per-row
+    scale = amax/7, values rounded into [-7, 7], an all-zero row gets a
+    zero scale (the null-row masking protocol at int4). Codes are stored
+    biased (+8, so 8 encodes zero) with two values per byte: column 2j in
+    the low nibble, 2j+1 in the high nibble; odd dims pad one zero-code
+    column. Returns (packed uint8 (R, ceil(D/2)), scales f32 (R, 1)).
+    """
+    a32 = a32.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(a32), axis=-1, keepdims=True)
+    scales = amax / 7.0
+    q = jnp.where(scales > 0,
+                  jnp.clip(jnp.round(a32 / jnp.maximum(scales, 1e-30)),
+                           -7, 7), 0).astype(jnp.int32)
+    d = q.shape[-1]
+    if d % 2:
+        q = jnp.pad(q, ((0, 0), (0, 1)))
+    code = (q + 8).astype(jnp.uint8)             # 1..15, 8 == zero
+    packed = code[:, 0::2] | (code[:, 1::2] << 4)
+    return packed, scales
+
+
+def int4_unpack(packed: jax.Array, scales: jax.Array,
+                dim: int) -> jax.Array:
+    """Dequantize an ``int4_pack`` arena back to f32 (R, dim)."""
+    return _int4_codes(packed, dim).astype(jnp.float32) * scales
+
+
+def _int4_codes(packed: jax.Array, dim: int) -> jax.Array:
+    """Unbiased integer codes in [-7, 7]: (..., P) uint8 -> (..., dim)."""
+    p = packed.astype(jnp.int32)
+    lo = (p & 0xF) - 8
+    hi = (p >> 4) - 8
+    return jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1],
+                                                2 * p.shape[-1])[..., :dim]
+
+
+def fused_int4_segment_sum(packed: jax.Array, scales: jax.Array,
+                           dense_ids: jax.Array, dim: int) -> jax.Array:
+    """Fused int4 dequantize-in-the-gather segmented reduce.
+
+    packed (R, ceil(dim/2)) uint8 + scales (R, 1) f32 from ``int4_pack``;
+    dense_ids (B, max_l) with short/padded slots pointing at a row whose
+    scale is zero. Returns f32 (B, dim):
+    ``out[b] = sum_j unpack(packed)[ids[b, j]]``.
+    """
+    codes = _int4_codes(packed[dense_ids], dim).astype(jnp.float32)
+    return (codes * scales[dense_ids]).sum(axis=1)
+
+
 def interaction(x: jax.Array) -> jax.Array:
     """Pairwise dot products: x (B, F, D) -> (B, F, F) = X X^T per sample."""
     out = jnp.einsum("bfd,bgd->bfg", x, x,

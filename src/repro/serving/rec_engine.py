@@ -95,6 +95,10 @@ class RecRequest:
     prob: Optional[float] = None        # predicted CTR, set when served
     shed: bool = False                  # dropped at admission (SLA)
     downgraded: bool = False            # served on the int8 downgrade path
+    # (per_id, table) id streams for host-cold staging, extracted once at
+    # admission (engine-internal; None until an engine with a host cold
+    # tier touches the request)
+    cold_streams: Optional[tuple] = None
 
 
 class RecBatcher:
@@ -338,12 +342,129 @@ class RecEngine:
             self._hit_rate = jax.jit(
                 lambda c, i, o: se.cache_hit_rate(c, self.spec, i, o))
         self._reset_hit_counters()
+        self._bind_host_stores()
         self._g_version.set(self.source_version)
 
     @property
     def grouped(self) -> bool:
         """Serving a heterogeneous TableGroupSource?"""
         return isinstance(self.source, es.TableGroupSource)
+
+    # -- host cold tier: staging + prefetch ---------------------------------
+
+    def _bind_host_stores(self) -> None:
+        """Discover the host-resident cold stores (if any) behind the
+        served source and adopt them into the engine's telemetry. Grouped
+        sources keep the owning table alongside each store: staging wants
+        per-table ids for members, flattened arena ids otherwise."""
+        from repro import storage
+        self._host_stores: List[tuple] = []
+        if self.source is None or self.layout == "fixed":
+            return
+        if self.grouped:
+            for t, m in enumerate(self.source.members):
+                for st in storage.host_stores_of(m):
+                    self._host_stores.append((st, t))
+        else:
+            for st in storage.host_stores_of(self.source):
+                self._host_stores.append((st, None))
+        for st, _ in self._host_stores:
+            st.bind_telemetry(self.telemetry)
+        self._stream_cache = None
+
+    def _req_streams(self, r: RecRequest) -> tuple:
+        """One request's (per_id, table) id streams, extracted once —
+        ``submit`` computes this at admission so the dispatch hot path
+        only concatenates (requests staged ahead through ``prefetch``
+        fill theirs on first touch)."""
+        s = r.cold_streams
+        if s is None:
+            t = self.cfg.n_tables
+            lens = np.fromiter(map(len, r.sparse_ids), np.int64, count=t)
+            per_id = (np.concatenate(r.sparse_ids).astype(
+                np.int64, copy=False) if int(lens.sum())
+                else np.zeros(0, np.int64))
+            tbl = np.repeat(np.arange(t, dtype=np.int64), lens)
+            s = r.cold_streams = (per_id, tbl)
+        return s
+
+    def _host_id_streams(self, reqs: List[RecRequest]):
+        """The id streams the host stores need, host-side numpy only:
+        per-table ids for grouped members, flattened arena ids (per-table
+        id + table base) for a homogeneous source. Never reads a device
+        array — staging must not sync the serve path. Per-request
+        extraction happened at admission; this only concatenates."""
+        empty = np.zeros(0, np.int64)
+        if not reqs:
+            return empty, {}
+        parts = [self._req_streams(r) for r in reqs]
+        per_id = np.concatenate([p[0] for p in parts])
+        tbl = np.concatenate([p[1] for p in parts])
+        flat = (per_id + tbl * self.spec.rows_per_table
+                if any(tt is None for _, tt in self._host_stores)
+                else empty)
+        per_table = {j: per_id[tbl == j]
+                     for j in {tt for _, tt in self._host_stores
+                               if tt is not None}}
+        return flat, per_table
+
+    @staticmethod
+    def _ids_for(streams, t, _empty=np.zeros(0, np.int64)):
+        flat, per_table = streams
+        return flat if t is None else per_table.get(t, _empty)
+
+    def _stage_batch(self, reqs: List[RecRequest], *,
+                     ahead: bool = False) -> None:
+        """Residency guarantee (``ahead=False``, counted as hits/misses)
+        or prefetch (``ahead=True``, uncounted) for one micro-batch's
+        cold rows, then refresh the HostTier leaves in the served source.
+        Same treedef and leaf shapes — no version bump, no recompile; the
+        transfers are async ``device_put``s, so no host sync either.
+
+        The batch path folds the admission queue's NEXT micro-batch into
+        the same flush (one transfer + scatter per step, not two) and
+        remembers its per-store cold sets — when that batch arrives, the
+        extraction, the uniquify, and the transfer have all already
+        happened, so it pays only the residency check. That is the
+        prefetcher: misses become hits one dispatch ahead of their
+        batch."""
+        if not self._host_stores or not reqs:
+            return
+        from repro import storage
+        if ahead:
+            streams = self._host_id_streams(reqs)
+            for st, t in self._host_stores:
+                st.prefetch_arena(self._ids_for(streams, t))
+            self.source = storage.refresh_host_tiers(self.source)
+            return
+        cache, self._stream_cache = self._stream_cache, None
+        if cache is not None and cache[0] == [r.rid for r in reqs]:
+            cur_cold = cache[1]
+        else:
+            streams = self._host_id_streams(reqs)
+            cur_cold = [st.cold_ids_of(self._ids_for(streams, t))
+                        for st, t in self._host_stores]
+        nxt = list(self.batcher._queue[:self.max_batch])
+        nxt_cold = None
+        if nxt:
+            nstreams = self._host_id_streams(nxt)
+            nxt_cold = [st.cold_ids_of(self._ids_for(nstreams, t))
+                        for st, t in self._host_stores]
+        for i, (st, t) in enumerate(self._host_stores):
+            st.stage(cur_cold[i],
+                     ahead=None if nxt_cold is None else nxt_cold[i])
+        if nxt_cold is not None:
+            self._stream_cache = ([r.rid for r in nxt], nxt_cold)
+        self.source = storage.refresh_host_tiers(self.source)
+
+    def prefetch(self, reqs: List[RecRequest]) -> None:
+        """Stage a future micro-batch's cold rows ahead of its dispatch
+        (no hit/miss accounting — prefetched rows count as *hits* when
+        their batch arrives; rows pinned by the in-flight batch are never
+        evicted). The engine already prefetches the admission queue's
+        next micro-batch inside every staged dispatch; this is for
+        lookahead the queue can't see yet."""
+        self._stage_batch(reqs, ahead=True)
 
     def _reset_hit_counters(self) -> None:
         if self.grouped:
@@ -465,6 +586,10 @@ class RecEngine:
         new_version = (version if version is not None
                        else self.source_version + 1)
         self.source = source
+        # a pushed source may carry its own HostStore instances (same
+        # structural signature, hence the treedef assert above passed) —
+        # re-discover so staging/prefetch target the live stores
+        self._bind_host_stores()
         if new_version > self.source_version:
             # per-path-correct accounting: the old cache's hits must not
             # dilute the post-swap hit rate — snapshot them into the
@@ -559,6 +684,11 @@ class RecEngine:
         dummy = [RecRequest(
             rid=-1, dense=np.zeros(self.cfg.dense_features, np.float32),
             sparse_ids=[np.zeros(l, np.int32)] * t)]
+        for st, _ in self._host_stores:
+            # compile the staging scatter at every flush chunk size off
+            # the SLA clock, so the first live miss (and the first
+            # miss burst) pays a dispatch, not a jit
+            st.warm_compile()
         for bucket in self.buckets:
             batch, _ = self._assemble(dummy, bucket)
             np.asarray(self._run_serve(batch))
@@ -606,6 +736,8 @@ class RecEngine:
         assert len(req.sparse_ids) == self.cfg.n_tables, \
             (len(req.sparse_ids), self.cfg.n_tables)
         with self.telemetry.span("enqueue", {"rid": req.rid}):
+            if self._host_stores:
+                self._req_streams(req)   # admission-time extraction
             self.batcher.submit(req)
         if self.telemetry.enabled:
             # live on enqueue, not only after a serve step — a stalled
@@ -744,6 +876,7 @@ class RecEngine:
         with tel.span("serve_step", {"batch_size": len(reqs),
                                      "bucket": bucket}):
             tel.tracer.record("batch", t_take0, t_take1)
+            self._stage_batch(reqs)      # host-cold residency guarantee
             with tel.span("bucket_pad"):
                 batch, n_valid = self._assemble(reqs, bucket)
             probs = self._forward(batch, n_valid)
@@ -820,6 +953,8 @@ class RecEngine:
                 self._qwait_hist.record((now_m - r.submitted_mono) * 1e3)
         with tel.span("dispatch", {"batch_size": len(reqs),
                                    "bucket": bucket, "path": kind}):
+            if not downgraded:
+                self._stage_batch(reqs)  # host-cold residency guarantee
             with tel.span("bucket_pad"):
                 batch, n_valid = self._assemble(reqs, bucket)
             if downgraded:
@@ -915,6 +1050,17 @@ class RecEngine:
                                      if self._lookups else None)
             out["cache_version"] = self.source_version
         out["buckets"] = self.buckets
+        if self._host_stores:
+            hs = [st.stats() for st, _ in self._host_stores]
+            hits = sum(s["hits"] for s in hs)
+            touches = sum(s["touches"] for s in hs)
+            out["prefetch"] = {
+                "hits": hits,
+                "misses": sum(s["misses"] for s in hs),
+                "touches": touches,
+                "hit_rate": hits / touches if touches else 1.0,
+                "staged_resident": sum(s["resident"] for s in hs),
+                "host_bytes": sum(s["host_bytes"] for s in hs)}
         # windowed views (post-swap regressions must not average away):
         # since_swap restarts at every version bump, rolling covers the
         # last ring's worth of requests exactly

@@ -1,0 +1,31 @@
+"""repro.storage — tiered, bigger-than-device-memory embedding storage.
+
+The storage substrate under ROADMAP items 4 and 5: embedding tables that
+do not fit device memory become a *declaratively planned* configuration
+instead of a smaller model. Two modules:
+
+* :mod:`repro.storage.tiered` — ``TieredSource``, the frequency-tiered
+  three-way composition (hot fp / warm int8 / cold int4-or-host) behind
+  the ordinary ``lookup_bags``/``lookup_fixed`` entry points, planned per
+  table via ``TablePlan(tiers=TierPolicy(...))`` and kept current by the
+  online trainer's migration pass.
+* :mod:`repro.storage.host_store` — ``HostStore``/``HostTier``, the
+  host-resident cold tier: rows that never enter device memory, staged
+  on demand (and prefetched ahead) through a bounded, fixed-shape
+  staging arena so the jitted serve path never recompiles.
+
+Exactness is inherited from the composition laws: hot rows are bit-exact
+vs the fp arena, warm/cold rows land within their per-row quantization
+bound, host-staged rows are exact fp32 copies, and every tier redirect
+uses the zero-null-slot protocol (no masks anywhere).
+"""
+from repro.storage.host_store import HostStore, HostTier
+from repro.storage.tiered import (Int4Arena, TieredSource, TierPolicy,
+                                  build_tiered, host_stores_of, migrate,
+                                  refresh_host_tiers, tier_bytes)
+
+__all__ = [
+    "HostStore", "HostTier", "Int4Arena", "TierPolicy", "TieredSource",
+    "build_tiered", "host_stores_of", "migrate", "refresh_host_tiers",
+    "tier_bytes",
+]

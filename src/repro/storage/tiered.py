@@ -1,0 +1,461 @@
+"""Frequency-tiered embedding storage: hot fp / warm int8 / cold int4-or-host.
+
+RecNMP's observation is that recommendation index streams are so skewed
+that a small hot set absorbs most touches; MP-Rec's is that the embedding
+*representation* should be a per-table plan-time decision. ``TieredSource``
+is both at once: the online trainer's decayed row-frequency histogram
+partitions a table's rows into
+
+* **hot** — top rows, full-precision, bit-exact vs ``FpArena``;
+* **warm** — next rows, int8 + per-row scale (4x denser);
+* **cold** — the tail, either packed int4 on device (8x denser) or a
+  host-resident block behind a bounded staging arena
+  (``repro.storage.host_store`` — device cost is the staging arena only).
+
+One device-side ``tier_slot`` map (arena row -> a slot in the concatenated
+[hot | warm | cold] slot space) routes every gathered position to exactly
+one tier; the other two tiers read their zero null slot at that position,
+so the three per-tier reductions sum to the exact composition — the same
+mask-free redirect protocol the hot/cold cache split uses, three ways.
+Hot rows therefore agree with the fp arena bit-for-bit, warm/cold within
+their quantization bounds, and grads flow to the hot rows through the
+same fused VJP the fp path trains with.
+
+Declared per table: ``TablePlan(tiers=TierPolicy(...))`` — a heterogeneous
+group tiers only its huge tables while small ones stay plain fp.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import embedding_source as es
+from repro.core import sparse_engine as se
+from repro.kernels import ops
+from repro.storage.host_store import HostStore, HostTier
+
+__all__ = ["Int4Arena", "TierPolicy", "TieredSource", "build_tiered",
+           "host_stores_of", "migrate", "refresh_host_tiers",
+           "tier_bytes"]
+
+
+@es.register_source(("packed", "scales"), ("dim",))
+@dataclass(frozen=True)
+class Int4Arena(es.EmbeddingSource):
+    """Nibble-packed int4 rows + one f32 scale per row (~7.5x capacity).
+
+    The int8 masking protocol carries through: an all-zero (null) row
+    packs to zero codes with a zero scale, so every redirect stays inert.
+    ``dim`` is meta (the packed axis is ceil(dim/2) bytes, so the row
+    width is not recoverable from the array shape alone).
+    """
+    packed: jax.Array                    # (rows, ceil(dim/2)) uint8
+    scales: jax.Array                    # (rows, 1) f32
+    dim: int = 0
+
+    @property
+    def out_dtype(self):
+        return jnp.float32
+
+    @classmethod
+    def from_arena(cls, arena: jax.Array) -> "Int4Arena":
+        packed, scales = ops.int4_pack(arena.astype(jnp.float32))
+        return cls(packed=packed, scales=scales, dim=int(arena.shape[1]))
+
+    def dequantize(self) -> jax.Array:
+        return ops.int4_unpack(self.packed, self.scales, self.dim)
+
+    def reduce_dense(self, spec, dense):
+        return ops.fused_int4_segment_sum(self.packed, self.scales, dense,
+                                          dim=self.dim)
+
+    def reduce_flat(self, spec, flat, offsets, *, max_l):
+        dense = se.ragged_dense_ids(flat, offsets, max_l=max_l,
+                                    fill=spec.null_row)
+        return self.reduce_dense(spec, dense)
+
+    def _describe(self) -> str:
+        return "int4"
+
+    def _describe_lines(self, depth: int) -> list:
+        pad = "  " * depth
+        r = self.packed.shape[0]
+        return [f"{pad}int4 arena ({r}x{self.dim} nibble-packed + f32 "
+                f"row scales, {es.fmt_bytes(self.device_bytes())})"]
+
+    def device_bytes(self) -> int:
+        return int(self.packed.nbytes + self.scales.nbytes)
+
+
+@es.register_meta_type
+@dataclass(frozen=True)
+class TierPolicy:
+    """The declarative tiering knob on a ``TablePlan``.
+
+    ``hot``/``warm`` are row counts (the frequency ranking's top slices);
+    everything else is cold. ``cold='int4'`` keeps the tail on device at
+    4 bits/value; ``cold='host'`` moves it off device entirely behind a
+    ``staging_rows``-slot arena fed ``max_stage_per_batch`` rows per
+    transfer chunk.
+    """
+    hot: int
+    warm: int
+    cold: str = "int4"                   # 'int4' | 'host'
+    staging_rows: int = 256
+    max_stage_per_batch: int = 64
+
+    def __post_init__(self):
+        assert self.hot >= 0 and self.warm >= 0, (self.hot, self.warm)
+        assert self.cold in ("int4", "host"), self.cold
+
+    def partition(self, counts: np.ndarray, null_row: int):
+        """Rank rows by decayed frequency (the ``build_hot_cache``
+        ordering rule: stable argsort, descending) and slice into
+        (hot_ids, warm_ids, cold_ids); the null row joins no tier."""
+        order = np.argsort(np.asarray(counts), kind="stable")[::-1]
+        order = order[order != null_row]
+        h = min(self.hot, order.size)
+        w = min(self.warm, order.size - h)
+        return (order[:h].astype(np.int64),
+                order[h:h + w].astype(np.int64),
+                order[h + w:].astype(np.int64))
+
+    def build_source(self, arena: jax.Array, spec: se.ArenaSpec,
+                     counts: Optional[np.ndarray] = None, *,
+                     store: Optional[HostStore] = None,
+                     telemetry=None) -> "TieredSource":
+        """Materialize the plan for one arena (the ``SourceSpec.build``
+        hook). ``counts`` defaults to uniform; pass ``store`` to re-tier
+        around an existing host store's identity (structure-stable
+        republication requires the same store object in the treedef)."""
+        return build_tiered(arena, spec, self, counts, store=store,
+                            telemetry=telemetry)
+
+
+@es.register_source(("hot_rows", "tier_slot", "hot_ids", "warm", "cold"),
+                    ())
+@dataclass(frozen=True)
+class TieredSource(es.EmbeddingSource):
+    """Three-tier composition behind the one ``reduce_dense`` hook.
+
+    ``tier_slot[row]`` lands in exactly one of three slot ranges —
+    ``[0, H)`` hot, ``[H, H+W)`` warm, ``[H+W, H+W+C]`` cold (the top
+    value is the cold null) — and each tier's reduction redirects
+    out-of-range positions to its own zero null slot, so
+    ``hot + warm + cold`` is the exact per-position composition. The
+    null arena row maps to the cold null slot (every tier reads zero).
+
+    Structure: hot_rows (H+1, D) fp with slot H zero; warm a slot-indexed
+    ``QuantizedArena`` (W+1 rows, zero-scale null); cold an ``Int4Arena``
+    (C+1 compact rows) or a ``HostTier`` (staging arena over C compact
+    host rows). H/W/C are fixed by the plan, so re-tiering under drift
+    republishes the same treedef — the no-recompile swap contract holds
+    across migrations.
+    """
+    hot_rows: jax.Array                  # (H+1, D) fp, slot H zero
+    tier_slot: jax.Array                 # (total_rows,) int32
+    hot_ids: jax.Array                   # (H,) int32 arena rows of slots
+    warm: es.QuantizedArena              # (W+1, D) slot-indexed
+    cold: Union[Int4Arena, HostTier]     # (C+1,) compact-slot-indexed
+
+    @property
+    def out_dtype(self):
+        return jnp.float32
+
+    @property
+    def n_hot(self) -> int:
+        return self.hot_rows.shape[0] - 1
+
+    @property
+    def n_warm(self) -> int:
+        return self.warm.q.shape[0] - 1
+
+    @property
+    def n_cold(self) -> int:
+        if isinstance(self.cold, HostTier):
+            return self.cold.slot_of.shape[0] - 1
+        return self.cold.packed.shape[0] - 1
+
+    def reduce_dense(self, spec, dense):
+        h, w, c = self.n_hot, self.n_warm, self.n_cold
+        ts = jnp.take(self.tier_slot, dense, axis=0)
+        hot_ids = jnp.where(ts < h, ts, h)
+        warm_ids = jnp.where((ts >= h) & (ts < h + w), ts - h, w)
+        cold_ids = jnp.where(ts >= h + w,
+                             jnp.minimum(ts - (h + w), c), c)
+        out = ops.fused_segment_sum(self.hot_rows, hot_ids, null_row=h)
+        out = out + self.warm.reduce_dense(spec, warm_ids)
+        return out + self.cold.reduce_dense(spec, cold_ids)
+
+    def reduce_flat(self, spec, flat, offsets, *, max_l):
+        dense = se.ragged_dense_ids(flat, offsets, max_l=max_l,
+                                    fill=spec.null_row)
+        return self.reduce_dense(spec, dense)
+
+    def _rebind_arena(self, arena) -> "TieredSource":
+        """Refresh the hot tier's fp copies from a swapped live arena
+        (the ``rebind_arena`` duck hook). Warm/cold are frozen
+        *representations* of an arena version — re-tier explicitly via
+        the trainer's migration path."""
+        d = self.hot_rows.shape[1]
+        fresh = jnp.concatenate(
+            [jnp.take(arena, self.hot_ids, axis=0).astype(jnp.float32),
+             jnp.zeros((1, d), jnp.float32)], axis=0)
+        return replace(self, hot_rows=fresh)
+
+    def _describe(self) -> str:
+        return f"tiered({self.cold._describe()})"
+
+    def _describe_lines(self, depth: int) -> list:
+        pad = "  " * depth
+        b = tier_bytes(self)
+        lines = [f"{pad}tiered (hot={self.n_hot} warm={self.n_warm} "
+                 f"cold={self.n_cold}; "
+                 f"{es.fmt_bytes(b['device_total'])} on device)"]
+        lines.append(f"{pad}  hot  fp {self.hot_rows.shape[0]}x"
+                     f"{self.hot_rows.shape[1]} "
+                     f"({self.hot_rows.dtype}, {es.fmt_bytes(b['hot'])})")
+        lines.append(f"{pad}  warm int8 {self.warm.q.shape[0]}x"
+                     f"{self.warm.q.shape[1]} (+f32 scales, "
+                     f"{es.fmt_bytes(b['warm'])})")
+        lines += self.cold._describe_lines(depth + 1)
+        return lines
+
+
+def build_tiered(arena: jax.Array, spec: se.ArenaSpec,
+                 policy: TierPolicy,
+                 counts: Optional[np.ndarray] = None, *,
+                 store: Optional[HostStore] = None,
+                 telemetry=None) -> TieredSource:
+    """Partition `arena` by `counts` under `policy` into a TieredSource."""
+    total, d = arena.shape
+    if counts is None:
+        counts = np.ones(total)
+    hot_ids, warm_ids, cold_ids = policy.partition(counts, spec.null_row)
+    h, w, c = hot_ids.size, warm_ids.size, cold_ids.size
+    a32 = jnp.asarray(arena, jnp.float32)
+
+    hot_rows = jnp.concatenate(
+        [jnp.take(a32, jnp.asarray(hot_ids), axis=0),
+         jnp.zeros((1, d), jnp.float32)], axis=0)
+
+    warm_sub = jnp.take(a32, jnp.asarray(warm_ids), axis=0)
+    q, scales = se._rowwise_quantize(warm_sub)
+    warm = es.QuantizedArena(
+        q=jnp.concatenate([q, jnp.zeros((1, d), jnp.int8)], axis=0),
+        scales=jnp.concatenate([scales, jnp.zeros((1, 1), jnp.float32)],
+                               axis=0))
+
+    tier_slot = np.full(total, h + w + c, np.int32)   # default: cold null
+    tier_slot[hot_ids] = np.arange(h)
+    tier_slot[warm_ids] = h + np.arange(w)
+    tier_slot[cold_ids] = h + w + np.arange(c)
+    tier_slot[spec.null_row] = h + w + c
+
+    if policy.cold == "int4":
+        cold_sub = jnp.concatenate(
+            [jnp.take(a32, jnp.asarray(cold_ids), axis=0),
+             jnp.zeros((1, d), jnp.float32)], axis=0)
+        packed, cscales = ops.int4_pack(cold_sub)
+        cold: es.EmbeddingSource = Int4Arena(packed=packed,
+                                             scales=cscales, dim=d)
+    else:
+        host_rows = np.asarray(a32)[cold_ids]
+        compact_of = np.full(total, c, np.int64)
+        compact_of[cold_ids] = np.arange(c)
+        if store is None:
+            store = HostStore(host_rows,
+                              staging_rows=policy.staging_rows,
+                              compact_of=compact_of,
+                              max_stage_per_batch=policy.max_stage_per_batch,
+                              telemetry=telemetry)
+        else:
+            # re-tier in place: same store identity (treedef stability),
+            # fresh rows/mapping/residency
+            store.retarget(host_rows, compact_of)
+        cold = store.tier()
+
+    return TieredSource(hot_rows=hot_rows,
+                        tier_slot=jnp.asarray(tier_slot),
+                        hot_ids=jnp.asarray(hot_ids, jnp.int32),
+                        warm=warm, cold=cold)
+
+
+def migrate(old: TieredSource, arena: jax.Array, spec: se.ArenaSpec,
+            policy: TierPolicy, counts: np.ndarray,
+            dirty: Optional[np.ndarray] = None):
+    """Promotion/demotion at the rebuild cadence: re-partition by the
+    fresh histogram and rebuild the tiers *incrementally*.
+
+    The dirty-row machinery from the int8 maintenance path carries over:
+    a warm/cold row whose partition slot AND arena values are unchanged
+    keeps its old quantized representation (a gather, not a requantize),
+    so each migration costs O(moved + dirtied) quantization work instead
+    of O(V). Hot rows are always refreshed from the live arena (fp copy,
+    O(H)). Tier sizes are fixed by the policy, so the result has the
+    treedef of ``old`` — republishing it through ``update_source`` never
+    recompiles. A host cold tier is retargeted in place (same store
+    identity; its staging arena resets, so post-migration batches re-warm
+    via the prefetcher).
+
+    Returns ``(new_source, stats)`` with stats carrying the promotion /
+    demotion / requantization counts for the ``tier_migration`` event.
+    """
+    total, d = arena.shape
+    if dirty is None:
+        dirty = np.zeros(total, bool)
+    dirty = np.asarray(dirty, bool)
+    hot_ids, warm_ids, cold_ids = policy.partition(counts, spec.null_row)
+    h, w, c = hot_ids.size, warm_ids.size, cold_ids.size
+    assert (h, w, c) == (old.n_hot, old.n_warm, old.n_cold), \
+        ((h, w, c), (old.n_hot, old.n_warm, old.n_cold),
+         "tier sizes are fixed by the policy — structure stability")
+    a32 = jnp.asarray(arena, jnp.float32)
+    ts_old = np.asarray(old.tier_slot)
+
+    tier_slot = np.full(total, h + w + c, np.int32)
+    tier_slot[hot_ids] = np.arange(h)
+    tier_slot[warm_ids] = h + np.arange(w)
+    tier_slot[cold_ids] = h + w + np.arange(c)
+    tier_slot[spec.null_row] = h + w + c
+
+    hot_rows = jnp.concatenate(
+        [jnp.take(a32, jnp.asarray(hot_ids), axis=0),
+         jnp.zeros((1, d), jnp.float32)], axis=0)
+
+    # warm: keep the old quantized rows that stayed warm and clean
+    old_wslot = ts_old[warm_ids] - h
+    stay = (old_wslot >= 0) & (old_wslot < w) & ~dirty[warm_ids]
+    gather = np.where(stay, old_wslot, w)         # null slot for movers
+    q = jnp.take(old.warm.q, jnp.asarray(gather), axis=0)
+    sc = jnp.take(old.warm.scales, jnp.asarray(gather), axis=0)
+    moved_w = np.nonzero(~stay)[0]
+    if moved_w.size:
+        qr, sr = se._rowwise_quantize(
+            jnp.take(a32, jnp.asarray(warm_ids[moved_w]), axis=0))
+        q = q.at[jnp.asarray(moved_w)].set(qr)
+        sc = sc.at[jnp.asarray(moved_w)].set(sr)
+    warm = es.QuantizedArena(
+        q=jnp.concatenate([q, jnp.zeros((1, d), jnp.int8)], axis=0),
+        scales=jnp.concatenate([sc, jnp.zeros((1, 1), jnp.float32)],
+                               axis=0))
+
+    if isinstance(old.cold, HostTier):
+        host_rows = np.asarray(a32)[cold_ids]
+        compact_of = np.full(total, c, np.int64)
+        compact_of[cold_ids] = np.arange(c)
+        store = old.cold.store
+        assert store is not None, \
+            "cannot migrate a deserialized HostTier without a rebound store"
+        store.retarget(host_rows, compact_of)
+        cold: es.EmbeddingSource = store.tier()
+        requant_c = 0
+    else:
+        old_cslot = ts_old[cold_ids] - (h + w)
+        stay_c = (old_cslot >= 0) & (old_cslot < c) & ~dirty[cold_ids]
+        gather_c = np.where(stay_c, old_cslot, c)
+        packed = jnp.take(old.cold.packed, jnp.asarray(gather_c), axis=0)
+        csc = jnp.take(old.cold.scales, jnp.asarray(gather_c), axis=0)
+        moved_c = np.nonzero(~stay_c)[0]
+        if moved_c.size:
+            pr, sr = ops.int4_pack(
+                jnp.take(a32, jnp.asarray(cold_ids[moved_c]), axis=0))
+            packed = packed.at[jnp.asarray(moved_c)].set(pr)
+            csc = csc.at[jnp.asarray(moved_c)].set(sr)
+        # pack the null row like build_tiered does (biased zero codes,
+        # zero scale) so incremental migration == full rebuild bit-exact
+        zp, zs = ops.int4_pack(jnp.zeros((1, d), jnp.float32))
+        cold = Int4Arena(
+            packed=jnp.concatenate([packed, zp], axis=0),
+            scales=jnp.concatenate([csc, zs], axis=0),
+            dim=d)
+        requant_c = int(moved_c.size)
+
+    new = TieredSource(hot_rows=hot_rows,
+                       tier_slot=jnp.asarray(tier_slot),
+                       hot_ids=jnp.asarray(hot_ids, jnp.int32),
+                       warm=warm, cold=cold)
+    old_hot = set(np.asarray(old.hot_ids).tolist())
+    stats = {
+        "promoted_hot": int(sum(1 for r in hot_ids if r not in old_hot)),
+        "demoted_hot": int(sum(1 for r in old_hot
+                               if r not in set(hot_ids.tolist()))),
+        "warm_requant": int(moved_w.size),
+        "cold_requant": requant_c,
+    }
+    return new, stats
+
+
+# ---------------------------------------------------------------------------
+# Source-tree walks (engine/trainer integration points)
+# ---------------------------------------------------------------------------
+
+def host_stores_of(source) -> list:
+    """Every HostStore reachable from a source tree (dedup by identity,
+    stable order) — what the engine stages/prefetches against."""
+    out, seen = [], set()
+
+    def walk(s):
+        if isinstance(s, TieredSource):
+            walk(s.cold)
+        elif isinstance(s, HostTier):
+            if s.store is not None and id(s.store) not in seen:
+                seen.add(id(s.store))
+                out.append(s.store)
+        elif isinstance(s, es.TableGroupSource):
+            for m in s.members:
+                walk(m)
+        elif isinstance(s, es.CachedSource):
+            walk(s.cold)
+        elif isinstance(s, es.ShardedArena):
+            walk(s.inner)
+
+    walk(source)
+    return out
+
+
+def refresh_host_tiers(source):
+    """Re-snapshot every HostTier's array leaves from its live store —
+    same treedef (store identity and shapes unchanged), fresh staging
+    data. The engine calls this after ``stage()`` so the next dispatch
+    serves the updated residency."""
+    if isinstance(source, HostTier) and source.store is not None:
+        return source.store.tier()
+    if isinstance(source, TieredSource):
+        return replace(source, cold=refresh_host_tiers(source.cold))
+    if isinstance(source, es.TableGroupSource):
+        return es.TableGroupSource(
+            members=tuple(refresh_host_tiers(m) for m in source.members),
+            specs=source.specs)
+    if isinstance(source, es.CachedSource):
+        return es.CachedSource(source.hot,
+                               refresh_host_tiers(source.cold),
+                               coherent=source.coherent)
+    if isinstance(source, es.ShardedArena):
+        return es.ShardedArena(refresh_host_tiers(source.inner),
+                               source.mesh, source.axis)
+    return source
+
+
+def tier_bytes(source) -> dict:
+    """Per-tier device byte accounting for one TieredSource (the
+    ``rec_tier_bytes{tier=}`` gauge values and the bench capacity
+    denominator). ``device_total`` includes the routing maps; ``host``
+    counts off-device bytes only."""
+    assert isinstance(source, TieredSource), type(source).__name__
+    hot = int(source.hot_rows.nbytes)
+    warm = int(source.warm.q.nbytes + source.warm.scales.nbytes)
+    maps = int(source.tier_slot.nbytes + source.hot_ids.nbytes)
+    if isinstance(source.cold, HostTier):
+        cold = source.cold.device_bytes()
+        host = source.cold.host_bytes()
+    else:
+        cold = source.cold.device_bytes()
+        host = 0
+    return {"hot": hot, "warm": warm, "cold": cold, "maps": maps,
+            "host": host,
+            "device_total": hot + warm + cold + maps}

@@ -36,6 +36,19 @@ class OnlineCacheConfig:
     quantize_cold: bool = False  # maintain an int8 cold arena alongside
     #                              the fp one, re-quantizing only the rows
     #                              touched since the last rebuild
+    tiers: Optional[object] = None   # storage.TierPolicy: maintain a
+    #                              frequency-tiered serving source instead
+    #                              of the hot-cache/cold-arena pair; the
+    #                              rebuild cadence becomes the tier-
+    #                              migration cadence (k is ignored)
+
+    def __post_init__(self):
+        if self.tiers is not None and (self.k or self.quantize_cold):
+            raise ValueError(
+                "a tiered maintenance plan replaces the hot cache and "
+                "the int8 mirror (TierPolicy.hot is the hot set; the "
+                "warm/cold tiers are the quantized story) — set k=0 and "
+                "quantize_cold=False")
 
 
 @dataclass(frozen=True)
@@ -99,6 +112,23 @@ class VersionedHotCache:
             return False
         engine.update_cache(self.cache, version=self.version)
         return True
+
+
+def _patch_tiered_hot(tiered, arena: jax.Array, null_row: int,
+                      rows: jax.Array):
+    """Write-through invalidation for a TieredSource's fp hot tier: the
+    rows just trained refresh their hot copies; warm/cold rows route to
+    the hot null slot, whose source is forced to the always-zero null
+    arena row — the same only-zeros-can-write-the-null-slot invariant
+    ``_patch_hot_rows`` keeps."""
+    import dataclasses as _dc
+    h = tiered.hot_rows.shape[0] - 1
+    ts = jnp.take(tiered.tier_slot, rows)
+    slots = jnp.where(ts < h, ts, h)
+    src = jnp.where(ts < h, rows, null_row)
+    fresh = jnp.take(arena, src, axis=0).astype(tiered.hot_rows.dtype)
+    return _dc.replace(tiered,
+                       hot_rows=tiered.hot_rows.at[slots].set(fresh))
 
 
 def _patch_hot_rows(cache: se.HotRowCache, arena: jax.Array,
@@ -168,15 +198,43 @@ class OnlineTrainer:
         if cache_cfg is not None and cache_cfg.quantize_cold:
             self.cold_q = es.QuantizedArena.from_arena(params["arena"])
             self._dirty_q = np.zeros(params["arena"].shape[0], bool)
+        # tiered maintenance: materialize the TieredSource at construction
+        # (uniform histogram) so the treedef is stable from step 0, and
+        # track dirtied rows for the incremental migration requant
+        self.tiered = None
+        self._patch_t = None
+        if cache_cfg is not None and cache_cfg.tiers is not None:
+            self.tiered = cache_cfg.tiers.build_source(
+                params["arena"], self.spec, None, telemetry=self.telemetry)
+            self._dirty_q = np.zeros(params["arena"].shape[0], bool)
+            self._patch_t = jax.jit(_patch_tiered_hot, static_argnums=(2,))
+            self._g_tier_bytes = {
+                tier: reg.gauge("rec_tier_bytes",
+                                "device bytes held by this storage tier",
+                                labels={"tier": tier})
+                for tier in ("hot", "warm", "cold", "maps", "host")}
+            self._set_tier_gauges()
+
+    def _set_tier_gauges(self):
+        from repro import storage
+        for tier, nb in storage.tier_bytes(self.tiered).items():
+            if tier in self._g_tier_bytes:
+                self._g_tier_bytes[tier].set(nb)
 
     # -- histogram ---------------------------------------------------------
 
     def observe(self, batch: Dict) -> None:
-        """Fold one batch's index stream into the decayed histogram."""
-        decay = self.cache_cfg.decay if self.cache_cfg else 1.0
+        """Fold one batch's index stream into the decayed histogram.
+
+        No-op without a ``cache_cfg``: the histogram exists to rank
+        rebuilds (hot caches, tier migrations), so an uncached trainer
+        skips the host-side row counting entirely instead of silently
+        burning a full-arena bincount per batch."""
+        if self.cache_cfg is None:
+            return
         counts = se.trace_row_counts(self.spec, np.asarray(batch["indices"]),
                                      np.asarray(batch["offsets"]))
-        self.hist = decay * self.hist + counts
+        self.hist = self.cache_cfg.decay * self.hist + counts
 
     # -- training ----------------------------------------------------------
 
@@ -197,6 +255,12 @@ class OnlineTrainer:
             # step 1 of the protocol: values must never go stale
             self.cache = self._patch(self.cache, self.params["arena"],
                                      self.spec.null_row, rows)
+        if self.tiered is not None:
+            # same step-1 obligation for the tiered hot tier: the fp hot
+            # copies refresh every step, warm/cold rows wait (dirty-masked)
+            # for the migration pass
+            self.tiered = self._patch_t(self.tiered, self.params["arena"],
+                                        self.spec.null_row, rows)
         if self.cache_cfg is not None \
                 and self.steps % self.cache_cfg.refresh_every == 0:
             self.rebuild_cache()
@@ -220,6 +284,13 @@ class OnlineTrainer:
         maintenance is on, the int8 arena is patched in the same version
         (only the rows dirtied since the last rebuild are re-quantized)."""
         assert self.cache_cfg is not None, "no cache_cfg configured"
+        if self.tiered is not None:
+            self.version += 1
+            self._c_rebuilds.inc()
+            self._g_version.set(self.version)
+            self.retier()
+            return self.snapshot()   # None: tiered serving has no hot-cache
+            #                          artifact; publish_source() is the blob
         self.cache = se.build_hot_cache(self.params["arena"], self.spec,
                                         self.hist, self.cache_cfg.k)
         if self.cold_q is not None:
@@ -249,6 +320,25 @@ class OnlineTrainer:
                             step=self.steps, rows=int(rows.size))
         return self.cold_q
 
+    def retier(self):
+        """Tier-migration maintenance (step 6 of the swap protocol): re-rank
+        from the decayed histogram and migrate rows across the fixed-size
+        hot/warm/cold tiers. Incremental like ``refresh_quantized`` — rows
+        that stayed in tier and were not dirtied keep their old quantized
+        values; only movers and dirtied rows re-quantize."""
+        from repro import storage
+        assert self.tiered is not None, \
+            "no tiered source maintained (cache_cfg.tiers)"
+        self.tiered, stats = storage.migrate(
+            self.tiered, self.params["arena"], self.spec,
+            self.cache_cfg.tiers, self.hist, self._dirty_q)
+        self._dirty_q[:] = False
+        self._set_tier_gauges()
+        self._g_requant.set(stats["warm_requant"] + stats["cold_requant"])
+        self.telemetry.emit("tier_migration", version=self.version,
+                            step=self.steps, **stats)
+        return self.tiered
+
     def snapshot(self) -> Optional[VersionedHotCache]:
         if self.cache is None:
             return None
@@ -264,6 +354,8 @@ class OnlineTrainer:
         ShardedArena wrapper unwraps). Structure-stable across versions,
         so pushing it through ``RecEngine.update_source`` never
         recompiles."""
+        if self.tiered is not None:
+            return self.tiered
         cold = (self.cold_q if self.cold_q is not None
                 else es.FpArena(self.params["arena"]))
         if se.mesh_shards(self.mesh) > 1:
@@ -281,8 +373,11 @@ class OnlineTrainer:
         ``publish()`` (hot rows only, params shared by reference), this
         blob carries every sparse-stage parameter a remote replica needs
         (hot rows + the entire cold arena). None before the first rebuild.
+        For a tiered trainer the blob carries the whole ``TieredSource``
+        (a host-cold tier ships its staged snapshot; the live ``HostStore``
+        is process-local and marked ephemeral in the blob).
         """
-        if self.cache is None:
+        if self.cache is None and self.tiered is None:
             return None
         blob = VersionedSource(source=self.serving_source(),
                                version=self.version).serialize()
@@ -320,6 +415,16 @@ class OnlineTrainer:
         arena, an int8 cold leaf swaps to the trainer-maintained
         ``cold_q`` (incremental requant) — one atomic swap, no recompile.
         """
+        if self.tiered is not None:
+            # the tiered trainer has no hot-cache artifact; the pair that
+            # must swap together is (params, TieredSource) — same step gate
+            if getattr(engine, "_trainer_step", -1) >= self.steps \
+                    and getattr(engine, "source_version", -1) >= self.version:
+                return False
+            engine.params = self.params
+            engine.update_source(self.tiered, version=self.version)
+            engine._trainer_step = self.steps
+            return True
         snap = self.snapshot()
         if snap is None:
             return False
@@ -406,6 +511,7 @@ class OnlineGroupTrainer:
         self.opt_state = opt.init(params)
         self._step = jax.jit(step, donate_argnums=(1,))
         self._patch = jax.jit(_patch_hot_rows, static_argnums=(2,))
+        self._patch_t = jax.jit(_patch_tiered_hot, static_argnums=(2,))
         self.hists = [np.zeros(sp.total_rows, np.float64)
                       for sp in self.specs]
         self.steps = 0
@@ -413,6 +519,7 @@ class OnlineGroupTrainer:
         self.losses: list = []
         self.caches = []
         self.cold_q = []
+        self.tiered = []
         self._dirty_q = []
         for plan, sp, arena in zip(self.plans, self.specs,
                                    params["tables"]):
@@ -422,8 +529,13 @@ class OnlineGroupTrainer:
                 if plan.cache_k > 0 else None)
             self.cold_q.append(es.QuantizedArena.from_arena(arena)
                                if plan.quantize else None)
-            self._dirty_q.append(np.zeros(arena.shape[0], bool)
-                                 if plan.quantize else None)
+            self.tiered.append(
+                plan.tiers.build_source(arena, sp, None,
+                                        telemetry=self.telemetry)
+                if getattr(plan, "tiers", None) is not None else None)
+            self._dirty_q.append(
+                np.zeros(arena.shape[0], bool)
+                if (plan.quantize or self.tiered[-1] is not None) else None)
 
     # -- histogram ---------------------------------------------------------
 
@@ -451,6 +563,10 @@ class OnlineGroupTrainer:
                 self.caches[t] = self._patch(
                     self.caches[t], self.params["tables"][t],
                     self.specs[t].null_row, rows)
+            if self.tiered[t] is not None:
+                self.tiered[t] = self._patch_t(
+                    self.tiered[t], self.params["tables"][t],
+                    self.specs[t].null_row, rows)
         if self.steps % self.refresh_every == 0:
             self.rebuild()
         loss = float(loss)
@@ -473,7 +589,9 @@ class OnlineGroupTrainer:
         and bump ONE version for the whole group — tables refresh
         together or not at all, so a replica can never serve a torn mix
         of table versions."""
+        from repro import storage
         requant = {}
+        migrated = {}
         for t, (plan, sp) in enumerate(zip(self.plans, self.specs)):
             if plan.cache_k > 0:
                 self.caches[t] = se.build_hot_cache(
@@ -487,6 +605,12 @@ class OnlineGroupTrainer:
                         self.params["tables"][t],
                         jnp.asarray(rows, jnp.int32))
                     self._dirty_q[t][:] = False
+            if self.tiered[t] is not None:
+                self.tiered[t], stats = storage.migrate(
+                    self.tiered[t], self.params["tables"][t], sp,
+                    plan.tiers, self.hists[t], self._dirty_q[t])
+                self._dirty_q[t][:] = False
+                migrated[str(t)] = stats
         self.version += 1
         self._c_rebuilds.inc()
         self._g_version.set(self.version)
@@ -495,6 +619,9 @@ class OnlineGroupTrainer:
             cached_tables=[t for t, c in enumerate(self.caches)
                            if c is not None],
             requant_rows=requant)
+        if migrated:
+            self.telemetry.emit("tier_migration", version=self.version,
+                                step=self.steps, tables=migrated)
         return self.version
 
     def serving_source(self) -> es.TableGroupSource:
@@ -502,6 +629,9 @@ class OnlineGroupTrainer:
         every step — see the class docstring)."""
         members = []
         for t, plan in enumerate(self.plans):
+            if self.tiered[t] is not None:
+                members.append(self.tiered[t])
+                continue
             cold = (self.cold_q[t] if self.cold_q[t] is not None
                     else es.FpArena(self.params["tables"][t]))
             members.append(es.CachedSource(hot=self.caches[t], cold=cold,

@@ -31,6 +31,9 @@ MODULES = (
     "repro.training",
     "repro.training.online",
     "repro.training.sparse_optim",
+    "repro.storage",
+    "repro.storage.tiered",
+    "repro.storage.host_store",
     "repro.obs",
     "repro.obs.metrics",
     "repro.obs.tracing",
