@@ -1079,6 +1079,84 @@ def bench_tiered_storage(max_batch: int = 512,
     return rows
 
 
+def bench_fleet_recovery(smoke: bool = False) -> List[str]:
+    """Fleet chaos recovery under the pinned fault plan (seed 6).
+
+    One ``OnlineGroupTrainer``, two replicas, two model variants (A/B)
+    over one shared ``TableGroupSource``; six broadcast rounds through
+    per-replica seeded chaos channels (30% drop, 30% duplicate, 60%
+    delay up to 3 sends — the delay is what manufactures reordering),
+    then clean recovery. Reported:
+
+    * ``recovery_bumps`` / ``recovery_s`` — version bumps (and wall
+      time) until every replica serves BIT-EXACT against the
+      trainer-synced reference for a fixed probe batch;
+    * ``hit_dip`` — deepest per-version hit-rate shortfall of any
+      chaos-fed replica below the clean reference at the same version
+      (attribution from each engine's event log): the serving cost of
+      missed broadcasts while the request distribution drifts;
+    * stale accounting (``stale_injected`` == ``stale_rejected``) and
+      recompiles on the recovery path (must be 0).
+
+    Hard asserts under ``--smoke``; the pinned seed guarantees the
+    schedule actually drops and reorders on every replica.
+    """
+    import time as _time
+
+    from repro.fleet import FaultPlan, FleetRunner
+
+    plan = FaultPlan(seed=6, drop=0.3, dup=0.3, delay=0.6, max_delay=3)
+    fr = FleetRunner(n_replicas=2, plan=plan, seed=0)
+    t0 = _time.perf_counter()
+    for _ in range(6):
+        fr.round()
+    chaos_s = _time.perf_counter() - t0
+
+    inj = [r.stale_injected for r in fr.replicas]
+    rej = [r.stale_rejections() for r in fr.replicas]
+    drops = [r.channel.dropped for r in fr.replicas]
+    dups = [r.channel.duplicated for r in fr.replicas]
+
+    # hit-rate dip: replica rate minus clean-reference rate, per
+    # attributed version, per model — the max shortfall is the dip depth
+    dip = 0.0
+    for model in ("a", "b"):
+        ref_hrv = fr.ref[model].telemetry.events.hit_rate_by_version()
+        for rep in fr.replicas:
+            hrv = rep.hit_rate_by_version(model)
+            for v, rate in hrv.items():
+                want = ref_hrv.get(v)
+                if rate is not None and want is not None:
+                    dip = max(dip, want - rate)
+
+    t0 = _time.perf_counter()
+    rec = fr.recover(k=3)
+    recovery_s = _time.perf_counter() - t0
+    exact = all(all(flags) for flags in rec["exact"].values())
+    recompiles = max((n or 0) for per in rec["recompiles"]
+                     for n in per.values())
+
+    if smoke:
+        assert inj == rej, (
+            f"stale accounting broke: injected {inj} != rejected {rej}")
+        assert sum(inj) > 0 and sum(drops) > 0, (
+            "the pinned plan produced no faults — chaos not exercised",
+            inj, drops)
+        assert exact and rec["bumps"] <= 3, (
+            f"no bit-exact recovery within 3 bumps: {rec}")
+        assert recompiles == 0, (
+            f"recovery path recompiled the serve step: {rec['recompiles']}")
+
+    return [csv_row(
+        "fleet_recovery", None,
+        f"recovery_bumps={rec['bumps']};recovery_s={recovery_s:.2f};"
+        f"exact={'yes' if exact else 'NO'};recompiles={recompiles};"
+        f"hit_dip={dip:.3f};stale_injected={sum(inj)};"
+        f"stale_rejected={sum(rej)};dropped={sum(drops)};"
+        f"duplicated={sum(dups)};chaos_rounds=6;chaos_s={chaos_s:.2f};"
+        f"plan_seed={plan.seed}")]
+
+
 def write_json(rows: List[str], path: str = "BENCH_paper.json") -> str:
     """Persist the run as scenario -> {p50_us, p95_us?, derived{...}} —
     the machine-readable trajectory artifact (the printed CSV is for
@@ -1112,6 +1190,7 @@ def run_all() -> List[str]:
     rows += bench_obs()
     rows += bench_serve_open_loop()
     rows += bench_tiered_storage()
+    rows += bench_fleet_recovery()
     return rows
 
 
@@ -1126,13 +1205,17 @@ if __name__ == "__main__":
         # asserted (p99 finite, >=2x tightening, zero requests dropped
         # without a shed event), and the tiered-storage scenario with
         # its capacity / hit-rate / accounting invariants asserted
-        # (prefetch hits + misses == cold row touches) — proves the
-        # harness runs end-to-end without paying for the full sweep; no
-        # JSON is written (smoke timings are not trajectory data).
+        # (prefetch hits + misses == cold row touches), and the fleet
+        # chaos-recovery scenario with its stale-accounting /
+        # bit-exactness / zero-recompile invariants asserted — proves
+        # the harness runs end-to-end without paying for the full
+        # sweep; no JSON is written (smoke timings are not trajectory
+        # data).
         all_rows = (bench_table1() + bench_source_dispatch()
                     + bench_obs(assert_overhead=1.05)
                     + bench_serve_open_loop(smoke=True)
-                    + bench_tiered_storage(smoke=True))
+                    + bench_tiered_storage(smoke=True)
+                    + bench_fleet_recovery(smoke=True))
         print("name,us_per_call,derived")
         for r in all_rows:
             print(r)

@@ -28,6 +28,16 @@ version, and per-table hit rates in stats().
 
     PYTHONPATH=src python examples/serve_recommender.py --het
 
+With ``--fleet`` the driver runs the chaos-hardened fleet scenario: one
+group trainer broadcasting full source+head ``VersionedSource`` blobs to
+N replicas serving TWO model variants (A/B) over one shared table group;
+``--chaos`` injects seeded drop/duplicate/delay/reorder faults on every
+replica's channel, and recovery is asserted bit-exact against a
+trainer-synced reference within 3 clean version bumps (zero recompiles).
+
+    PYTHONPATH=src python examples/serve_recommender.py \
+        --fleet --chaos --replicas 2 --online-steps 24
+
 With ``--open-loop`` the driver switches from the closed-loop wave above
 to OPEN-LOOP arrivals (requests come on their own Poisson/diurnal clock
 and do not wait for the server) served by the SLA-aware continuous
@@ -331,6 +341,63 @@ def serve_broadcast_fleet(args) -> None:
     assert err < 1e-4
 
 
+def serve_fleet(args) -> None:
+    """--fleet: the chaos-hardened fleet scenario. One group trainer, N
+    replicas, TWO model variants (A = the trained dense head, B = a
+    frozen candidate) A/B-served over one shared TableGroupSource; every
+    broadcast carries source + head in one ``VersionedSource`` blob.
+    With ``--chaos`` each replica's channel drops / duplicates / delays
+    artifacts under a seeded, replayable schedule; recovery is asserted
+    on BIT-exactness against a trainer-synced reference, not liveness."""
+    from repro.fleet import CLEAN, FaultPlan, FleetRunner
+
+    plan = (FaultPlan(seed=args.chaos_seed, drop=0.3, dup=0.3, delay=0.6,
+                      max_delay=3) if args.chaos else CLEAN)
+    n = max(2, args.replicas)
+    rounds = max(2, args.online_steps // 4)     # refresh_every=4 inside
+    fr = FleetRunner(n_replicas=n, plan=plan, seed=0)
+    mode = (f"chaos (seed {plan.seed}: drop {plan.drop:.0%}, "
+            f"dup {plan.dup:.0%}, delay {plan.delay:.0%} up to "
+            f"{plan.max_delay} sends)" if args.chaos else "clean transport")
+    print(f"fleet: 1 trainer -> {n} replicas x 2 variants (A/B) over one "
+          f"shared table group; {mode}")
+    for rnd in range(rounds):
+        stats = fr.round()
+        per_rep = " ".join(
+            f"r{i}[+{s['applied']} ={s['republish']} !{s['stale']}]"
+            for i, s in enumerate(stats["replicas"]))
+        print(f"round {rnd}: v{stats['version']} {per_rep} "
+              f"(in flight: "
+              f"{[rep.channel.in_flight for rep in fr.replicas]})")
+
+    inj = [rep.stale_injected for rep in fr.replicas]
+    rej = [rep.stale_rejections() for rep in fr.replicas]
+    print(f"stale accounting: injected {inj} == rejected {rej}")
+    assert inj == rej, "channel/engine stale accounting disagrees"
+    print(f"channel faults: dropped "
+          f"{[rep.channel.dropped for rep in fr.replicas]}, duplicated "
+          f"{[rep.channel.duplicated for rep in fr.replicas]}, delayed "
+          f"{[rep.channel.delayed for rep in fr.replicas]}")
+    print(f"pre-recovery exactness: {fr.exactness()}")
+
+    rec = fr.recover(k=3)
+    exact = all(all(flags) for flags in rec["exact"].values())
+    print(f"recovery: {rec['bumps']} clean bump(s) -> exact={exact}, "
+          f"recompiles={rec['recompiles']}")
+    assert exact, "fleet did not recover to bit-exact serving"
+    for per_model in rec["recompiles"]:
+        assert all(x in (0, None) for x in per_model.values()), \
+            "recovery path recompiled the serve step"
+
+    print("hit rate by served version (replica 0, per model variant):")
+    for model in ("a", "b"):
+        attrib = fr.replicas[0].hit_rate_by_version(model)
+        line = ", ".join(
+            f"v{v}: " + ("-" if hr is None else f"{100.0 * hr:.0f}%")
+            for v, hr in sorted(attrib.items()))
+        print(f"  model {model}: {line}")
+
+
 def serve_heterogeneous(args) -> None:
     """Heterogeneous table group: per-table composition (hot-cache the
     skewed tables, int8 the big ones), online per-table refresh under ONE
@@ -446,8 +513,21 @@ def main() -> None:
                         help="serve through per-stage device-timed jitted "
                              "stages and print the live Fig-5 "
                              "embedding-vs-MLP split")
+    parser.add_argument("--fleet", action="store_true",
+                        help="fleet scenario: 1 trainer -> N replicas x "
+                             "2 A/B model variants over one shared table "
+                             "group, full source+head broadcasts, "
+                             "exactness-asserted recovery")
+    parser.add_argument("--chaos", action="store_true",
+                        help="with --fleet: drop/duplicate/delay/reorder "
+                             "broadcasts on a seeded, replayable schedule")
+    parser.add_argument("--chaos-seed", type=int, default=6,
+                        help="fault-schedule seed for --chaos (6 = the "
+                             "bench plan, guaranteed to drop AND reorder)")
     args = parser.parse_args()
-    if args.het:
+    if args.fleet:
+        serve_fleet(args)
+    elif args.het:
         serve_heterogeneous(args)
     elif args.replicas > 1:
         serve_broadcast_fleet(args)

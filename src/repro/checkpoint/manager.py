@@ -120,6 +120,17 @@ class CheckpointManager:
         steps = sorted(self.steps())
         for s in steps[:-self.keep_n] if self.keep_n else []:
             shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+        self._gc_orphans()
+
+    def _gc_orphans(self):
+        """Remove debris from writers that died mid-save. A crash between
+        ``tmp.<step>`` creation and the atomic rename leaves the tmp dir
+        behind forever (the next save of the SAME step would clear it, but
+        steps normally only move forward) — sweep them all here so every
+        completed save also cleans up any earlier torn write."""
+        for p in self.dir.glob("tmp.*"):
+            if p.is_dir():
+                shutil.rmtree(p, ignore_errors=True)
 
     # ------------------------------------------------------- source artifacts
     def save_source(self, step: int, versioned,
@@ -178,6 +189,7 @@ class CheckpointManager:
         steps = self.source_steps()
         for s in steps[:-self.keep_n] if self.keep_n else []:
             shutil.rmtree(self.dir / f"src_{s}", ignore_errors=True)
+        self._gc_orphans()
 
     # --------------------------------------------------------------- restore
     def steps(self) -> List[int]:

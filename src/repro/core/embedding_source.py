@@ -58,7 +58,7 @@ import dataclasses
 import io
 import json
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple, Union
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -1101,9 +1101,23 @@ def _encode(obj, arrays: dict, counter: list):
         return {"kind": "array", "key": key}
     if isinstance(obj, (tuple, list)):
         # the per-table member tuple of a TableGroupSource (and any
-        # future source holding a sequence of sub-sources)
-        return {"kind": "seq",
+        # future source holding a sequence of sub-sources); lists keep
+        # their list-ness so a decoded dense head has the same treedef
+        # as the params it replaces (list vs tuple is a treedef change,
+        # i.e. a recompile on the serving hot path)
+        node = {"kind": "seq",
                 "items": [_encode(x, arrays, counter) for x in obj]}
+        if isinstance(obj, list):
+            node["list"] = True
+        return node
+    if isinstance(obj, dict):
+        # the dense-head payload of a VersionedSource ({"bottom": ...,
+        # "top": ..., "proj": ...}) — string-keyed pytrees of arrays
+        return {"kind": "dict",
+                "items": {k: _encode(v, arrays, counter)
+                          for k, v in obj.items()}}
+    if obj is None:
+        return {"kind": "none"}
     name = type(obj).__name__
     if name not in _SOURCE_REGISTRY:
         raise TypeError(f"cannot serialize {name}: not a registered "
@@ -1133,7 +1147,12 @@ def _decode(node, z, mesh):
     if node["kind"] == "array":
         return jnp.asarray(z[node["key"]])
     if node["kind"] == "seq":
-        return tuple(_decode(x, z, mesh) for x in node["items"])
+        items = [_decode(x, z, mesh) for x in node["items"]]
+        return items if node.get("list") else tuple(items)
+    if node["kind"] == "dict":
+        return {k: _decode(v, z, mesh) for k, v in node["items"].items()}
+    if node["kind"] == "none":
+        return None
     assert node["kind"] == "node", node
     if node["type"] not in _SOURCE_REGISTRY:
         # storage sources register on import; an artifact written by a
@@ -1166,22 +1185,35 @@ class VersionedSource:
     broadcast). ``serialize``/``deserialize`` round-trip through one
     self-describing byte blob; ``apply`` adopts it into an engine
     atomically iff strictly newer (idempotent, order-free delivery).
+
+    ``head`` optionally carries the dense MLP parameters ({"bottom",
+    "top", and "proj" when heterogeneous}) alongside the sparse source,
+    so a cold remote replica adopts *everything* it serves from one blob
+    — no in-process parameter sharing with the trainer at all. The head
+    rides the same array codec (dicts/lists keep their exact container
+    types, so adopting it is treedef-stable: zero recompiles).
     """
     source: EmbeddingSource
     version: int
+    head: Optional[Dict] = None
 
     MAGIC = b"CSA1"              # Centaur source artifact, format v1
 
     def serialize(self) -> bytes:
         arrays, counter = {}, [0]
         tree = _encode(self.source, arrays, counter)
+        extra = {}
+        if self.head is not None:
+            head_tree = _encode(dict(self.head), arrays, counter)
+            extra["head_structure"] = np.frombuffer(
+                json.dumps(head_tree).encode(), np.uint8)
         buf = io.BytesIO()
         np.savez(buf,
                  magic=np.frombuffer(self.MAGIC, np.uint8),
                  version=np.asarray(self.version, np.int64),
                  structure=np.frombuffer(
                      json.dumps(tree).encode(), np.uint8),
-                 **arrays)
+                 **extra, **arrays)
         return buf.getvalue()
 
     @staticmethod
@@ -1196,16 +1228,28 @@ class VersionedSource:
                     raise ValueError("bad magic")
                 tree = json.loads(z["structure"].tobytes().decode())
                 source = _decode(tree, z, mesh)
+                head = None
+                if "head_structure" in z:
+                    head_tree = json.loads(
+                        z["head_structure"].tobytes().decode())
+                    head = _decode(head_tree, z, mesh)
                 return VersionedSource(source=source,
-                                       version=int(z["version"]))
+                                       version=int(z["version"]),
+                                       head=head)
         except Exception as e:
             raise ValueError(
                 f"not a versioned-source artifact: {e}") from e
 
     def apply(self, engine) -> bool:
         """Adopt into a RecEngine iff strictly newer; same-or-older
-        artifacts are absorbed (reordered transport is safe)."""
+        artifacts are absorbed (reordered transport is safe). A carried
+        dense head lands *before* the source swap (params first, then
+        source — the setter rebinds the old source's arena leaves to the
+        unchanged sparse params, so nothing tears), making the pair
+        (dense head, sparse source) one atomic version adoption."""
         if engine.source_version >= self.version:
             return False
+        if self.head is not None:
+            engine.params = {**engine.params, **self.head}
         engine.update_source(self.source, version=self.version)
         return True

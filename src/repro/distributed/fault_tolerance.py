@@ -42,7 +42,11 @@ class StragglerMonitor:
                 self.events.append({"step": step, "duration": duration_s,
                                     "median": med})
                 self.on_straggler(step, duration_s)
-        self.durations.append(duration_s)
+        if not flagged:
+            # flagged outliers stay out of the window: a straggler that
+            # polluted the median would raise the bar enough to mask an
+            # immediately following straggler of the same magnitude
+            self.durations.append(duration_s)
         return flagged
 
 
@@ -55,12 +59,14 @@ class ResilientTrainer:
 
     def __init__(self, step_fn, ckpt: CheckpointManager,
                  ckpt_every: int = 50, max_restarts: int = 3,
-                 straggler: Optional[StragglerMonitor] = None):
+                 straggler: Optional[StragglerMonitor] = None,
+                 on_resume: Optional[Callable[[int], None]] = None):
         self.step_fn = step_fn
         self.ckpt = ckpt
         self.ckpt_every = ckpt_every
         self.max_restarts = max_restarts
         self.straggler = straggler or StragglerMonitor()
+        self.on_resume = on_resume
         self.restarts = 0
 
     def run(self, state, batch_fn, total_steps: int,
@@ -97,8 +103,12 @@ class ResilientTrainer:
                 latest = self.ckpt.latest_step()
                 if latest is None:
                     step = 0
+                    if self.on_resume is not None:
+                        self.on_resume(step)
                     continue
                 state, _ = self.ckpt.restore(state, step=latest)
                 step = latest + 1
+                if self.on_resume is not None:
+                    self.on_resume(step)
         self.ckpt.wait()
         return state, metrics

@@ -1,0 +1,23 @@
+"""Deterministic fleet scenarios for the versioned broadcast protocol.
+
+``repro.fleet`` wires the previously dormant fault-tolerance substrates
+(``repro.distributed.fault_tolerance``, ``repro.checkpoint``) into the
+live serving + online-training loop:
+
+* ``FaultPlan`` / ``ChaosChannel`` — seeded drop/duplicate/delay/reorder
+  of ``VersionedSource`` broadcast blobs between
+  ``OnlineGroupTrainer.publish_source`` and replica
+  ``RecEngine.update_source``. No wall-clock randomness: every scenario
+  replays bit-for-bit from its recorded seed.
+* ``Replica`` / ``FleetRunner`` — one trainer, N replicas, two DLRM
+  variants A/B-routed over one shared ``TableGroupSource``, per-model
+  per-version hit-rate attribution through each engine's event log, and
+  crash/recovery scenarios (replica restart from ``restore_source``,
+  trainer resume via ``ResilientTrainer``) asserted on hit-rate AND
+  bit-exactness recovery within K version bumps with zero recompiles.
+"""
+from repro.fleet.chaos import CLEAN, ChaosChannel, FaultPlan
+from repro.fleet.runner import FleetRunner, Replica
+
+__all__ = ["CLEAN", "ChaosChannel", "FaultPlan", "FleetRunner",
+           "Replica"]

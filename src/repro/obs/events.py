@@ -20,6 +20,17 @@ Event kinds emitted by the engine/trainers:
     ``downgrade``          scheduler served a batch on the int8 path
     ``drain``              engine/scheduler flushed the queue (totals)
 
+Fleet-layer kinds (emitted by ``repro.fleet`` — the chaos channel and
+the crash/recovery runner):
+
+    ``broadcast_dropped``    chaos channel dropped a broadcast artifact
+    ``broadcast_reordered``  chaos channel delivered an artifact out of
+                             order (delayed past a newer version)
+    ``replica_restore``      replica re-bootstrapped from a checkpointed
+                             source artifact (``restore_source``)
+    ``trainer_resume``       trainer resumed from its latest checkpoint
+                             after a (simulated) crash
+
 Every event carries ``version`` where applicable; ``source_swap`` /
 ``cache_swap`` events additionally carry the *outgoing* version's hit
 statistics (``hits``/``lookups``, per-table for groups), which is what

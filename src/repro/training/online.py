@@ -28,6 +28,16 @@ from repro.core import sparse_engine as se
 from repro.core.embedding_source import VersionedSource
 
 
+def _dense_head(params: Dict) -> Optional[Dict]:
+    """The dense-stage parameters a broadcast artifact ships alongside
+    the sparse source: the bottom/top MLPs plus the per-table projections
+    of a heterogeneous model. Container types are preserved verbatim by
+    the artifact codec, so adopting the decoded head keeps the params
+    treedef (no recompile)."""
+    head = {k: params[k] for k in ("bottom", "top", "proj") if k in params}
+    return head or None
+
+
 @dataclass(frozen=True)
 class OnlineCacheConfig:
     k: int                       # hot rows pinned per rebuild
@@ -367,7 +377,7 @@ class OnlineTrainer:
         # so replicas serve with the fast lowering
         return es.CachedSource(hot=self.cache, cold=cold, coherent=True)
 
-    def publish_source(self) -> Optional[bytes]:
+    def publish_source(self, include_head: bool = False) -> Optional[bytes]:
         """Serialize the full serving source as a ``VersionedSource``
         broadcast artifact — the arena-broadcast-for-params item: unlike
         ``publish()`` (hot rows only, params shared by reference), this
@@ -376,11 +386,18 @@ class OnlineTrainer:
         For a tiered trainer the blob carries the whole ``TieredSource``
         (a host-cold tier ships its staged snapshot; the live ``HostStore``
         is process-local and marked ephemeral in the blob).
+
+        ``include_head=True`` additionally ships the dense MLP head
+        (bottom/top, plus per-table projections when present), closing
+        the last in-process sharing: a remote replica adopts serving
+        params AND source from the one blob (``VersionedSource.apply``).
         """
         if self.cache is None and self.tiered is None:
             return None
         blob = VersionedSource(source=self.serving_source(),
-                               version=self.version).serialize()
+                               version=self.version,
+                               head=(_dense_head(self.params)
+                                     if include_head else None)).serialize()
         self.telemetry.emit("publish", version=self.version,
                             artifact="source", bytes=len(blob))
         return blob
@@ -640,12 +657,16 @@ class OnlineGroupTrainer:
         return es.TableGroupSource(members=tuple(members),
                                    specs=self.specs)
 
-    def publish_source(self) -> bytes:
+    def publish_source(self, include_head: bool = False) -> bytes:
         """One ``VersionedSource`` blob carrying every table's sparse
         params (hot rows + cold arenas) under the group's single
-        version."""
+        version; ``include_head=True`` adds the dense MLP head so remote
+        replicas need no in-process parameter sharing."""
         blob = es.VersionedSource(source=self.serving_source(),
-                                  version=self.version).serialize()
+                                  version=self.version,
+                                  head=(_dense_head(self.params)
+                                        if include_head else None)
+                                  ).serialize()
         self.telemetry.emit("publish", version=self.version,
                             artifact="group_source", bytes=len(blob))
         return blob

@@ -38,6 +38,9 @@ MODULES = (
     "repro.obs.metrics",
     "repro.obs.tracing",
     "repro.obs.events",
+    "repro.fleet",
+    "repro.fleet.chaos",
+    "repro.fleet.runner",
 )
 
 
